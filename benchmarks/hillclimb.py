@@ -1,0 +1,73 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: run a chosen (arch, shape) cell under a sequence of
+variants and record the roofline-term deltas.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --arch deepseek-v3-mla --shape decode_32k \
+        --variants baseline serve_ws --out results/perf/<name>.json
+
+Variants:
+  baseline   FSDP x TP shardings everywhere (training layout reused)
+  serve_ws   weight-stationary DP x TP for serving kinds (the paper's Fig-1
+             serving layout: weights replicated over DP, sharded over TP)
+  noremat    train only: no activation recomputation (flops down, memory up)
+  bf16cache  kv_fmt=none (the FlashMLA-equivalent BF16 baseline pipeline)
+  int8cache  kv_fmt=int8 (beyond-paper TPU-native content format)
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+
+def run_variant(arch, shape, mesh, variant):
+    from repro.launch.dryrun import run_cell
+    kwargs = {}
+    vname = variant
+    if variant == "noremat":
+        kwargs["remat"] = False
+        vname = "baseline"
+    elif variant == "bf16cache":
+        kwargs["extra"] = {"kv_fmt": "none"}
+        vname = "baseline"
+    elif variant == "int8cache":
+        kwargs["extra"] = {"kv_fmt": "int8"}
+        vname = "baseline"
+    return run_cell(arch, shape, mesh, variant=vname, **kwargs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--variants", nargs="+", default=["baseline", "serve_ws"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from benchmarks.roofline import analyze
+    results = []
+    for v in args.variants:
+        rec = run_variant(args.arch, args.shape, args.mesh, v)
+        rec["variant_label"] = v
+        row = analyze(rec) if rec.get("status") == "ok" else None
+        results.append({"variant": v, "raw": rec, "roofline": row})
+        if row:
+            print(f"{v:12s} compute={row['compute_s']}us memory={row['memory_s']}us "
+                  f"collective={row['collective_s']}us dominant={row['dominant']} "
+                  f"frac={row['roofline_frac']}", flush=True)
+        else:
+            print(f"{v:12s} status={rec.get('status')}", flush=True)
+
+    if args.out:
+        pathlib.Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        pathlib.Path(args.out).write_text(json.dumps(results, indent=1,
+                                                     default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Kernel-level performance (paper Figures 6 & 7 analogues).
+
+Paper App. H derives an effective FP8 peak on Hopper:
+    Peak_eff = 148 x 17/9 ~ 279.6 TFLOPS
+(16 content tiles at FP8 half-cost + 1 RoPE tile at BF16).
+
+v5e translation (DESIGN.md §2): the content GEMMs can use the int8 MXU path
+(2x bf16 peak) while the RoPE tile stays bf16:
+    d_c = 512 -> 8 "tiles" of 64 + 1 rope tile of 64+... using the paper's
+    17-tile accounting (d_c+d_r = 576 = 9 x 64; QK+PV -> 16 content + 1 rope):
+    Peak_eff(v5e) = 197 x 17 / (16/2 + 1) = 197 x 17/9 ~ 372 TFLOPS.
+
+For each (context x heads x mtp) we report the *achievable* TFLOPS =
+min(Peak_eff, intensity x HBM_bw) — the roofline position of the kernel —
+for BF16-storage FlashMLA-equivalent vs SnapMLA FP8 storage, plus measured
+CPU interpret-mode wall time of the real Pallas kernel at reduced size
+(correctness-bearing, not TPU-time-bearing).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+V5E_BF16 = 197e12
+V5E_INT8 = 394e12
+V5E_HBM = 819e9
+PEAK_EFF_SNAP = V5E_BF16 * 17 / 9          # int8 content + bf16 rope
+PEAK_EFF_BF16 = V5E_BF16
+
+D_C, D_R = 512, 64
+
+
+def kernel_roofline(context: int, heads: int, mtp: int, fmt: str) -> dict:
+    """Per-token-step decode attention kernel roofline on v5e."""
+    # bytes per cached token
+    if fmt == "none":
+        b_tok = (D_C + D_R) * 2
+        peak = PEAK_EFF_BF16
+    else:
+        b_tok = D_C * 1 + D_R * 2 + 4
+        peak = PEAK_EFF_SNAP
+    flops_tok = (2 * (D_C + D_R) + 2 * D_C) * heads * mtp     # QK + PV per head
+    intensity = flops_tok / b_tok                              # FLOP / byte
+    achievable = min(peak, intensity * V5E_HBM)
+    t = context * max(b_tok / V5E_HBM, flops_tok / peak)
+    return {"intensity": intensity, "achievable_tflops": achievable / 1e12,
+            "peak_tflops": peak / 1e12, "t_us": t * 1e6,
+            "bound": "mem" if b_tok / V5E_HBM > flops_tok / peak else "comp"}
+
+
+def figure6(fmt_pairs=(("bf16", "none"), ("snapmla", "fp8_e4m3"))):
+    rows = []
+    for ctx in [16384, 32768, 65536, 131072]:
+        row = {"context": ctx}
+        for label, fmt in fmt_pairs:
+            r = kernel_roofline(ctx, heads=128, mtp=1, fmt=fmt)
+            row[label] = r
+        row["speedup"] = row["bf16"]["t_us"] / row["snapmla"]["t_us"]
+        rows.append(row)
+    return rows
+
+
+def figure7():
+    rows = []
+    for mtp in (1, 2):
+        for heads in (16, 32, 64, 128):
+            r = kernel_roofline(32768, heads, mtp, "fp8_e4m3")
+            b = kernel_roofline(32768, heads, mtp, "none")
+            rows.append({"heads": heads, "mtp": mtp,
+                         "fp8_tflops": r["achievable_tflops"],
+                         "bf16_tflops": b["achievable_tflops"],
+                         "pct_of_eff_peak": 100 * r["achievable_tflops"] / r["peak_tflops"],
+                         "speedup": b["t_us"] / r["t_us"]})
+    return rows
+
+
+def measured_kernel_cpu(B=2, H=16, d_c=128, d_r=32, N=1024, iters=3):
+    """Wall time of the actual Pallas kernel in interpret mode (CPU)."""
+    from repro.core.kvcache import CacheConfig, init_mla_cache, mla_prefill
+    from repro.kernels.mla_decode.ops import snapmla_decode
+    from repro.kernels.mla_decode import ref as kref
+
+    key = jax.random.PRNGKey(0)
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=128)
+    cache = init_mla_cache(cfg, B, N, d_c, d_r)
+    ks = jax.random.split(key, 4)
+    cache = mla_prefill(cache, cfg, jax.random.normal(ks[0], (B, N, d_c)),
+                        jax.random.normal(ks[1], (B, N, d_r)))
+    q_c8, q_r, sq = kref.prepare_q(jax.random.normal(ks[2], (B, H, d_c)),
+                                   jax.random.normal(ks[3], (B, H, d_r)))
+    scale = 1.0 / np.sqrt(d_c + d_r)
+    o, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale)  # compile
+    jax.block_until_ready(o)
+    t0 = time.time()
+    for _ in range(iters):
+        o, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale)
+    jax.block_until_ready(o)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main(csv=True):
+    out = []
+    for row in figure6():
+        name = f"fig6_ctx{row['context']//1024}k"
+        out.append((name, row["snapmla"]["t_us"],
+                    f"speedup={row['speedup']:.2f}x "
+                    f"fp8={row['snapmla']['achievable_tflops']:.0f}TF/"
+                    f"{row['snapmla']['peak_tflops']:.0f}TF-eff-peak "
+                    f"({row['snapmla']['bound']}-bound)"))
+    for row in figure7():
+        name = f"fig7_h{row['heads']}_mtp{row['mtp']}"
+        out.append((name, 0.0,
+                    f"fp8={row['fp8_tflops']:.0f}TF ({row['pct_of_eff_peak']:.0f}% eff-peak) "
+                    f"speedup={row['speedup']:.2f}x"))
+    us = measured_kernel_cpu()
+    out.append(("kernel_cpu_interpret_us", us, "pallas interpret mode on CPU"))
+    if csv:
+        for name, t, derived in out:
+            print(f"{name},{t:.1f},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

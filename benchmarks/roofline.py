@@ -1,0 +1,181 @@
+"""Roofline analysis (§Roofline): three terms per (arch x shape) cell from the
+dry-run sweep artifacts.
+
+    compute_s    = HLO_FLOPs / (chips x 197 TF/s bf16)
+    memory_s     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective_s = collective_bytes / (chips x 50 GB/s/link x links)
+
+HLO_FLOPs / HLO_bytes come from the *cost-exact* (unrolled) lowering;
+collective bytes from the partitioned HLO of the same pass. cost_analysis
+reports per-device program totals for the SPMD module, i.e. already per-chip;
+collective bytes are summed over the module (per chip as well).
+
+MODEL_FLOPS: 6·N(_active)·D for train, 2·N_active per generated token (+
+attention cache term) for decode — the "useful"-compute yardstick.
+
+Usage:  python -m benchmarks.roofline --sweep results/dryrun/sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+V5E_BF16 = 197e12
+V5E_HBM = 819e9
+V5E_ICI_LINK = 50e9      # GB/s per link
+ICI_LINKS = 3            # usable links/chip on a 2-D torus axis pair (v5e: 4
+                         # neighbors; 3 effective after bisection discount)
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    """Global useful FLOPs for the cell's step."""
+    n_act = rec["active_param_count"]
+    shape = rec["shape"]
+    if rec["kind"] == "train":
+        return 6.0 * n_act * SHAPE_TOKENS[shape]
+    if rec["kind"] == "prefill":
+        return 2.0 * n_act * SHAPE_TOKENS[shape]
+    return 2.0 * n_act * SHAPE_TOKENS[shape]      # decode: per new token
+
+
+def analytic_memory_bytes(rec: dict) -> float:
+    """Minimum-HBM-traffic model per chip per step (the fused lower bound —
+    what a TPU compilation approaches; the unfused HLO bytes are an upper
+    bound). Terms documented in EXPERIMENTS.md §Roofline.
+    """
+    from repro.configs import get_config
+    cfg = get_config(rec["arch"])
+    if rec.get("kv_fmt") and rec["kv_fmt"] != cfg.kv_fmt:
+        cfg = cfg.scaled(kv_fmt=rec["kv_fmt"])
+    chips = rec["n_chips"]
+    n = rec["param_count"]
+    n_act = rec["active_param_count"]
+    shape = rec["shape"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 32768,
+           "long_500k": 524288}[shape]
+    gb = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+          "long_500k": 1}[shape]
+    tokens = gb * (seq if rec["kind"] != "decode" else 1)
+
+    if rec["kind"] == "train":
+        # weights: fwd read + bwd read + remat read (bf16) + grad write/read
+        # (bf16) + adam m,v read/write (f32) + param write
+        w_traffic = n * 2 * 3 + n * 2 * 2 + n * 4 * 4 + n * 2
+        # activations: save + reload at superblock boundaries (remat) in bf16,
+        # x2 for the recompute writes
+        act = tokens * cfg.d_model * cfg.n_layers * 2 * 2
+        return (w_traffic + act) / chips
+    # serving: active weights read once per step; KV cache traffic
+    if cfg.mla is not None:
+        entry = cfg.mla.d_c + cfg.mla.d_rope * 2 + 4
+        cache_layers = cfg.n_layers
+    else:
+        entry = 2 * cfg.n_kv_heads * cfg.d_head + 2 * cfg.n_kv_heads * 4
+        cache_layers = sum(1 for i in range(cfg.n_layers)
+                           if cfg._kind(i) in ("attn", "swa", "dec"))
+    if cfg.kv_fmt == "none":
+        entry = entry * 2 if cfg.mla is None else (cfg.mla.d_c + cfg.mla.d_rope) * 2
+    eff_seq = seq
+    if cfg.window:
+        # windowed layers cap their cache
+        n_full = sum(1 for i in range(cfg.n_layers) if cfg._kind(i) == "attn")
+        n_win = max(cache_layers - n_full, 0)
+        cache_bytes = gb * entry * (n_full * seq + n_win * min(seq, cfg.window))
+    else:
+        cache_bytes = gb * entry * cache_layers * eff_seq
+    if rec["kind"] == "prefill":
+        acts = tokens * cfg.d_model * cfg.n_layers * 2
+        return (n_act * 2 + cache_bytes + acts) / chips
+    return (n_act * 2 + cache_bytes) / chips
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "flops" not in rec:
+        return None
+    if not rec.get("cost_pass", {}).get("exact", False):
+        return None     # wave-1-only record: FLOPs undercount scan bodies
+    chips = rec["n_chips"]
+    flops_chip = rec["flops"]                       # global/chips (cost-exact)
+    bytes_chip_analytic = analytic_memory_bytes(rec)
+    bytes_chip_unfused = rec.get("bytes_global_unfused", 0.0) / chips
+    coll_chip = rec["collectives"]["total_bytes"]   # per-chip partitioned HLO
+
+    compute_s = flops_chip / V5E_BF16
+    memory_s = bytes_chip_analytic / V5E_HBM
+    collective_s = coll_chip / (V5E_ICI_LINK * ICI_LINKS)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    useful_ratio = mf / (flops_chip * chips) if flops_chip else 0.0
+    t_useful = mf / chips / V5E_BF16
+    frac = t_useful / terms[dominant] if terms[dominant] > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "chips": chips,
+        **{k: round(v * 1e6, 2) for k, v in terms.items()},   # in us
+        "memory_unfused_s": round(bytes_chip_unfused / V5E_HBM * 1e6, 2),
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_chip": flops_chip,
+        "useful_ratio": round(useful_ratio, 4),
+        "roofline_frac": round(frac, 4),
+        "collective_breakdown": rec["collectives"].get("bytes", {}),
+        "peak_bytes_chip": rec["memory"]["peak_bytes"],
+        "arg_bytes_chip": rec["memory"]["argument_bytes"],
+    }
+
+
+def load_sweep(path: str):
+    return json.loads(pathlib.Path(path).read_text())
+
+
+def table(sweep, mesh="pod"):
+    rows = []
+    for rec in sweep:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "dominant": "SKIP",
+                         "reason": rec.get("reason", "")})
+            continue
+        a = analyze(rec)
+        if a:
+            rows.append(a)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", default="results/dryrun/sweep.json")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--md", action="store_true", help="markdown table output")
+    args = ap.parse_args()
+    rows = table(load_sweep(args.sweep), args.mesh)
+    if args.md:
+        print("| arch | shape | compute us | memory us | collective us | "
+              "dominant | useful | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["dominant"] == "SKIP":
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |")
+            else:
+                print(f"| {r['arch']} | {r['shape']} | {r['compute_s']} | "
+                      f"{r['memory_s']} | {r['collective_s']} | {r['dominant']} | "
+                      f"{r['useful_ratio']} | {r['roofline_frac']} |")
+    else:
+        for r in rows:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig3,...]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * numerics   — Table 1 / Fig 3 / Fig 5 analogues (quantization fidelity)
+  * throughput — Fig 1 analogue (modeled v5e decode throughput + CPU measured)
+  * kernel     — Fig 6 / Fig 7 analogues (kernel roofline + CPU interpret time)
+  * roofline   — §Roofline summary if a dry-run sweep exists
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: numerics,throughput,kernel,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    if want("numerics"):
+        from benchmarks import numerics
+        numerics.main(csv=True)
+    if want("throughput"):
+        from benchmarks import throughput
+        throughput.main(csv=True)
+    if want("kernel"):
+        from benchmarks import kernel_perf
+        kernel_perf.main(csv=True)
+    if want("roofline"):
+        sweep = pathlib.Path("results/dryrun/sweep.json")
+        if sweep.exists():
+            from benchmarks import roofline
+            rows = roofline.table(roofline.load_sweep(str(sweep)))
+            for r in rows:
+                if r.get("dominant") == "SKIP":
+                    print(f"roofline_{r['arch']}_{r['shape']},0.0,skipped")
+                else:
+                    dom_us = r.get(r["dominant"] + "_s", 0)
+                    print(f"roofline_{r['arch']}_{r['shape']},{dom_us},"
+                          f"dominant={r['dominant']} frac={r['roofline_frac']}")
+        else:
+            print("roofline,0.0,no sweep.json (run repro.launch.dryrun_sweep)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""End-to-end decode throughput (paper Figure 1 analogue).
+
+Two outputs per (parallelism config x context length) point:
+
+1. *Modeled* decode step time on TPU v5e from the roofline terms —
+   bytes/step (weights + KV cache reads, FP8 vs BF16) over HBM bandwidth vs
+   FLOPs/step over peak — the Figure-1 claim transported to v5e constants.
+   This is the honest CPU-container substitute for wall-clock GPU numbers.
+2. *Measured* CPU wall time of the actual pipeline at small scale (smoke
+   config), FP8 vs BF16, demonstrating the full code path end-to-end.
+
+The modeled speedup saturates near the paper's 1.91x where decode is
+HBM-bound and the cache dominates bytes (long contexts), and shrinks when
+weights dominate (short contexts / huge models) — same qualitative shape as
+Figure 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+
+V5E_BF16_FLOPS = 197e12
+V5E_HBM_BPS = 819e9
+
+
+def decode_step_model(cfg, context: int, batch_per_chip: float, tp: int,
+                      fmt: str) -> dict:
+    """Analytic per-chip decode-step roofline for an MLA arch on v5e."""
+    m = cfg.mla
+    bytes_per_param = 2.0
+    n_active = cfg.active_param_count()
+    # weights read once per step (batch amortizes), sharded over tp
+    weight_bytes = n_active * bytes_per_param / tp
+    # per sequence: latent cache content + rope + scales per layer
+    cache_entry = (m.d_c * (1 if fmt != "none" else 2)
+                   + m.d_rope * 2 + (4 if fmt != "none" else 0))
+    cache_bytes = batch_per_chip * cfg.n_layers * context * cache_entry
+    # flops: 2*N_active per token + attention (2*(d_c+d_r)*H + 2*d_c*H per tok)
+    attn_flops = (2 * (m.d_c + m.d_rope) + 2 * m.d_c) * cfg.n_heads \
+        * context * cfg.n_layers * batch_per_chip
+    flops = 2 * n_active * batch_per_chip / tp + attn_flops / tp
+    t_mem = (weight_bytes + cache_bytes / tp) / V5E_HBM_BPS
+    t_comp = flops / V5E_BF16_FLOPS
+    t_step = max(t_mem, t_comp)
+    return {"t_mem": t_mem, "t_comp": t_comp, "t_step": t_step,
+            "tok_per_s_chip": batch_per_chip / t_step}
+
+
+def figure1_model(arch="deepseek-v3-mla"):
+    """Modeled throughput, BF16 vs FP8, DP/TP configs x context lengths."""
+    cfg = get_config(arch)
+    rows = []
+    for dp, tp in [(1, 8), (4, 2), (8, 1)]:
+        for ctx in [16384, 32768, 65536, 131072]:
+            # per-rank batch chosen to fill ~12GB of cache per chip at bf16,
+            # matched across formats (paper: matched per-rank input shapes)
+            entry_bf16 = (cfg.mla.d_c + cfg.mla.d_rope) * 2
+            b = max(1.0, 12e9 / (cfg.n_layers * ctx * entry_bf16) * tp)
+            bf16 = decode_step_model(cfg, ctx, b, tp, "none")
+            fp8 = decode_step_model(cfg, ctx, b, tp, "fp8_e4m3")
+            rows.append({
+                "dp": dp, "tp": tp, "context": ctx, "batch_per_rank": round(b, 1),
+                "bf16_tok_s": bf16["tok_per_s_chip"],
+                "fp8_tok_s": fp8["tok_per_s_chip"],
+                "speedup": fp8["tok_per_s_chip"] / bf16["tok_per_s_chip"],
+                "bf16_bound": "mem" if bf16["t_mem"] > bf16["t_comp"] else "comp",
+                "fp8_bound": "mem" if fp8["t_mem"] > fp8["t_comp"] else "comp",
+            })
+    return rows
+
+
+def figure1_capacity(arch="deepseek-v3-mla", hbm_budget=9e9):
+    """Capacity-mediated speedup: at a fixed per-chip HBM cache budget the FP8
+    cache fits ~1.79x more sequences; with step time ~ total bytes/BW the
+    throughput gain approaches the byte ratio. This is the serving-throughput
+    regime of the paper's Fig. 1 (their Hopper + FP8-weight deployment keeps
+    the weight term small; on v5e with BF16 weights the weight term damps the
+    matched-shape speedup — both modes reported, DESIGN.md §2)."""
+    cfg = get_config(arch)
+    m = cfg.mla
+    entry_bf16 = (m.d_c + m.d_rope) * 2
+    entry_fp8 = m.d_c + 2 * m.d_rope + 4
+    rows = []
+    for tp in (8, 16):
+        w_chip = cfg.active_param_count() * 2 / tp
+        for ctx in [16384, 32768, 65536, 131072]:
+            per_seq = cfg.n_layers * ctx
+            out = {"tp": tp, "context": ctx}
+            for label, entry in [("bf16", entry_bf16), ("fp8", entry_fp8)]:
+                batch = hbm_budget / (per_seq * entry / tp)
+                t = (w_chip + hbm_budget) / V5E_HBM_BPS
+                out[label + "_batch"] = batch
+                out[label + "_tok_s"] = batch / t / tp
+            out["speedup"] = out["fp8_tok_s"] / out["bf16_tok_s"]
+            rows.append(out)
+    return rows
+
+
+def measured_cpu(arch="mla-7b", B=4, prompt=32, gen=8):
+    """Measured wall time of the real pipeline at smoke scale (CPU)."""
+    from repro.launch.serve import generate
+    from repro.models import transformer as T
+
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (B, prompt), 0, cfg.vocab_size, jnp.int32)
+    out = {}
+    for fmt in ["none", "fp8_e4m3"]:
+        c = dataclasses.replace(cfg, kv_fmt=fmt)
+        _, tps = generate(c, params, prompts, gen)
+        out[fmt] = tps
+    return out
+
+
+def main(csv=True):
+    out = []
+    for r in figure1_model():
+        name = f"fig1_dp{r['dp']}tp{r['tp']}_ctx{r['context']//1024}k"
+        us = 1e6 / r["fp8_tok_s"]
+        out.append((name, us,
+                    f"speedup={r['speedup']:.2f}x bf16={r['bf16_tok_s']:.1f} "
+                    f"fp8={r['fp8_tok_s']:.1f} tok/s/chip ({r['fp8_bound']}-bound)"))
+    for r in figure1_capacity():
+        name = f"fig1cap_tp{r['tp']}_ctx{r['context']//1024}k"
+        out.append((name, 1e6 / max(r["fp8_tok_s"], 1e-9),
+                    f"capacity-speedup={r['speedup']:.2f}x "
+                    f"batch {r['bf16_batch']:.0f}->{r['fp8_batch']:.0f} per chip-group"))
+    cpu = measured_cpu()
+    ratio = cpu["fp8_e4m3"] / max(cpu["none"], 1e-9)
+    out.append(("fig1_cpu_smoke_measured", 1e6 / max(cpu['fp8_e4m3'], 1e-9),
+                f"cpu_fp8_vs_bf16={ratio:.2f}x (interpret-mode, not TPU-indicative)"))
+    if csv:
+        for name, us, derived in out:
+            print(f"{name},{us:.1f},{derived}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the SnapMLA FP8 decoding pipeline on a small MLA model.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small MLA attention layer, prefills a prompt into the quantized
+latent KV cache (RoPE-aware per-token FP8), runs a few decode steps through
+the scale-fused FP8 pipeline, and compares against the BF16 baseline.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mla as M
+from repro.core.kvcache import CacheConfig
+from repro.core.snapmla import SnapMLAConfig, decode_step, init_cache, prefill
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    mla_cfg = M.MLAConfig(d_model=256, n_heads=8, d_head=32, d_rope=16, d_c=64)
+    params = M.init_mla_params(key, mla_cfg)
+
+    B, S, steps = 2, 64, 8
+    h_prompt = jax.random.normal(jax.random.PRNGKey(1), (B, S, 256))
+    h_steps = jax.random.normal(jax.random.PRNGKey(2), (steps, B, 256))
+
+    outs = {}
+    for fmt in ("fp8_e4m3", "none"):
+        cfg = SnapMLAConfig(mla=mla_cfg, cache=CacheConfig(fmt=fmt, page_size=64))
+        cache = init_cache(cfg, B, 256)
+        _, cache = prefill(params, cfg, h_prompt, cache)
+        ys = []
+        for t in range(steps):
+            y, cache = decode_step(params, cfg, h_steps[t], cache)
+            ys.append(y)
+        outs[fmt] = np.asarray(jnp.stack(ys))
+        bytes_per_tok = (cache.content.dtype.itemsize * mla_cfg.d_c
+                         + 2 * mla_cfg.d_rope + 4)
+        print(f"[{fmt:9s}] decoded {steps} steps; cache {bytes_per_tok} B/token")
+
+    rel = np.abs(outs["fp8_e4m3"] - outs["none"]).max() / np.abs(outs["none"]).max()
+    print(f"FP8 vs BF16 pipeline max relative difference: {rel:.4f}")
+    print("(paper claim: near-parity — small per-step divergence)")
+
+
+if __name__ == "__main__":
+    main()

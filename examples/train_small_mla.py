@@ -1,0 +1,35 @@
+"""Train a small MLA+MoE model end-to-end on the synthetic pipeline with
+checkpoint/restart (fault-tolerance drill included).
+
+    PYTHONPATH=src python examples/train_small_mla.py [--steps 60]
+
+Demonstrates the full production loop at CPU scale: sharded train step,
+deterministic resumable data, atomic checkpoints, preemption-safe exit.
+"""
+import argparse
+import tempfile
+
+from repro.configs import get_smoke_config
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="deepseek-v3-mla")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    with tempfile.TemporaryDirectory() as ckpt:
+        print(f"== phase 1: train {args.steps // 2} steps, checkpoint ==")
+        out1 = train_loop(cfg, steps=args.steps // 2, batch=8, seq=32,
+                          ckpt_dir=ckpt, ckpt_every=10, lr=1e-3)
+        print(f"== phase 2: 'restart' resumes from checkpoint ==")
+        out2 = train_loop(cfg, steps=args.steps, batch=8, seq=32,
+                          ckpt_dir=ckpt, ckpt_every=50, lr=1e-3)
+        print(f"loss: {out1['losses'][0]:.4f} -> {out2['losses'][-1]:.4f} "
+              f"(resumed at step {args.steps // 2 - args.steps % 2})")
+
+
+if __name__ == "__main__":
+    main()

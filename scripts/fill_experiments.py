@@ -1,0 +1,120 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from artifacts.
+
+    PYTHONPATH=src python scripts/fill_experiments.py
+"""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
+
+from benchmarks import roofline as RL          # noqa: E402
+from benchmarks.throughput import figure1_capacity, figure1_model  # noqa: E402
+
+
+def load_cells():
+    cells = []
+    for p in sorted((ROOT / "results/dryrun").glob("*.json")):
+        if p.name == "sweep.json":
+            continue
+        try:
+            cells.append(json.loads(p.read_text()))
+        except json.JSONDecodeError:
+            pass
+    return cells
+
+
+def dryrun_summary(cells):
+    lines = ["| arch | shape | pod compile | multipod compile | peak GB/chip (mp) | status |",
+             "|---|---|---|---|---|---|"]
+    by_key = {}
+    for c in cells:
+        by_key[(c["arch"], c["shape"], c["mesh"])] = c
+    archs = sorted({c["arch"] for c in cells})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    n_ok = n_skip = n_other = 0
+    for a in archs:
+        for s in shapes:
+            pod = by_key.get((a, s, "pod"))
+            mp = by_key.get((a, s, "multipod"))
+            if pod is None and mp is None:
+                continue
+            st = (pod or mp).get("status")
+            if st == "skipped":
+                n_skip += 1
+                lines.append(f"| {a} | {s} | — | — | — | skipped ({(pod or mp).get('reason','')[:48]}…) |")
+                continue
+            ok = (pod or {}).get("status") == "ok" and (mp or {}).get("status") == "ok"
+            n_ok += ok
+            n_other += not ok
+            peak = (mp or {}).get("memory", {}).get("peak_bytes")
+            peak_gb = f"{peak/1e9:.2f}" if peak else "?"
+            lines.append(
+                f"| {a} | {s} | {(pod or {}).get('compile_s','?')}s | "
+                f"{(mp or {}).get('compile_s','?')}s | {peak_gb} | "
+                f"{'ok' if ok else 'INCOMPLETE'} |")
+    lines.append("")
+    lines.append(f"**{n_ok} cells compile on both meshes, {n_skip} skipped per "
+                 f"the assignment rules, {n_other} incomplete.**")
+    return "\n".join(lines)
+
+
+def roofline_md(cells):
+    rows = RL.table(cells, mesh="pod")
+    lines = ["| arch | shape | compute µs | memory µs | collective µs | dominant | useful | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("dominant") == "SKIP":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']} | {r['memory_s']} | "
+                f"{r['collective_s']} | **{r['dominant']}** | {r['useful_ratio']} | "
+                f"{r['roofline_frac']} |")
+    return "\n".join(lines)
+
+
+def fig1_md():
+    lines = ["**Matched per-rank shapes** (same batch — weight reads damp the v5e gain):",
+             "",
+             "| DP×TP | context | batch/rank | bf16 tok/s/chip | fp8 tok/s/chip | speedup | bound |",
+             "|---|---|---|---|---|---|---|"]
+    for r in figure1_model():
+        lines.append(
+            f"| {r['dp']}×{r['tp']} | {r['context']//1024}k | {r['batch_per_rank']} | "
+            f"{r['bf16_tok_s']:.1f} | {r['fp8_tok_s']:.1f} | **{r['speedup']:.2f}×** | "
+            f"{r['fp8_bound']} |")
+    lines += ["", "**Capacity-mediated** (fixed HBM cache budget — the serving regime; "
+              "FP8 fits ~1.79× more sequences):", "",
+              "| TP | context | bf16→fp8 batch | speedup |", "|---|---|---|---|"]
+    for r in figure1_capacity():
+        lines.append(f"| {r['tp']} | {r['context']//1024}k | "
+                     f"{r['bf16_batch']:.0f}→{r['fp8_batch']:.0f} | **{r['speedup']:.2f}×** |")
+    return "\n".join(lines)
+
+
+def splice(text, marker, payload):
+    if marker not in text:
+        print(f"marker {marker} missing!", file=sys.stderr)
+        return text
+    return text.replace(marker, payload)
+
+
+def main():
+    cells = load_cells()
+    (ROOT / "results/dryrun/sweep.json").write_text(
+        json.dumps(cells, indent=1, default=str))
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    exp = splice(exp, "<!-- DRYRUN_SUMMARY -->", dryrun_summary(cells))
+    exp = splice(exp, "<!-- ROOFLINE_TABLE -->", roofline_md(cells))
+    exp = splice(exp, "<!-- FIG1_TABLE -->", fig1_md())
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print("EXPERIMENTS.md updated;",
+          sum(1 for c in cells if c.get("status") == "ok"), "ok cells,",
+          sum(1 for c in cells if c.get("status") == "skipped"), "skipped")
+
+
+if __name__ == "__main__":
+    main()

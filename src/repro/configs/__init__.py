@@ -1,0 +1,52 @@
+"""Architecture registry: the 10 assigned configs + the paper's MLA models.
+
+Every config module defines ``CONFIG`` (full-size, exercised only via the
+dry-run) and ``smoke()`` (reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import MLADims, ModelConfig  # noqa: F401
+
+ARCH_IDS = [
+    # 10 assigned architectures
+    "llama-3.2-vision-90b",
+    "llama3.2-3b",
+    "gemma3-27b",
+    "qwen2.5-3b",
+    "granite-3-2b",
+    "qwen3-moe-30b-a3b",
+    "mixtral-8x7b",
+    "recurrentgemma-9b",
+    "whisper-base",
+    "xlstm-1.3b",
+    # the paper's own family (extra): DeepSeek-V3-style MLA MoE + a dense MLA
+    "deepseek-v3-mla",
+    "mla-7b",
+]
+
+_MODULES = {
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "llama3.2-3b": "llama32_3b",
+    "gemma3-27b": "gemma3_27b",
+    "qwen2.5-3b": "qwen25_3b",
+    "granite-3-2b": "granite3_2b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "whisper-base": "whisper_base",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "deepseek-v3-mla": "deepseek_v3_mla",
+    "mla-7b": "mla_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke()

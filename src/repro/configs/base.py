@@ -1,0 +1,144 @@
+"""ModelConfig — the single config dataclass every architecture instantiates.
+
+Layer heterogeneity is expressed through ``layer_pattern``: a tuple of layer
+kinds that is tiled across ``n_layers``. Full tiles are scanned (stacked
+params, lax.scan over superblocks — MaxText-style, keeps HLO size flat in
+depth); a remainder of ``n_layers % len(pattern)`` layers is applied unscanned.
+
+Layer kinds:
+  attn    full causal self-attention (GQA)
+  swa     sliding-window self-attention (ring-buffer cache at decode)
+  mla     Multi-head Latent Attention (the paper's family; SnapMLA decode)
+  cross   cross-attention block (llama-vision style gated cross + MLP)
+  dec     enc-dec decoder block: self-attn + cross-attn + MLP (whisper)
+  rglru   Griffin RG-LRU recurrent block (no MLP pairing if d_ff == 0)
+  mlstm   xLSTM matrix-memory block (self-contained, no MLP)
+  slstm   xLSTM scalar-memory block (self-contained, no MLP)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.models.moe import MoEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    d_c: int = 512
+    d_rope: int = 64
+    q_lora_rank: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | mla | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 0                  # for 'swa' layers
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    act: str = "silu"
+    moe: Optional[MoEConfig] = None  # if set, MLPs are MoE
+    first_k_dense: int = 0           # deepseek: first k layers use dense MLP
+    mla: Optional[MLADims] = None
+    # enc-dec / multimodal stub (precomputed frame/patch embeddings)
+    encoder_layers: int = 0          # whisper transformer encoder depth
+    n_aux_tokens: int = 0            # encoder frames (whisper) / image patches (vlm)
+    # serving / quantized KV cache (the paper's technique)
+    kv_fmt: str = "fp8_e4m3"         # fp8_e4m3 | int8 | none (bf16 baseline)
+    page_size: int = 128
+    # capability flags for the shape grid
+    subquadratic: bool = False       # can run long_500k decode
+    has_decoder: bool = True         # encoder-only archs would be False
+    max_seq_len: int = 131072
+    tie_embeddings: bool = True
+    # cost-accounting mode: unroll layer/flash scans so HLO cost analysis is
+    # exact (while-loop bodies are otherwise counted once). Lowering-only.
+    cost_exact: bool = False
+
+    # ---------------------------------------------------------------
+    @property
+    def pattern_len(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_superblocks(self) -> int:
+        return self.n_layers // self.pattern_len
+
+    @property
+    def remainder_kinds(self) -> Tuple[str, ...]:
+        r = self.n_layers % self.pattern_len
+        return self.layer_pattern[:r]
+
+    @property
+    def has_mlp(self) -> bool:
+        return self.d_ff > 0 or self.moe is not None
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for 6ND model-FLOPs accounting)."""
+        d, L = self.d_model, self.n_layers
+        emb = self.vocab_size * d
+        per_layer = 0
+        n_attn = sum(1 for i in range(L) if self._kind(i) in ("attn", "swa", "dec"))
+        n_cross = sum(1 for i in range(L) if self._kind(i) in ("cross", "dec"))
+        n_mla = sum(1 for i in range(L) if self._kind(i) == "mla")
+        n_rglru = sum(1 for i in range(L) if self._kind(i) == "rglru")
+        n_xlstm = sum(1 for i in range(L) if self._kind(i) in ("mlstm", "slstm"))
+        attn_p = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head \
+            + self.n_heads * self.d_head * d
+        total = emb + n_attn * attn_p + n_cross * attn_p
+        if self.mla:
+            m = self.mla
+            q_in = m.q_lora_rank or d
+            mla_p = (d * m.q_lora_rank if m.q_lora_rank else 0) \
+                + q_in * self.n_heads * (self.d_head + m.d_rope) \
+                + d * (m.d_c + m.d_rope) \
+                + 2 * m.d_c * self.n_heads * self.d_head \
+                + self.n_heads * self.d_head * d
+            total += n_mla * mla_p
+        total += n_rglru * (3 * d * d + 2 * d * d)          # approx (d_rnn = d)
+        total += n_xlstm * (4 * d * self.n_heads * self.d_head * 2)
+        # MLPs
+        n_mlp = sum(1 for i in range(L) if self._kind(i) in
+                    ("attn", "swa", "mla", "cross", "dec", "rglru")) if self.has_mlp else 0
+        if self.moe is not None:
+            dense_layers = min(self.first_k_dense, n_mlp)
+            moe_layers = n_mlp - dense_layers
+            total += dense_layers * 3 * d * self.d_ff
+            total += moe_layers * (d * self.moe.n_experts
+                                   + 3 * d * self.moe.d_ff_expert * self.moe.n_experts
+                                   + 3 * d * self.moe.d_ff_expert * self.moe.n_shared_experts)
+        elif self.d_ff:
+            total += n_mlp * 3 * d * self.d_ff
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn_p + 3 * d * self.d_ff)
+        if not self.tie_embeddings:
+            total += emb
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE-aware) for 6·N_active·D."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        L = self.n_layers
+        n_mlp = sum(1 for i in range(L) if self._kind(i) in
+                    ("attn", "swa", "mla", "cross", "dec", "rglru"))
+        moe_layers = n_mlp - min(self.first_k_dense, n_mlp)
+        all_expert = moe_layers * 3 * self.d_model * self.moe.d_ff_expert * self.moe.n_experts
+        act_expert = moe_layers * 3 * self.d_model * self.moe.d_ff_expert * self.moe.top_k
+        return int(full - all_expert + act_expert)
+
+    def _kind(self, i: int) -> str:
+        return self.layer_pattern[i % self.pattern_len]
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        return dataclasses.replace(self, **overrides)

@@ -1,0 +1,57 @@
+"""Reference decode attention over quantized caches (dequantize-first oracles).
+
+These are the ground-truth implementations the Pallas kernels are validated
+against: they dequantize the whole cache up front and run exact attention in
+f32. The kernels (and their ref.py emulations of the *pipeline*) must match
+these within FP8/INT8 round-trip tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kvcache import GQACache, MLACache
+
+
+def mla_decode_dequant_ref(
+    q_lat: jax.Array,       # [B, H, d_c] latent-space query (f32/bf16, UNQUANTIZED)
+    q_rope: jax.Array,      # [B, H, d_r] rope query (RoPE applied, UNQUANTIZED)
+    cache: MLACache,
+    softmax_scale: float,
+) -> jax.Array:
+    """Exact absorbed-MLA decode over a (possibly quantized) latent cache."""
+    c = cache.content.astype(jnp.float32) * cache.scale[..., None]   # dequant
+    kr = cache.rope.astype(jnp.float32) * cache.scale[..., None]     # undo prescale
+    logits = (
+        jnp.einsum("bhc,bnc->bhn", q_lat.astype(jnp.float32), c)
+        + jnp.einsum("bhr,bnr->bhn", q_rope.astype(jnp.float32), kr)
+    ) * softmax_scale
+    n = c.shape[1]
+    mask = jnp.arange(n)[None, None, :] < cache.seq_lens[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhn,bnc->bhc", p, c)                           # [B,H,d_c]
+
+
+def gqa_decode_dequant_ref(
+    q: jax.Array,           # [B, H, dh] (RoPE applied)
+    cache: GQACache,
+    positions: jax.Array,   # [B] absolute position of the query token
+    window: int = 0,
+) -> jax.Array:
+    """Exact GQA decode over a (possibly quantized, possibly ring) cache."""
+    B, H, dh = q.shape
+    Hkv = cache.k.shape[2]
+    g = H // Hkv
+    k = cache.k.astype(jnp.float32) * cache.k_scale[..., None]
+    v = cache.v.astype(jnp.float32) * cache.v_scale[..., None]
+    qg = q.reshape(B, Hkv, g, dh).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bnhd->bhgn", qg, k) / jnp.sqrt(dh)
+    sp = cache.slot_pos                                   # [B, N]
+    valid = (sp >= 0) & (sp <= positions[:, None])
+    if window:
+        valid &= sp > positions[:, None] - window
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgn,bnhd->bhgd", p, v)
+    return o.reshape(B, H, dh)

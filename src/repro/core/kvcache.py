@@ -1,0 +1,237 @@
+"""Quantized KV caches for decode.
+
+Two families:
+
+  * ``MLACache`` — the paper's object: per token a latent content vector
+    (FP8/INT8, per-token scale) plus a decoupled-RoPE key kept in BF16 and
+    *pre-scaled* by the inverse content scale (Key Step 1 domain alignment).
+  * ``GQACache`` — generalization to GQA/MHA archs: K and V quantized per token
+    per kv-head (post-RoPE). Supports sliding-window archs through a ring
+    buffer with per-slot absolute positions.
+
+Layout note (TPU adaptation): TPU serving stacks (JetStream/MaxText) use
+*contiguous per-slot* caches ([B, N, ...]) rather than GPU-style paged pools —
+contiguous caches shard cleanly over the ('pod','data') batch axes under pjit.
+That is the default here. A paged-pool variant with scalar-prefetched page
+tables (the PagedAttention analogue from the paper's Fused-K-Append) is
+provided for the flagship Pallas kernel in kernels/mla_decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import QuantFormat
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    fmt: str = "fp8_e4m3"        # "fp8_e4m3" | "int8" | "none" (bf16 baseline)
+    page_size: int = 128          # kernel KV-block granularity (§3.3.2: 128)
+    window: int = 0               # >0: ring buffer of this many tokens (SWA)
+
+    @property
+    def quantized(self) -> bool:
+        return self.fmt != "none"
+
+    def storage_dtype(self):
+        return quant.qdtype_for(self.fmt) if self.quantized else jnp.bfloat16
+
+
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# MLA latent cache
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    content: jax.Array    # [B, N, d_c]  fp8/int8 (or bf16 when fmt == none)
+    rope: jax.Array       # [B, N, d_r]  bf16, pre-divided by `scale` if quantized
+    scale: jax.Array      # [B, N]       f32 per-token content scale (ones if none)
+    seq_lens: jax.Array   # [B] int32 number of valid tokens
+
+    @property
+    def capacity(self) -> int:
+        return self.content.shape[1]
+
+
+def init_mla_cache(cfg: CacheConfig, batch: int, max_len: int, d_c: int, d_r: int) -> MLACache:
+    n = _round_up(max_len, cfg.page_size)
+    return MLACache(
+        content=jnp.zeros((batch, n, d_c), cfg.storage_dtype()),
+        rope=jnp.zeros((batch, n, d_r), jnp.bfloat16),
+        scale=jnp.ones((batch, n), jnp.float32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def mla_quantize_entry(cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Array):
+    """Quantize one or more MLA KV entries (paper §3.1, Eq. 6).
+
+    c_kv [..., d_c], k_r [..., d_r] -> (content_store, rope_store, scale[...]).
+    """
+    if not cfg.quantized:
+        ones = jnp.ones(c_kv.shape[:-1], jnp.float32)
+        return c_kv.astype(jnp.bfloat16), k_r.astype(jnp.bfloat16), ones
+    raq = quant.quantize_rope_aware(c_kv, k_r, cfg.fmt)
+    return raq.q_content, raq.rope_scaled, raq.scale[..., 0]
+
+
+def mla_append(cache: MLACache, cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Array) -> MLACache:
+    """Append one token per sequence (instant per-token quantization).
+
+    c_kv [B, d_c], k_r [B, d_r]. Pure-jnp reference for the Fused-K-Append
+    kernel (kernels/quantize).
+    """
+    content, rope, scale = mla_quantize_entry(cfg, c_kv, k_r)
+
+    def upd(cache_b, val_b, idx):
+        return jax.lax.dynamic_update_slice(cache_b, val_b[None], (idx,) + (0,) * (cache_b.ndim - 1))
+
+    idx = cache.seq_lens
+    return MLACache(
+        content=jax.vmap(upd)(cache.content, content.astype(cache.content.dtype), idx),
+        rope=jax.vmap(upd)(cache.rope, rope.astype(jnp.bfloat16), idx),
+        scale=jax.vmap(upd)(cache.scale, scale, idx),
+        seq_lens=cache.seq_lens + 1,
+    )
+
+
+def mla_prefill(cache: MLACache, cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Array) -> MLACache:
+    """Bulk-write a prefix: c_kv [B, S, d_c], k_r [B, S, d_r] at positions [0, S)."""
+    content, rope, scale = mla_quantize_entry(cfg, c_kv, k_r)
+    S = c_kv.shape[1]
+    return MLACache(
+        content=cache.content.at[:, :S].set(content.astype(cache.content.dtype)),
+        rope=cache.rope.at[:, :S].set(rope.astype(jnp.bfloat16)),
+        scale=cache.scale.at[:, :S].set(scale),
+        seq_lens=jnp.full_like(cache.seq_lens, S),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA cache (K and V per-token quantized, optional SWA ring buffer)
+# ---------------------------------------------------------------------------
+
+class GQACache(NamedTuple):
+    k: jax.Array            # [B, N, Hkv, dh] storage dtype
+    v: jax.Array            # [B, N, Hkv, dh]
+    k_scale: jax.Array      # [B, N, Hkv] f32
+    v_scale: jax.Array      # [B, N, Hkv]
+    slot_pos: jax.Array     # [B, N] int32 absolute position in slot, -1 = empty
+    seq_lens: jax.Array     # [B] int32 total tokens seen (not capped by window)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def init_gqa_cache(cfg: CacheConfig, batch: int, max_len: int, n_kv: int, d_h: int) -> GQACache:
+    cap = min(max_len, cfg.window) if cfg.window else max_len
+    cap = _round_up(cap, cfg.page_size)
+    return GQACache(
+        k=jnp.zeros((batch, cap, n_kv, d_h), cfg.storage_dtype()),
+        v=jnp.zeros((batch, cap, n_kv, d_h), cfg.storage_dtype()),
+        k_scale=jnp.ones((batch, cap, n_kv), jnp.float32),
+        v_scale=jnp.ones((batch, cap, n_kv), jnp.float32),
+        slot_pos=jnp.full((batch, cap), -1, jnp.int32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def gqa_quantize_entry(cfg: CacheConfig, k: jax.Array, v: jax.Array):
+    """k, v [..., Hkv, dh] -> storage + per-(token, head) scales [..., Hkv]."""
+    if not cfg.quantized:
+        ones = jnp.ones(k.shape[:-1], jnp.float32)
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16), ones, ones
+    qk = quant.quantize_per_token(k, cfg.fmt)
+    qv = quant.quantize_per_token(v, cfg.fmt)
+    return qk.q, qv.q, qk.scale[..., 0], qv.scale[..., 0]
+
+
+def gqa_append(cache: GQACache, cfg: CacheConfig, k: jax.Array, v: jax.Array) -> GQACache:
+    """Append one token per sequence. k, v [B, Hkv, dh] (RoPE already applied)."""
+    kq, vq, ks, vs = gqa_quantize_entry(cfg, k, v)
+    pos = cache.seq_lens                       # absolute position of the new token
+    slot = pos % cache.capacity if cfg.window else pos
+
+    def upd(cache_b, val_b, idx):
+        return jax.lax.dynamic_update_slice(cache_b, val_b[None], (idx,) + (0,) * (cache_b.ndim - 1))
+
+    return GQACache(
+        k=jax.vmap(upd)(cache.k, kq.astype(cache.k.dtype), slot),
+        v=jax.vmap(upd)(cache.v, vq.astype(cache.v.dtype), slot),
+        k_scale=jax.vmap(upd)(cache.k_scale, ks, slot),
+        v_scale=jax.vmap(upd)(cache.v_scale, vs, slot),
+        slot_pos=jax.vmap(upd)(cache.slot_pos, pos.astype(jnp.int32), slot),
+        seq_lens=cache.seq_lens + 1,
+    )
+
+
+def gqa_prefill(cache: GQACache, cfg: CacheConfig, k: jax.Array, v: jax.Array) -> GQACache:
+    """Bulk-write a prefix. k, v [B, S, Hkv, dh]. With a window, only the last
+    `capacity` tokens are retained (ring semantics preserved)."""
+    B, S = k.shape[:2]
+    cap = cache.capacity
+    kq, vq, ks, vs = gqa_quantize_entry(cfg, k, v)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.window and S > cap:
+        # keep last `cap` tokens, placed at slot = pos % cap
+        keep = slice(S - cap, S)
+        kq, vq, ks, vs = kq[:, keep], vq[:, keep], ks[:, keep], vs[:, keep]
+        positions = positions[keep]
+    slots = positions % cap if cfg.window else positions
+    k_new = cache.k.at[:, slots].set(kq.astype(cache.k.dtype))
+    v_new = cache.v.at[:, slots].set(vq.astype(cache.v.dtype))
+    ks_new = cache.k_scale.at[:, slots].set(ks)
+    vs_new = cache.v_scale.at[:, slots].set(vs)
+    sp_new = cache.slot_pos.at[:, slots].set(jnp.broadcast_to(positions, (B, positions.shape[0])))
+    return GQACache(k_new, v_new, ks_new, vs_new, sp_new, jnp.full_like(cache.seq_lens, S))
+
+
+# ---------------------------------------------------------------------------
+# Paged pool (PagedAttention analogue for the scalar-prefetch Pallas kernel)
+# ---------------------------------------------------------------------------
+
+class PagedMLAPool(NamedTuple):
+    """Global page pool: pages are the unit of allocation AND the kernel's
+    KV-block granularity (scalar-prefetched page table drives the BlockSpec
+    index map — the TPU-native PagedAttention)."""
+
+    content: jax.Array      # [n_pages, page_size, d_c]
+    rope: jax.Array         # [n_pages, page_size, d_r]
+    scale: jax.Array        # [n_pages, page_size]
+    page_table: jax.Array   # [B, max_pages] int32 page ids (0 is a valid page;
+                            #  unused entries point at page 0 and are masked)
+    seq_lens: jax.Array     # [B]
+
+
+def init_paged_mla_pool(
+    cfg: CacheConfig, n_pages: int, max_pages_per_seq: int, batch: int, d_c: int, d_r: int
+) -> PagedMLAPool:
+    return PagedMLAPool(
+        content=jnp.zeros((n_pages, cfg.page_size, d_c), cfg.storage_dtype()),
+        rope=jnp.zeros((n_pages, cfg.page_size, d_r), jnp.bfloat16),
+        scale=jnp.ones((n_pages, cfg.page_size), jnp.float32),
+        page_table=jnp.zeros((batch, max_pages_per_seq), jnp.int32),
+        seq_lens=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def paged_gather(pool: PagedMLAPool):
+    """Gather a contiguous view [B, max_pages*page, ...] (reference only)."""
+    c = pool.content[pool.page_table]   # [B, P, page, d_c]
+    r = pool.rope[pool.page_table]
+    s = pool.scale[pool.page_table]
+    B, P, page, d_c = c.shape
+    return (
+        c.reshape(B, P * page, d_c),
+        r.reshape(B, P * page, -1),
+        s.reshape(B, P * page),
+    )

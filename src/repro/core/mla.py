@@ -1,0 +1,182 @@
+"""Multi-head Latent Attention (MLA) — the paper's substrate architecture.
+
+Implements the DeepSeek-V2/V3 MLA math (paper §2):
+
+  * low-rank joint KV compression:  c_kv = W_DKV h           (Eq. 1)
+  * decoupled RoPE:                 k_r  = RoPE(W_KR h)      (Eq. 2, shared
+                                    across heads), per-head k_i = [k_c_i; k_r]
+  * V from the latent only:         v_i  = W_UV_i c_kv       (Eq. 4)
+  * absorbed decode form (Eq. 5):   q~_i = W_UK_i^T q_c_i  ∈ R^{d_c}
+        logit_ij = q~_i . c_kv_j  +  q_r_i . k_r_j
+        o_i = W_UV_i (sum_j p_ij c_kv_j)
+
+Everything here is the high-precision reference path; the quantized decode
+pipeline lives in core/snapmla.py + kernels/mla_decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm, apply_rope, rope_freqs
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    d_head: int          # per-head content dim (d_h)
+    d_rope: int          # decoupled rope dim (d_r), shared K across heads
+    d_c: int             # KV compression dim (latent)
+    q_lora_rank: int = 0  # 0 => direct W_Q; >0 => DeepSeek-style Q LoRA
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_dim(self) -> int:
+        return self.d_head + self.d_rope
+
+    @property
+    def softmax_scale(self) -> float:
+        return 1.0 / (self.qk_dim ** 0.5)
+
+
+class MLAParams(NamedTuple):
+    """Weights for one MLA attention layer (absorbed-compatible layout)."""
+
+    w_dq: jax.Array | None   # [d, q_lora] or None
+    q_norm: jax.Array | None  # [q_lora] rmsnorm gain
+    w_uq: jax.Array          # [q_lora or d, H, d_h + d_r]
+    w_dkv: jax.Array         # [d, d_c]
+    kv_norm: jax.Array       # [d_c] rmsnorm gain applied to c_kv before cache
+    w_kr: jax.Array          # [d, d_r]
+    w_uk: jax.Array          # [d_c, H, d_h]
+    w_uv: jax.Array          # [d_c, H, d_h]
+    w_o: jax.Array           # [H, d_h, d]
+
+
+def init_mla_params(key: jax.Array, cfg: MLAConfig, dtype=jnp.float32) -> MLAParams:
+    ks = jax.random.split(key, 8)
+    d, H, dh, dr, dc = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_rope, cfg.d_c
+
+    def init(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+    if cfg.q_lora_rank:
+        w_dq = init(ks[0], (d, cfg.q_lora_rank), d)
+        q_norm = jnp.ones((cfg.q_lora_rank,), dtype)
+        w_uq = init(ks[1], (cfg.q_lora_rank, H, dh + dr), cfg.q_lora_rank)
+    else:
+        w_dq, q_norm = None, None
+        w_uq = init(ks[1], (d, H, dh + dr), d)
+    return MLAParams(
+        w_dq=w_dq,
+        q_norm=q_norm,
+        w_uq=w_uq,
+        w_dkv=init(ks[2], (d, dc), d),
+        kv_norm=jnp.ones((dc,), dtype),
+        w_kr=init(ks[3], (d, dr), d),
+        w_uk=init(ks[4], (dc, H, dh), dc),
+        w_uv=init(ks[5], (dc, H, dh), dc),
+        w_o=init(ks[6], (H, dh, d), H * dh),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def project_q(params: MLAParams, cfg: MLAConfig, h: jax.Array, positions: jax.Array):
+    """h: [..., S, d] -> (q_c [..., S, H, d_h], q_r [..., S, H, d_r] RoPE'd)."""
+    if params.w_dq is not None:
+        ql = h @ params.w_dq
+        ql = rms_norm(ql, params.q_norm)
+        q = jnp.einsum("...sk,khd->...shd", ql, params.w_uq)
+    else:
+        q = jnp.einsum("...sk,khd->...shd", h, params.w_uq)
+    q_c, q_r = q[..., : cfg.d_head], q[..., cfg.d_head:]
+    sin, cos = rope_freqs(positions, cfg.d_rope, cfg.rope_theta)
+    q_r = apply_rope(q_r, sin[..., None, :], cos[..., None, :])
+    return q_c, q_r
+
+
+def project_kv(params: MLAParams, cfg: MLAConfig, h: jax.Array, positions: jax.Array):
+    """h: [..., S, d] -> (c_kv [..., S, d_c] normed, k_r [..., S, d_r] RoPE'd)."""
+    c_kv = rms_norm(h @ params.w_dkv, params.kv_norm)
+    k_r = h @ params.w_kr
+    sin, cos = rope_freqs(positions, cfg.d_rope, cfg.rope_theta)
+    k_r = apply_rope(k_r, sin, cos)
+    return c_kv, k_r
+
+
+def absorb_q(params: MLAParams, q_c: jax.Array) -> jax.Array:
+    """q_c [..., H, d_h] -> latent-space query q~ [..., H, d_c] (Eq. 5 LHS)."""
+    return jnp.einsum("...hd,chd->...hc", q_c, params.w_uk)
+
+
+def output_proj(params: MLAParams, o_latent: jax.Array) -> jax.Array:
+    """o_latent [..., H, d_c] -> [..., d] via W_UV then W_O (absorbed pair)."""
+    o_head = jnp.einsum("...hc,chd->...hd", o_latent, params.w_uv)
+    return jnp.einsum("...hd,hdk->...k", o_head, params.w_o)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (training / prefill) attention — naive "unabsorbed" oracle
+# ---------------------------------------------------------------------------
+
+def mla_attention(
+    params: MLAParams,
+    cfg: MLAConfig,
+    h: jax.Array,                  # [B, S, d]
+    positions: jax.Array,          # [S] or [B, S]
+    causal: bool = True,
+) -> jax.Array:
+    q_c, q_r = project_q(params, cfg, h, positions)        # [B,S,H,dh],[B,S,H,dr]
+    c_kv, k_r = project_kv(params, cfg, h, positions)      # [B,S,dc],[B,S,dr]
+    k_c = jnp.einsum("...sc,chd->...shd", c_kv, params.w_uk)
+    v = jnp.einsum("...sc,chd->...shd", c_kv, params.w_uv)
+
+    logits = (
+        jnp.einsum("...qhd,...khd->...hqk", q_c, k_c)
+        + jnp.einsum("...qhd,...kd->...hqk", q_r, k_r)
+    ) * cfg.softmax_scale
+    S = h.shape[-2]
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(h.dtype)
+    o = jnp.einsum("...hqk,...khd->...qhd", p, v)
+    return jnp.einsum("...qhd,hdk->...qk", o, params.w_o)
+
+
+# ---------------------------------------------------------------------------
+# Absorbed decode (one new token against a latent cache) — BF16 baseline
+# (our FlashMLA stand-in: same math as the quantized path, no quantization)
+# ---------------------------------------------------------------------------
+
+def mla_decode_absorbed(
+    params: MLAParams,
+    cfg: MLAConfig,
+    h_t: jax.Array,            # [B, d] current hidden state
+    cache_c: jax.Array,        # [B, N, d_c] latent cache (already normed)
+    cache_kr: jax.Array,       # [B, N, d_r] rope key cache (RoPE applied)
+    seq_lens: jax.Array,       # [B] valid lengths (including the new token slot
+                               #     already appended by the caller)
+    positions: jax.Array,      # [B] position of the current token
+) -> jax.Array:
+    q_c, q_r = project_q(params, cfg, h_t[:, None, :], positions[:, None])
+    q_c, q_r = q_c[:, 0], q_r[:, 0]                        # [B,H,dh],[B,H,dr]
+    q_lat = absorb_q(params, q_c)                          # [B,H,dc]
+
+    logits = (
+        jnp.einsum("bhc,bnc->bhn", q_lat.astype(jnp.float32), cache_c.astype(jnp.float32))
+        + jnp.einsum("bhr,bnr->bhn", q_r.astype(jnp.float32), cache_kr.astype(jnp.float32))
+    ) * cfg.softmax_scale
+    n = cache_c.shape[1]
+    mask = jnp.arange(n)[None, None, :] < seq_lens[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhn,bnc->bhc", p, cache_c.astype(jnp.float32))
+    return output_proj(params, o_lat.astype(h_t.dtype))

@@ -1,0 +1,258 @@
+"""Quantization primitives for SnapMLA.
+
+Implements the paper's quantization toolbox (Appendix C granularities) plus the
+two SnapMLA-specific operations:
+
+  * RoPE-aware per-token KV quantization (paper §3.1): quantize only the content
+    part of an MLA KV entry, keep the RoPE part in high precision, and
+    *pre-scale* the RoPE part by the inverse content scale (Key Step 1,
+    Eq. 6) so downstream GEMMs can treat the concatenated vector uniformly.
+  * Block-wise dynamic P quantization with scale fusion (paper §3.2): fuse the
+    per-token V scale into the probability block before quantizing it.
+
+Two storage formats are supported:
+  * ``fp8_e4m3`` — the paper's format (max finite 448).
+  * ``int8``     — beyond-paper TPU-native option (v5e MXU has 2x int8 peak);
+    same per-token scale algebra with qmax 127.
+
+All functions are pure jnp and shard_map/pjit friendly (no Python branching on
+traced values).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FP8_DTYPE = jnp.float8_e4m3fn
+FP8_MAX = 448.0  # max finite magnitude of e4m3fn
+INT8_MAX = 127.0
+EPS = 1e-12  # lower bound for dynamic scales (paper App. D: "lower-bounded by a
+# small eps before division to avoid zero-scale cases")
+
+QuantFormat = Literal["fp8_e4m3", "int8", "none"]
+
+
+def qmax_for(fmt: QuantFormat) -> float:
+    if fmt == "fp8_e4m3":
+        return FP8_MAX
+    if fmt == "int8":
+        return INT8_MAX
+    raise ValueError(f"no qmax for format {fmt!r}")
+
+
+def qdtype_for(fmt: QuantFormat):
+    if fmt == "fp8_e4m3":
+        return FP8_DTYPE
+    if fmt == "int8":
+        return jnp.int8
+    raise ValueError(f"no dtype for format {fmt!r}")
+
+
+def _cast(x: jax.Array, fmt: QuantFormat) -> jax.Array:
+    """Cast a pre-scaled tensor into the storage format (with round/clip)."""
+    if fmt == "fp8_e4m3":
+        # fp8 cast saturates via clip first to avoid inf (e4m3fn has no inf but
+        # overflow maps to nan on some backends).
+        return jnp.clip(x, -FP8_MAX, FP8_MAX).astype(FP8_DTYPE)
+    if fmt == "int8":
+        return jnp.clip(jnp.round(x), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    raise ValueError(fmt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantized:
+    """A quantized tensor: ``real ≈ q.astype(f32) * scale`` (scale broadcast)."""
+
+    q: jax.Array
+    scale: jax.Array  # broadcastable against q along the scaled axes
+
+    def dequant(self, dtype=jnp.float32) -> jax.Array:
+        return (self.q.astype(jnp.float32) * self.scale.astype(jnp.float32)).astype(dtype)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+
+jax.tree_util.register_pytree_node(
+    Quantized,
+    lambda t: ((t.q, t.scale), None),
+    lambda _, c: Quantized(*c),
+)
+
+
+# ---------------------------------------------------------------------------
+# Granularities (paper Appendix C)
+# ---------------------------------------------------------------------------
+
+def quantize_per_token(x: jax.Array, fmt: QuantFormat = "fp8_e4m3") -> Quantized:
+    """Per-token (per-row, Eq. 8): one scale per leading-index row.
+
+    The last axis is the channel axis; every other axis indexes tokens.
+    scale shape == x.shape[:-1] + (1,).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / qmax_for(fmt)
+    return Quantized(_cast(x.astype(jnp.float32) / scale, fmt), scale)
+
+
+def quantize_per_channel(x: jax.Array, fmt: QuantFormat = "fp8_e4m3") -> Quantized:
+    """Per-channel (per-column, Eq. 9): one scale per last-axis channel."""
+    red_axes = tuple(range(x.ndim - 1))
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red_axes, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / qmax_for(fmt)
+    return Quantized(_cast(x.astype(jnp.float32) / scale, fmt), scale)
+
+
+def quantize_per_tensor(
+    x: jax.Array, fmt: QuantFormat = "fp8_e4m3", static_scale: float | None = None
+) -> Quantized:
+    """Per-tensor (Eq. 7). ``static_scale`` reproduces paper Config B (fixed 1.0)."""
+    if static_scale is not None:
+        scale = jnp.full((1,) * x.ndim, static_scale, jnp.float32)
+    else:
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+        scale = (jnp.maximum(amax, EPS) / qmax_for(fmt)).reshape((1,) * x.ndim)
+    return Quantized(_cast(x.astype(jnp.float32) / scale, fmt), scale)
+
+
+def quantize_per_block(
+    x: jax.Array, block: Tuple[int, int] = (64, 64), fmt: QuantFormat = "fp8_e4m3"
+) -> Quantized:
+    """Per-block (Eq. 10-11) over the last two axes; pads implicitly via reshape
+    requirement: last-two dims must be divisible by ``block`` (callers pad)."""
+    *lead, m, n = x.shape
+    bm, bn = block
+    assert m % bm == 0 and n % bn == 0, (x.shape, block)
+    xb = x.astype(jnp.float32).reshape(*lead, m // bm, bm, n // bn, bn)
+    amax = jnp.max(jnp.abs(xb), axis=(-3, -1), keepdims=True)
+    scale = jnp.maximum(amax, EPS) / qmax_for(fmt)
+    q = _cast(xb / scale, fmt).reshape(x.shape)
+    # scale broadcastable to the blocked view; expose expanded to x's shape
+    scale_full = jnp.broadcast_to(scale, xb.shape).reshape(x.shape)
+    return Quantized(q, scale_full)
+
+
+# ---------------------------------------------------------------------------
+# SnapMLA Key Step 1: RoPE-aware per-token quantization with domain alignment
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RopeAwareQuantized:
+    """An MLA KV entry (or Q row) split as [content | rope].
+
+    real content ≈ q_content * scale      (per token)
+    real rope    =  rope_scaled * scale   (rope stored PRE-DIVIDED by scale —
+                                           paper Eq. 6 "domain alignment")
+
+    so the concatenated vector satisfies
+        real = concat(q_content, rope_scaled) * scale
+    which is what lets the QK GEMM run uniformly over all groups and apply a
+    single post-hoc rescale of sigma_q * sigma_k.
+    """
+
+    q_content: jax.Array      # [..., d_c] storage dtype
+    rope_scaled: jax.Array    # [..., d_r] high precision, pre-divided by scale
+    scale: jax.Array          # [..., 1] f32
+
+    def dequant_content(self, dtype=jnp.float32) -> jax.Array:
+        return (self.q_content.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def dequant_rope(self, dtype=jnp.float32) -> jax.Array:
+        return (self.rope_scaled.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def dequant_concat(self, dtype=jnp.float32) -> jax.Array:
+        return jnp.concatenate(
+            [self.dequant_content(dtype), self.dequant_rope(dtype)], axis=-1
+        )
+
+
+jax.tree_util.register_pytree_node(
+    RopeAwareQuantized,
+    lambda t: ((t.q_content, t.rope_scaled, t.scale), None),
+    lambda _, c: RopeAwareQuantized(*c),
+)
+
+
+def quantize_rope_aware(
+    content: jax.Array,
+    rope: jax.Array,
+    fmt: QuantFormat = "fp8_e4m3",
+    rope_dtype=jnp.bfloat16,
+) -> RopeAwareQuantized:
+    """Paper §3.1 + Eq. 6.
+
+    Per-token scale from the *content* part only; rope part kept high precision
+    but divided by the content scale so both live in one numerical domain.
+    """
+    qc = quantize_per_token(content, fmt)
+    rope_scaled = (rope.astype(jnp.float32) / qc.scale).astype(rope_dtype)
+    return RopeAwareQuantized(qc.q, rope_scaled, qc.scale)
+
+
+def quantize_rope_unaware(
+    content: jax.Array, rope: jax.Array, fmt: QuantFormat = "fp8_e4m3"
+) -> RopeAwareQuantized:
+    """Paper Config A ablation: quantize content AND rope per token (jointly).
+
+    Returned in the same container: rope is quantized then re-expressed in the
+    shared scale domain (stored as q_rope values; dequant gives the lossy rope).
+    """
+    full = jnp.concatenate([content.astype(jnp.float32), rope.astype(jnp.float32)], -1)
+    qf = quantize_per_token(full, fmt)
+    d_c = content.shape[-1]
+    return RopeAwareQuantized(
+        qf.q[..., :d_c],
+        qf.q[..., d_c:].astype(jnp.float32),  # already in scale domain
+        qf.scale,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SnapMLA Key Step 2 helper: scale fusion + block-wise dynamic P quantization
+# ---------------------------------------------------------------------------
+
+def fuse_and_quantize_p(
+    p: jax.Array,
+    v_scale: jax.Array,
+    fmt: QuantFormat = "fp8_e4m3",
+) -> tuple[jax.Array, jax.Array]:
+    """Fuse the per-token V scale into a probability block and quantize it.
+
+    p:       [..., block_n] unnormalized softmax numerators e_j for one KV block
+    v_scale: [..., block_n] per-token V scales (broadcast from [block_n])
+
+    Returns (p_q, sigma_p) with p_fused ≈ p_q * sigma_p, sigma_p per row
+    ([..., 1]) — "block-wise dynamic quantization" where the block is the KV
+    tile (paper sets block = the PV kernel's BlockN).
+    """
+    p_fused = p.astype(jnp.float32) * v_scale.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(p_fused), axis=-1, keepdims=True)
+    sigma_p = jnp.maximum(amax, EPS) / qmax_for(fmt)
+    return _cast(p_fused / sigma_p, fmt), sigma_p
+
+
+# ---------------------------------------------------------------------------
+# Analysis helpers (paper Fig. 3: value ranges + quantization MSE)
+# ---------------------------------------------------------------------------
+
+def quant_mse(x: jax.Array, fmt: QuantFormat = "fp8_e4m3", granularity: str = "per_token"):
+    """Round-trip MSE of a tensor under a given quantization config."""
+    fn = {
+        "per_token": quantize_per_token,
+        "per_channel": quantize_per_channel,
+        "per_tensor": quantize_per_tensor,
+        "per_block": lambda t, fmt: quantize_per_block(t, (64, 64), fmt),
+    }[granularity]
+    q = fn(x, fmt)
+    err = q.dequant(jnp.float32) - x.astype(jnp.float32)
+    return jnp.mean(err * err)
+
+
+def dynamic_range(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    xf = jnp.abs(x.astype(jnp.float32))
+    return jnp.min(xf), jnp.max(xf)

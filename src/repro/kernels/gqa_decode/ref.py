@@ -1,0 +1,133 @@
+"""Pure-jnp oracle for the FP8 per-token quantized GQA decode pipeline.
+
+This generalizes SnapMLA's Key Step 2 to GQA/MHA architectures (DESIGN.md
+§Arch-applicability): K and V are per-token quantized post-RoPE; K's scale is
+applied to the logits (scale along the QK *non-reduction* token dim — exact);
+V's per-token scale lies along the PV reduction dim, so it is fused into the
+probability block and handled by the same block-wise dynamic P quantization +
+implicit dequantization as the MLA kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def gqa_decode_pipeline_ref(
+    q: jax.Array,          # [B, H, dh] f32 (RoPE applied, high precision)
+    k8: jax.Array,         # [B, N, Hkv, dh] storage dtype
+    v8: jax.Array,         # [B, N, Hkv, dh]
+    k_scale: jax.Array,    # [B, N, Hkv] f32
+    v_scale: jax.Array,    # [B, N, Hkv] f32
+    slot_pos: jax.Array,   # [B, N] int32 (-1 = empty slot)
+    positions: jax.Array,  # [B] query absolute positions
+    *,
+    window: int = 0,
+    block_n: int = 128,
+    fmt: quant.QuantFormat = "fp8_e4m3",
+    p_quant: bool = True,
+) -> jax.Array:
+    B, H, dh = q.shape
+    N, Hkv = k8.shape[1], k8.shape[2]
+    g = H // Hkv
+    assert N % block_n == 0
+    nblocks = N // block_n
+    qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    def one_batch(q_b, k_b, v_b, ks_b, vs_b, sp_b, pos_b):
+        qg = q_b.reshape(Hkv, g, dh).astype(jnp.float32)
+
+        def body(carry, j):
+            m, l, sp, acc = carry
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, j * block_n, block_n, 0)
+            k, v = sl(k_b).astype(jnp.float32), sl(v_b).astype(jnp.float32)
+            ks, vs, spos = sl(ks_b), sl(vs_b), sl(sp_b)
+            s = jnp.einsum("hgd,nhd->hgn", qg, k) * ks.T[:, None, :] * sm_scale
+            valid = (spos >= 0) & (spos <= pos_b)
+            if window:
+                valid &= spos > pos_b - window
+            s = jnp.where(valid[None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            e = jnp.exp(s - m_new[..., None])
+            p_fused = e * vs.T[:, None, :]
+            if p_quant and fmt != "none":
+                amax = jnp.max(jnp.abs(p_fused), axis=-1)
+                sp_new = jnp.maximum(amax, quant.EPS) / qmax
+                p8 = quant._cast(p_fused / sp_new[..., None], fmt).astype(jnp.float32)
+            else:
+                sp_new = jnp.ones_like(m_new)
+                p8 = p_fused
+            corr = jnp.exp(m - m_new) * (sp / sp_new)
+            l_new = l * corr + jnp.sum(e, axis=-1) / sp_new
+            pv = jnp.einsum("hgn,nhd->hgd", p8, v)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, sp_new, acc_new), None
+
+        init = (
+            jnp.full((Hkv, g), -jnp.inf, jnp.float32),
+            jnp.zeros((Hkv, g), jnp.float32),
+            jnp.ones((Hkv, g), jnp.float32),
+            jnp.zeros((Hkv, g, dh), jnp.float32),
+        )
+        (m, l, sp, acc), _ = jax.lax.scan(body, init, jnp.arange(nblocks))
+        return (acc / l[..., None]).reshape(H, dh)
+
+    return jax.vmap(one_batch)(q, k8, v8, k_scale, v_scale, slot_pos, positions)
+
+
+def gqa_decode_parallel_ref(
+    q: jax.Array,          # [B, H, dh]
+    k8: jax.Array,         # [B, N, Hkv, dh]
+    v8: jax.Array,
+    k_scale: jax.Array,    # [B, N, Hkv]
+    v_scale: jax.Array,
+    slot_pos: jax.Array,   # [B, N]
+    positions: jax.Array,  # [B]
+    *,
+    window: int = 0,
+    block_n: int = 128,
+    fmt: quant.QuantFormat = "fp8_e4m3",
+) -> jax.Array:
+    """Parallel (flash-combine) form of the quantized GQA decode pipeline —
+    identical math to ``gqa_decode_pipeline_ref`` (verified in tests), but
+    while-loop-free: the preferred pjit serve-path lowering and exact under
+    HLO cost analysis."""
+    B, H, dh = q.shape
+    N, Hkv = k8.shape[1], k8.shape[2]
+    g = H // Hkv
+    assert N % block_n == 0
+    nb = N // block_n
+    qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+
+    qg = q.reshape(B, Hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bnhd->bhgn", qg, k8.astype(jnp.float32))
+    s = s * jnp.transpose(k_scale, (0, 2, 1))[:, :, None, :] / (dh ** 0.5)
+    valid = (slot_pos >= 0) & (slot_pos <= positions[:, None])
+    if window:
+        valid &= slot_pos > positions[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+
+    sb = s.reshape(B, Hkv, g, nb, block_n)
+    m_k = jnp.max(sb, axis=-1)                                  # [B,Hkv,g,nb]
+    e = jnp.where(jnp.isfinite(sb), jnp.exp(sb - m_k[..., None]), 0.0)
+    vsb = jnp.transpose(v_scale, (0, 2, 1)).reshape(B, Hkv, 1, nb, block_n)
+    p_fused = e * vsb
+    amax = jnp.max(jnp.abs(p_fused), axis=-1)
+    sp = jnp.maximum(amax, quant.EPS) / qmax
+    if fmt != "none":
+        p8 = quant._cast(p_fused / sp[..., None], fmt).astype(jnp.float32)
+    else:
+        sp = jnp.ones_like(sp)
+        p8 = p_fused
+    vb = jnp.transpose(v8.astype(jnp.float32), (0, 2, 1, 3)).reshape(
+        B, Hkv, nb, block_n, dh)
+    o_k = jnp.einsum("bhgkn,bhknd->bhgkd", p8, vb)
+    l_k = jnp.sum(e, axis=-1)
+    m_star = jnp.max(m_k, axis=-1, keepdims=True)
+    w = jnp.exp(m_k - m_star)
+    num = jnp.einsum("bhgk,bhgkd->bhgd", w * sp, o_k)
+    den = jnp.einsum("bhgk,bhgk->bhg", w, l_k)
+    return (num / den[..., None]).reshape(B, H, dh)

@@ -1,0 +1,274 @@
+"""SnapMLA FP8 MLA decode — Pallas TPU kernel (the paper's flagship kernel).
+
+Implements the full quantized decode pipeline of §3.2.3 inside one
+``pl.pallas_call``:
+
+  grid = (batch, kv_blocks) — the KV-block loop is the *innermost, sequential*
+  grid dimension, so the scale-aware online-softmax state (m, l, sigma_p, acc)
+  lives in VMEM scratch and is carried across grid steps. On TPU the grid is
+  executed in order by construction, which gives us the paper's Appendix-E
+  "monotonic scale progression" for free (no dual-warp-group inversion exists
+  to cause the bidirectional-rescale hazard).
+
+  Per KV block (block_n = 128 tokens — §3.3.2's cache-line-aligned tile):
+    1. QK with pre-scaled domain alignment (Key Step 1): one uniform
+       content+rope dot, one rescale by sigma_q ⊗ sigma_k.
+    2. Online softmax max/renormalization.
+    3. Scale fusion p~ = e ⊙ sigma_k (V ≡ latent cache in absorbed MLA).
+    4. Block-wise dynamic P quantization (sigma_p = max|p~|/qmax).
+    5. FP8 PV "GEMM" + implicit dequantization via Eq. 12-13 accumulation.
+
+TPU adaptation notes (DESIGN.md §2): FP8 here is the *storage* dtype — blocks
+are upcast to f32 on load inside the kernel (v5e has no FP8 MXU; the win is
+HBM bytes, which is what decode attention is bound by at small head counts).
+The paged variant uses a scalar-prefetched page table in the BlockSpec index
+maps — the TPU-native PagedAttention (replaces the paper's TMA-driven
+Fused-K-Append read path).
+
+Validated in interpret mode against ref.snapmla_decode_pipeline_ref (exact
+same arithmetic) and core.attention.mla_decode_dequant_ref (quantization
+error bound).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import quant
+
+NEG_INF = -1e30
+
+
+def _quantize_block(p_fused, fmt: str, qmax: float):
+    amax = jnp.max(jnp.abs(p_fused), axis=-1)
+    sp = jnp.maximum(amax, quant.EPS) / qmax
+    if fmt == "fp8_e4m3":
+        p8 = jnp.clip(p_fused / sp[:, None], -quant.FP8_MAX, quant.FP8_MAX)
+        p8 = p8.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    elif fmt == "int8":
+        p8 = jnp.clip(jnp.round(p_fused / sp[:, None]), -127, 127)
+        p8 = p8.astype(jnp.int8).astype(jnp.float32)
+    else:  # "none": scale-fused but unquantized (BF16-pipeline baseline)
+        sp = jnp.ones_like(sp)
+        p8 = p_fused
+    return p8, sp
+
+
+def _mla_decode_kernel(
+    # scalar prefetch
+    seq_lens_ref,           # [B] int32
+    # inputs (VMEM blocks)
+    q_c_ref,                # [1, H, d_c]  storage dtype
+    q_r_ref,                # [1, H, d_r]  f32 (pre-divided by sigma_q)
+    sigma_q_ref,            # [1, H]       f32
+    content_ref,            # [1, bn, d_c] storage dtype (or [bn, d_c] paged)
+    rope_ref,               # [1, bn, d_r] f32/bf16 (pre-divided by sigma_k)
+    sigma_k_ref,            # [1, bn]      f32
+    # outputs
+    o_ref,                  # [1, H, d_c]  f32
+    lse_ref,                # [1, H]       f32
+    # scratch
+    m_ref, l_ref, sp_ref,   # [H]
+    acc_ref,                # [H, d_c]
+    *,
+    softmax_scale: float,
+    block_n: int,
+    fmt: str,
+    qmax: float,
+    paged: bool,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nblocks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        sp_ref[...] = jnp.ones_like(sp_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qc = q_c_ref[0].astype(jnp.float32)              # [H, d_c]
+    qr = q_r_ref[0].astype(jnp.float32)              # [H, d_r]
+    sq = sigma_q_ref[0].astype(jnp.float32)          # [H]
+    if paged:
+        c = content_ref[...].astype(jnp.float32)     # [bn, d_c]
+        r = rope_ref[...].astype(jnp.float32)        # [bn, d_r]
+        sk = sigma_k_ref[...].astype(jnp.float32)    # [bn]
+    else:
+        c = content_ref[0].astype(jnp.float32)
+        r = rope_ref[0].astype(jnp.float32)
+        sk = sigma_k_ref[0].astype(jnp.float32)
+
+    # --- Key Step 1: uniform QK + single rescale -------------------------
+    s = jax.lax.dot_general(qc, c, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s += jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    s = s * (sq[:, None] * sk[None, :]) * softmax_scale            # [H, bn]
+
+    tok = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = tok < seq_lens_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    # --- online softmax ---------------------------------------------------
+    m_prev, l_prev, sp_prev = m_ref[...], l_ref[...], sp_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))               # [H]
+    e = jnp.exp(s - m_new[:, None])
+    e = jnp.where(valid, e, 0.0)
+
+    # --- Key Step 2: scale fusion + block-wise dynamic P quantization -----
+    p_fused = e * sk[None, :]
+    p8, sp_new = _quantize_block(p_fused, fmt, qmax)
+
+    # --- implicit dequantization (Eqs. 12-13) ------------------------------
+    corr = jnp.exp(m_prev - m_new) * (sp_prev / sp_new)            # [H]
+    l_ref[...] = l_prev * corr + jnp.sum(e, axis=-1) / sp_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p8, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    sp_ref[...] = sp_new
+
+    @pl.when(j == nblocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = acc_ref[...] / l[:, None]                       # sigma_p cancels
+        lse_ref[0] = m_ref[...] + jnp.log(sp_ref[...] * l)
+
+
+def mla_decode_pallas(
+    q_c8: jax.Array,        # [B, H, d_c] storage dtype
+    q_r: jax.Array,         # [B, H, d_r] f32 (pre-divided by sigma_q)
+    sigma_q: jax.Array,     # [B, H] f32
+    content: jax.Array,     # [B, N, d_c]
+    rope: jax.Array,        # [B, N, d_r]
+    sigma_k: jax.Array,     # [B, N] f32
+    seq_lens: jax.Array,    # [B] int32
+    *,
+    softmax_scale: float,
+    block_n: int = 128,
+    fmt: str = "fp8_e4m3",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Contiguous-cache SnapMLA decode. Returns (o [B,H,d_c] f32, lse [B,H])."""
+    B, H, d_c = q_c8.shape
+    d_r = q_r.shape[-1]
+    N = content.shape[1]
+    assert N % block_n == 0, (N, block_n)
+    nblocks = N // block_n
+    qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+
+    kernel = functools.partial(
+        _mla_decode_kernel, softmax_scale=softmax_scale, block_n=block_n,
+        fmt=fmt, qmax=qmax, paged=False)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, H, d_c), lambda b, j, sl: (b, 0, 0)),
+            pl.BlockSpec((1, H, d_r), lambda b, j, sl: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, sl: (b, 0)),
+            pl.BlockSpec((1, block_n, d_c), lambda b, j, sl: (b, j, 0)),
+            pl.BlockSpec((1, block_n, d_r), lambda b, j, sl: (b, j, 0)),
+            pl.BlockSpec((1, block_n), lambda b, j, sl: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, d_c), lambda b, j, sl: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, sl: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, d_c), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, d_c), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seq_lens, q_c8, q_r, sigma_q, content, rope, sigma_k)
+
+
+def mla_decode_paged_pallas(
+    q_c8: jax.Array,        # [B, H, d_c]
+    q_r: jax.Array,         # [B, H, d_r]
+    sigma_q: jax.Array,     # [B, H]
+    content_pool: jax.Array,  # [n_pages, page, d_c]
+    rope_pool: jax.Array,     # [n_pages, page, d_r]
+    scale_pool: jax.Array,    # [n_pages, page]
+    page_table: jax.Array,    # [B, P] int32
+    seq_lens: jax.Array,      # [B]
+    *,
+    softmax_scale: float,
+    fmt: str = "fp8_e4m3",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Paged-pool SnapMLA decode: the page table is scalar-prefetched and
+    drives the BlockSpec index maps (TPU-native PagedAttention)."""
+    B, H, d_c = q_c8.shape
+    d_r = q_r.shape[-1]
+    n_pages, page, _ = content_pool.shape
+    P = page_table.shape[1]
+    qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # seq_lens, page_table
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, H, d_c), lambda b, j, sl, pt: (b, 0, 0)),
+            pl.BlockSpec((1, H, d_r), lambda b, j, sl, pt: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, sl, pt: (b, 0)),
+            # the page table drives the DMA source: TPU-native PagedAttention
+            pl.BlockSpec((1, page, d_c), lambda b, j, sl, pt: (pt[b, j], 0, 0)),
+            pl.BlockSpec((1, page, d_r), lambda b, j, sl, pt: (pt[b, j], 0, 0)),
+            pl.BlockSpec((1, page), lambda b, j, sl, pt: (pt[b, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, d_c), lambda b, j, sl, pt: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, sl, pt: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, d_c), jnp.float32),
+        ],
+    )
+
+    def kernel_paged(sl_ref, pt_ref, *rest):
+        return _paged_body(sl_ref, pt_ref, *rest,
+                           softmax_scale=softmax_scale, page=page, fmt=fmt, qmax=qmax)
+
+    return pl.pallas_call(
+        kernel_paged,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, d_c), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seq_lens, page_table, q_c8, q_r, sigma_q, content_pool, rope_pool, scale_pool)
+
+
+def _paged_body(seq_lens_ref, page_table_ref, q_c_ref, q_r_ref, sigma_q_ref,
+                content_ref, rope_ref, sigma_k_ref, o_ref, lse_ref,
+                m_ref, l_ref, sp_ref, acc_ref, *,
+                softmax_scale, page, fmt, qmax):
+    # identical math to _mla_decode_kernel, with 3D (1, page, d) blocks
+    del page_table_ref  # only used by the index maps
+    _mla_decode_kernel(
+        seq_lens_ref, q_c_ref, q_r_ref, sigma_q_ref,
+        content_ref, rope_ref, sigma_k_ref, o_ref, lse_ref,
+        m_ref, l_ref, sp_ref, acc_ref,
+        softmax_scale=softmax_scale, block_n=page, fmt=fmt, qmax=qmax,
+        paged=False)

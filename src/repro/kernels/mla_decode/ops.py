@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the SnapMLA MLA decode kernel.
+
+``snapmla_decode`` consumes a quantized MLACache directly; handles padding to
+block multiples and selects kernel vs pure-jnp reference path. On CPU the
+kernel runs in interpret mode; on TPU set interpret=False.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kvcache import MLACache, PagedMLAPool
+from repro.kernels.mla_decode import kernel as _k
+from repro.kernels.mla_decode import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("softmax_scale", "block_n", "fmt", "use_kernel", "interpret"))
+def snapmla_decode(
+    q_c8: jax.Array,
+    q_r: jax.Array,
+    sigma_q: jax.Array,
+    cache: MLACache,
+    *,
+    softmax_scale: float,
+    block_n: int = 128,
+    fmt: str = "fp8_e4m3",
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Decode one token per sequence. Returns (o_latent [B,H,d_c] f32, lse)."""
+    N = cache.content.shape[1]
+    pad = (-N) % block_n
+    content, rope, scale = cache.content, cache.rope, cache.scale
+    if pad:
+        content = jnp.pad(content, ((0, 0), (0, pad), (0, 0)))
+        rope = jnp.pad(rope, ((0, 0), (0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad)), constant_values=1.0)
+    args = (q_c8, q_r.astype(jnp.float32), sigma_q, content,
+            rope.astype(jnp.float32), scale, cache.seq_lens)
+    if use_kernel:
+        return _k.mla_decode_pallas(
+            *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
+            interpret=interpret)
+    return _ref.snapmla_decode_pipeline_ref(
+        *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
+
+
+@partial(jax.jit, static_argnames=("softmax_scale", "fmt", "interpret"))
+def snapmla_decode_paged(
+    q_c8: jax.Array,
+    q_r: jax.Array,
+    sigma_q: jax.Array,
+    pool: PagedMLAPool,
+    *,
+    softmax_scale: float,
+    fmt: str = "fp8_e4m3",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    return _k.mla_decode_paged_pallas(
+        q_c8, q_r.astype(jnp.float32), sigma_q,
+        pool.content, pool.rope.astype(jnp.float32), pool.scale,
+        pool.page_table, pool.seq_lens,
+        softmax_scale=softmax_scale, fmt=fmt, interpret=interpret)

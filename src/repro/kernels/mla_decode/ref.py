@@ -1,0 +1,161 @@
+"""Pure-jnp oracle for the SnapMLA FP8 MLA decode pipeline.
+
+Two references:
+
+  * ``snapmla_decode_pipeline_ref`` — bit-faithful emulation of the quantized
+    block-wise pipeline (paper §3.2.3 + Appendix D, Eqs. 12-13): online
+    softmax, per-token V-scale fusion, block-wise dynamic P quantization, and
+    implicit dequantization via scale-aware accumulation. The Pallas kernel
+    must match this to ~1e-5 (same arithmetic, different schedule).
+  * the exact dequantize-first oracle lives in core/attention.py
+    (``mla_decode_dequant_ref``) and bounds the *quantization* error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def snapmla_decode_pipeline_ref(
+    q_c8: jax.Array,       # [B, H, d_c] quantized content query (storage dtype)
+    q_r: jax.Array,        # [B, H, d_r] rope query, PRE-DIVIDED by sigma_q
+    sigma_q: jax.Array,    # [B, H] per-(token,head) content scale of q
+    content: jax.Array,    # [B, N, d_c] quantized latent cache (storage dtype)
+    rope: jax.Array,       # [B, N, d_r] rope keys, PRE-DIVIDED by sigma_k
+    sigma_k: jax.Array,    # [B, N] per-token content scale of the cache
+    seq_lens: jax.Array,   # [B]
+    *,
+    softmax_scale: float,
+    block_n: int = 128,
+    fmt: quant.QuantFormat = "fp8_e4m3",
+    p_quant: bool = True,  # False => scale-fused but unquantized P (ablation)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (o [B, H, d_c] f32, lse [B, H] f32)."""
+    B, H, d_c = q_c8.shape
+    N = content.shape[1]
+    assert N % block_n == 0, (N, block_n)
+    nblocks = N // block_n
+    qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+
+    qc = q_c8.astype(jnp.float32)
+    qr = q_r.astype(jnp.float32)
+
+    def one_batch(qc_b, qr_b, sq_b, c_b, r_b, sk_b, n_b):
+        # Key Step 1: uniform QK over [content | rope] then ONE rescale by
+        # sigma_q * sigma_k (the rope parts are pre-divided by the scales).
+        def body(carry, j):
+            m, l, sp, acc = carry
+            sl = jax.lax.dynamic_slice_in_dim(c_b, j * block_n, block_n, 0)
+            rl = jax.lax.dynamic_slice_in_dim(r_b, j * block_n, block_n, 0)
+            sk = jax.lax.dynamic_slice_in_dim(sk_b, j * block_n, block_n, 0)
+            s = (qc_b @ sl.astype(jnp.float32).T + qr_b @ rl.astype(jnp.float32).T)
+            s = s * (sq_b[:, None] * sk[None, :]) * softmax_scale     # [H, bn]
+            tok = j * block_n + jnp.arange(block_n)
+            s = jnp.where(tok[None, :] < n_b, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))               # [H]
+            e = jnp.exp(s - m_new[:, None])                           # [H, bn]
+            # Key Step 2: fuse per-token V scale (V == latent content cache).
+            p_fused = e * sk[None, :]
+            if p_quant and fmt != "none":
+                amax = jnp.max(jnp.abs(p_fused), axis=-1)
+                sp_new = jnp.maximum(amax, quant.EPS) / qmax          # [H]
+                p8 = quant._cast(p_fused / sp_new[:, None], fmt).astype(jnp.float32)
+            else:
+                sp_new = jnp.ones_like(m_new)
+                p8 = p_fused
+            corr = jnp.exp(m - m_new) * (sp / sp_new)                 # Eq. 12/13
+            l_new = l * corr + jnp.sum(e, axis=-1) / sp_new
+            acc_new = acc * corr[:, None] + p8 @ sl.astype(jnp.float32)
+            return (m_new, l_new, sp_new, acc_new), None
+
+        init = (
+            jnp.full((H,), -jnp.inf, jnp.float32),
+            jnp.zeros((H,), jnp.float32),
+            jnp.ones((H,), jnp.float32),
+            jnp.zeros((H, d_c), jnp.float32),
+        )
+        (m, l, sp, acc), _ = jax.lax.scan(body, init, jnp.arange(nblocks))
+        o = acc / l[:, None]                                           # sigma_p cancels
+        lse = m + jnp.log(sp * l)
+        return o, lse
+
+    return jax.vmap(one_batch)(qc, qr, sigma_q.astype(jnp.float32),
+                               content, rope, sigma_k.astype(jnp.float32), seq_lens)
+
+
+def snapmla_decode_parallel_ref(
+    q_c8: jax.Array,       # [B, H, d_c]
+    q_r: jax.Array,        # [B, H, d_r] (pre-divided by sigma_q)
+    sigma_q: jax.Array,    # [B, H]
+    content: jax.Array,    # [B, N, d_c]
+    rope: jax.Array,       # [B, N, d_r] (pre-divided by sigma_k)
+    sigma_k: jax.Array,    # [B, N]
+    seq_lens: jax.Array,   # [B]
+    *,
+    softmax_scale: float,
+    block_n: int = 128,
+    fmt: quant.QuantFormat = "fp8_e4m3",
+) -> tuple[jax.Array, jax.Array]:
+    """Parallel (two-pass flash-combine) form of the SnapMLA pipeline.
+
+    Mathematically identical to ``snapmla_decode_pipeline_ref`` (the online
+    accumulation is just an incremental evaluation of this combine; the
+    per-block sigma_p quantization is applied identically), but expressed as
+    batched einsums over all KV blocks at once — the preferred XLA lowering
+    for the pjit serve path, and while-loop-free so ``cost_analysis`` counts
+    every byte/FLOP (see launch/dryrun.py). Verified equal in tests.
+    """
+    B, H, d_c = q_c8.shape
+    N = content.shape[1]
+    assert N % block_n == 0
+    nb = N // block_n
+    qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+
+    qc = q_c8.astype(jnp.float32)
+    qr = q_r.astype(jnp.float32)
+    # one uniform QK over [content | rope] + single rescale (Key Step 1)
+    s = (jnp.einsum("bhc,bnc->bhn", qc, content.astype(jnp.float32))
+         + jnp.einsum("bhr,bnr->bhn", qr, rope.astype(jnp.float32)))
+    s = s * (sigma_q[:, :, None] * sigma_k[:, None, :]) * softmax_scale
+    mask = jnp.arange(N)[None, None, :] < seq_lens[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+
+    sb = s.reshape(B, H, nb, block_n)
+    m_k = jnp.max(sb, axis=-1)                                   # [B,H,nb]
+    e = jnp.exp(sb - m_k[..., None])
+    e = jnp.where(jnp.isfinite(sb), e, 0.0)
+    # Key Step 2: fuse per-token V scale, block-wise dynamic quantization
+    skb = sigma_k.reshape(B, 1, nb, block_n)
+    p_fused = e * skb
+    amax = jnp.max(jnp.abs(p_fused), axis=-1)
+    sp = jnp.maximum(amax, quant.EPS) / qmax
+    if fmt != "none":
+        p8 = quant._cast(p_fused / sp[..., None], fmt).astype(jnp.float32)
+    else:
+        sp = jnp.ones_like(sp)
+        p8 = p_fused
+    # per-block FP8 PV over the shared latent cache
+    vb = content.astype(jnp.float32).reshape(B, nb, block_n, d_c)
+    o_k = jnp.einsum("bhkn,bknc->bhkc", p8, vb)                  # [B,H,nb,dc]
+    l_k = jnp.sum(e, axis=-1)                                    # [B,H,nb]
+    # flash combine (identical to the telescoped Eq. 12-13 accumulation)
+    m_star = jnp.max(m_k, axis=-1, keepdims=True)
+    w = jnp.exp(m_k - m_star)                                    # [B,H,nb]
+    num = jnp.einsum("bhk,bhkc->bhc", w * sp, o_k)
+    den = jnp.einsum("bhk,bhk->bh", w, l_k)
+    o = num / den[..., None]
+    lse = m_star[..., 0] + jnp.log(den)
+    return o, lse
+
+
+def prepare_q(q_c: jax.Array, q_r: jax.Array, fmt: quant.QuantFormat = "fp8_e4m3"):
+    """Fused-Q-Quant reference: per-(token,head) scale + cast + rope prescale.
+
+    q_c [B, H, d_c] f32, q_r [B, H, d_r] -> (q_c8, q_r_scaled, sigma_q [B, H]).
+    """
+    if fmt == "none":
+        return q_c.astype(jnp.bfloat16), q_r.astype(jnp.float32), jnp.ones(q_c.shape[:-1], jnp.float32)
+    raq = quant.quantize_rope_aware(q_c, q_r, fmt, rope_dtype=jnp.float32)
+    return raq.q_content, raq.rope_scaled, raq.scale[..., 0]

@@ -1,0 +1,93 @@
+"""Fused-Fetch-Dequant (paper §3.3.1, third operator) — Pallas TPU kernel.
+
+For decode phases that need high-precision reuse of cached data (chunked
+prefill, prefix caching), the paper fuses the fetch of quantized KV pages
+with register-level dequantization, eliminating the two-step
+load-then-dequantize round trip through memory.
+
+TPU form: one pallas_call whose grid walks the cache pages; each page is
+DMA'd (fp8 content + prescaled bf16 rope + per-token scales), dequantized in
+VREGs, and written out as a contiguous BF16 [content | rope] chunk — the
+operand layout the chunked-prefill attention consumes. The HBM read side is
+the *quantized* bytes (the whole point: fetch traffic stays FP8-sized).
+
+``chunked_prefill_attention`` uses it to attend a new prompt chunk against
+the quantized prefix cache + itself, combining via flash-style lse math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.kvcache import MLACache
+
+
+def _fetch_dequant_kernel(content_ref, rope_ref, scale_ref, out_ref, *, d_c):
+    c = content_ref[0].astype(jnp.float32)              # [page, d_c]
+    r = rope_ref[0].astype(jnp.float32)                 # [page, d_r]
+    s = scale_ref[0].astype(jnp.float32)[:, None]       # [page, 1]
+    out_ref[0, :, :d_c] = (c * s).astype(out_ref.dtype)
+    out_ref[0, :, d_c:] = (r * s).astype(out_ref.dtype)  # undo Eq.-6 prescale
+
+
+def fetch_dequant_pallas(cache: MLACache, *, page: int = 128,
+                         out_dtype=jnp.bfloat16, interpret: bool = True):
+    """MLACache -> dequantized [B, N, d_c + d_r] keys (content|rope) in bf16."""
+    B, N, d_c = cache.content.shape
+    d_r = cache.rope.shape[-1]
+    assert N % page == 0
+    kernel = functools.partial(_fetch_dequant_kernel, d_c=d_c)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, N // page),
+        in_specs=[
+            pl.BlockSpec((1, page, d_c), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, page, d_r), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, page), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, page, d_c + d_r), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, d_c + d_r), out_dtype),
+        interpret=interpret,
+    )(cache.content, cache.rope, cache.scale)
+
+
+def fetch_dequant_ref(cache: MLACache, out_dtype=jnp.bfloat16):
+    """Pure-jnp oracle."""
+    c = cache.content.astype(jnp.float32) * cache.scale[..., None]
+    r = cache.rope.astype(jnp.float32) * cache.scale[..., None]
+    return jnp.concatenate([c, r], axis=-1).astype(out_dtype)
+
+
+def chunked_prefill_attention(
+    q_lat: jax.Array,        # [B, C, H, d_c] absorbed queries for the chunk
+    q_rope: jax.Array,       # [B, C, H, d_r]
+    cache: MLACache,         # quantized prefix (seq_lens = prefix length)
+    chunk_start: int | jax.Array,
+    *,
+    softmax_scale: float,
+    page: int = 128,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Attend a prompt chunk against [quantized prefix] + [itself], causal.
+
+    Returns o_latent [B, C, H, d_c] (f32). The prefix keys are produced by the
+    Fused-Fetch-Dequant kernel (single fused pass over the FP8 cache).
+    """
+    B, C, H, d_c = q_lat.shape
+    kv = (fetch_dequant_pallas(cache, page=page, interpret=interpret)
+          if use_kernel else fetch_dequant_ref(cache)).astype(jnp.float32)
+    q = jnp.concatenate([q_lat, q_rope], axis=-1).astype(jnp.float32)
+    s = jnp.einsum("bchd,bnd->bchn", q, kv) * softmax_scale
+    n = kv.shape[1]
+    qpos = chunk_start + jnp.arange(C)
+    valid = (jnp.arange(n)[None, :] < cache.seq_lens[:, None])[:, None, :] \
+        & (jnp.arange(n)[None, None, :] <= qpos[None, :, None])
+    s = jnp.where(valid[:, :, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)            # fully-masked rows
+    content = kv[..., :d_c]
+    return jnp.einsum("bchn,bnd->bchd", p, content)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the fused token-preparation kernels (paper §3.3.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def fused_q_quant_ref(q: jax.Array, d_c: int, fmt: str = "fp8_e4m3"):
+    """Fused-Q-Quant: per-(token,head) scale + cast + RoPE-domain alignment.
+
+    q [B, H, d_c + d_r] f32 -> (q_c8 [B,H,d_c], q_r_scaled [B,H,d_r] f32,
+    sigma_q [B,H] f32). One logical kernel (statistics + conversion + scale
+    injection), replacing the paper's three-step sequential workflow.
+    """
+    q_c, q_r = q[..., :d_c], q[..., d_c:]
+    raq = quant.quantize_rope_aware(q_c, q_r, fmt, rope_dtype=jnp.float32)
+    return raq.q_content, raq.rope_scaled, raq.scale[..., 0]
+
+
+def fused_k_append_ref(
+    content: jax.Array,     # [B, N, d_c] cache (storage dtype)
+    rope: jax.Array,        # [B, N, d_r]
+    scale: jax.Array,       # [B, N]
+    c_kv: jax.Array,        # [B, d_c] new latent entries (f32)
+    k_r: jax.Array,         # [B, d_r]
+    seq_lens: jax.Array,    # [B] write position
+    fmt: str = "fp8_e4m3",
+):
+    """Fused-K-Append: quantize + scale-align + in-place cache write."""
+    raq = quant.quantize_rope_aware(c_kv, k_r, fmt, rope_dtype=jnp.float32)
+
+    def upd(buf, val, idx):
+        return jax.lax.dynamic_update_slice(buf, val[None], (idx,) + (0,) * (buf.ndim - 1))
+
+    content = jax.vmap(upd)(content, raq.q_content.astype(content.dtype), seq_lens)
+    rope = jax.vmap(upd)(rope, raq.rope_scaled.astype(rope.dtype), seq_lens)
+    scale = jax.vmap(upd)(scale, raq.scale[..., 0], seq_lens)
+    return content, rope, scale

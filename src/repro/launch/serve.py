@@ -1,0 +1,98 @@
+"""Serving launcher: batched prefill + decode with the SnapMLA FP8 KV cache.
+
+CPU-scale usage (real generation on the host mesh, greedy sampling):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch mla-7b --smoke --batch 4 --prompt-len 32 --gen 16 --fmt fp8_e4m3
+
+This is deliverable (b)'s end-to-end serving driver: it exercises prefill
+(bulk RoPE-aware per-token quantization into the cache), then the quantized
+decode pipeline per step, and reports decode throughput + agreement with the
+BF16 baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+
+
+def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
+             aux_embed=None, greedy: bool = True):
+    """prompts [B, S] -> (generated tokens [B, gen_steps], decode tok/s)."""
+    mesh = mesh or make_host_mesh(1)
+    B, S = prompts.shape
+    max_len = S + gen_steps + cfg.page_size
+    prefill_fn = jax.jit(ST.make_prefill_step(cfg))
+    decode_fn = jax.jit(ST.make_decode_step(cfg))
+
+    state = T.init_decode_state(cfg, B, max_len)
+    logits, state = prefill_fn(params, prompts, state, *(
+        (aux_embed,) if aux_embed is not None else ()))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    outs = [tok]
+    # warm up decode compile before timing
+    pos = jnp.full((B,), S, jnp.int32)
+    logits, state = decode_fn(params, tok, state, pos)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs.append(tok)
+    jax.block_until_ready(tok)
+
+    t0 = time.time()
+    for i in range(1, gen_steps - 1):
+        pos = jnp.full((B,), S + i, jnp.int32)
+        logits, state = decode_fn(params, tok, state, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    toks_per_s = B * max(gen_steps - 2, 1) / max(dt, 1e-9)
+    return jnp.stack(outs, axis=1), toks_per_s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mla-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--fmt", default="fp8_e4m3",
+                    choices=["fp8_e4m3", "int8", "none"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, kv_fmt=args.fmt)
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    aux = (jax.random.normal(key, (args.batch, cfg.n_aux_tokens, cfg.d_model))
+           if cfg.n_aux_tokens else None)
+
+    toks, tps = generate(cfg, params, prompts, args.gen, aux_embed=aux)
+    print(f"[serve] {cfg.name} fmt={args.fmt}: generated {toks.shape} "
+          f"at {tps:.1f} tok/s (decode)")
+
+    if args.fmt != "none":
+        cfg_b = dataclasses.replace(cfg, kv_fmt="none")
+        toks_b, _ = generate(cfg_b, params, prompts, args.gen, aux_embed=aux)
+        agree = float(jnp.mean((toks == toks_b).astype(jnp.float32)))
+        print(f"[serve] token agreement vs BF16 pipeline: {agree * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""Sharding rules: parameter / optimizer / decode-state / batch PartitionSpecs.
+
+Policy (DESIGN.md §6): 2-D sharding — FSDP over the ('pod','data') axes,
+tensor/expert parallelism over 'model'. Rules are keyed on parameter *names*
+(the finite set emitted by models/*.py); scanned parameters get a leading
+unsharded superblock axis. Uneven dimensions are allowed (GSPMD pads), but
+KV-head axes smaller than the model axis are deliberately swapped for a
+head-dim sharding to avoid padding waste on caches.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axis_names, model_axis_size
+
+
+def _rules(dp, model, model_size, attn_fallback="replicate"):
+    """name -> function(shape) -> PartitionSpec (without scan prefix).
+
+    attn_fallback: what to do when a head count does not divide the model
+    axis. "replicate" (train default): keep attention weights replicated over
+    'model' — head-dim sharding would turn every QK/PV matmul into a
+    logits-sized partial-sum all-reduce (measured 1.3 TB/chip/step on
+    llama3.2-3b train_4k — EXPERIMENTS §Perf). "shard_dh" (decode default):
+    shard the head_dim — at one-token decode the induced all-reduce is only
+    [B, H, N]-sized and it keeps the big KV cache sharded 16-way.
+    """
+    def attn_qkv(shape):     # [d, H, dh]
+        h = shape[-2]
+        if h % model_size == 0:
+            return P(dp, model, None)
+        if attn_fallback == "shard_dh" and shape[-1] % model_size == 0:
+            return P(dp, None, model)
+        return P(dp, None, None)
+    def attn_bias(shape):    # [H, dh]
+        h = shape[-2]
+        if h % model_size == 0:
+            return P(model, None)
+        if attn_fallback == "shard_dh" and shape[-1] % model_size == 0:
+            return P(None, model)
+        return P(None, None)
+    def attn_wo(shape):      # [H, dh, d]
+        h = shape[-3]
+        if h % model_size == 0:
+            return P(model, None, dp)
+        if attn_fallback == "shard_dh" and shape[-2] % model_size == 0:
+            return P(None, model, dp)
+        return P(None, None, dp)
+
+    return {
+        # embeddings
+        "embed": lambda s: P(model, dp),
+        "unembed": lambda s: P(model, dp),
+        # attention
+        "wq": attn_qkv, "wk": attn_qkv, "wv": attn_qkv,
+        "bq": attn_bias, "bk": attn_bias, "bv": attn_bias,
+        "wo": attn_wo,
+        # dense MLP (2-D) and MoE expert-stacked (3-D). EP shards the expert
+        # axis when divisible; otherwise fall back to TP on the ffn axis
+        # (standard when tp > n_experts, e.g. mixtral's 8 experts on 16-way).
+        "w_gate": lambda s: (
+            (P(model, dp, None) if s[0] % model_size == 0 else P(None, dp, model))
+            if len(s) == 3 else P(dp, model)),
+        "w_up": lambda s: (
+            (P(model, dp, None) if s[0] % model_size == 0 else P(None, dp, model))
+            if len(s) == 3 else P(dp, model)),
+        "w_down": lambda s: (
+            (P(model, None, dp) if s[0] % model_size == 0 else P(None, model, dp))
+            if len(s) == 3 else P(model, dp)),
+        # MoE (3-D expert-stacked variants handled above via len(s) == 3: EP on E)
+        "w_router": lambda s: P(dp, None),
+        "shared_gate": lambda s: P(dp, model),
+        "shared_up": lambda s: P(dp, model),
+        "shared_down": lambda s: P(model, dp),
+        # MLA
+        "w_dq": lambda s: P(dp, None),
+        "q_norm": lambda s: P(None),
+        "w_uq": lambda s: P(dp, "model", None) if s[-2] % model_size == 0 else P(dp, None, None),
+        "w_dkv": lambda s: P(dp, None),
+        "kv_norm": lambda s: P(None),
+        "w_kr": lambda s: P(dp, None),
+        "w_uk": lambda s: P(None, model, None) if s[-2] % model_size == 0 else P(None, None, None),
+        "w_uv": lambda s: P(None, model, None) if s[-2] % model_size == 0 else P(None, None, None),
+        "w_o": attn_wo,
+        # RG-LRU
+        "w_gate_branch": lambda s: P(dp, model),
+        "w_in": lambda s: P(dp, model),
+        "conv_w": lambda s: P(None, model),
+        "conv_b": lambda s: P(model),
+        "w_a": lambda s: P(None, model),
+        "b_a": lambda s: P(model),
+        "w_x": lambda s: P(None, model),
+        "b_x": lambda s: P(model),
+        "log_lambda": lambda s: P(model),
+        "w_out": lambda s: P(model, dp) if len(s) == 2 else P(None, model, dp),
+        # xLSTM — w_q/w_k feed the dhk contraction (q.k and C.q): sharding
+        # them over 'model' would all-reduce the [B,T,S,H] score tensor every
+        # layer. Keep dhk replicated; shard the value dim (dhv) instead.
+        "w_q": lambda s: P(dp, None, None),
+        "w_k": lambda s: P(dp, None, None),
+        "w_v": lambda s: P(dp, None, model),
+        "w_i": lambda s: P(dp, None),
+        "w_f": lambda s: P(dp, None),
+        "b_i": lambda s: P(None),
+        "b_f": lambda s: P(None),
+        "w_o_gate": lambda s: P(dp, None, model),
+        "gn_gain": lambda s: P(None, None),
+        "w": lambda s: P(None, dp, None, model),       # slstm input proj [4,d,H,dh]
+        "r": lambda s: P(None),                        # slstm recurrent (small)
+        "b": lambda s: P(None),
+        # norms / scalars
+        "ln1": lambda s: P(None), "ln2": lambda s: P(None),
+        "ln_cross": lambda s: P(None), "ln_f": lambda s: P(None),
+        "enc_ln_f": lambda s: P(None), "xgate": lambda s: P(None),
+    }
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in data_axis_names(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def dp_axes_for(batch_size: int, mesh):
+    """Batch axes spec: shard over ('pod','data') only when divisible —
+    tiny batches (long_500k's global_batch=1) are replicated instead, with
+    the model axis still sharding heads/head-dim (DESIGN.md §6)."""
+    if batch_size % dp_size(mesh) != 0:
+        return None
+    dp = data_axis_names(mesh)
+    return dp[0] if len(dp) == 1 else dp
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        out = 1
+        for a in axes:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axes]
+
+
+def sanitize_pspec(ps, shape, mesh):
+    """pjit *argument* shardings require exact divisibility — drop any axis
+    whose mesh size does not divide the dimension (falls back to replication
+    on that dim; e.g. granite's 49155 vocab on a 16-way model axis)."""
+    parts = list(ps) + [None] * (len(shape) - len(ps))
+    out = []
+    for dim, axes in zip(shape, parts):
+        out.append(axes if axes is None or dim % _axes_size(mesh, axes) == 0
+                   else None)
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    if hasattr(last, "name"):        # GetAttrKey (NamedTuple field)
+        return last.name
+    if hasattr(last, "key"):         # DictKey
+        return str(last.key)
+    return ""
+
+
+def _is_scanned(path) -> bool:
+    for p in path:
+        if hasattr(p, "key") and str(getattr(p, "key", "")) in ("scanned", "encoder"):
+            return True
+    return False
+
+
+def param_pspecs(params, mesh, weight_stationary: bool = False,
+                 attn_fallback: str = "replicate"):
+    """PartitionSpec pytree for a model/optimizer parameter tree.
+
+    weight_stationary=True replicates weights over the data axes and keeps
+    only the 'model' (TP) sharding — the paper's DP x TP *serving* layout
+    (no per-step FSDP weight all-gathers). Default (False) is the 2-D
+    FSDP x TP training layout.
+    """
+    if weight_stationary:
+        dp = None
+    else:
+        dp = data_axis_names(mesh)
+        dp = dp[0] if len(dp) == 1 else dp
+    msize = model_axis_size(mesh)
+    rules = _rules(dp, "model", msize, attn_fallback)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        scanned = _is_scanned(path)
+        shape = leaf.shape
+        core_shape = shape[1:] if scanned else shape
+        if name in rules and len(core_shape) > 0:
+            ps = rules[name](core_shape)
+        else:
+            ps = P()
+        if scanned:
+            ps = P(None, *ps)
+        parts = list(ps)[: len(shape)]
+        parts += [None] * (len(shape) - len(parts))
+        return sanitize_pspec(P(*parts), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def state_pspecs(state, mesh, cfg):
+    """Decode-state PartitionSpecs: batch over dp; heads (or head-dim) over model."""
+    msize = model_axis_size(mesh)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        scanned = _is_scanned(path)
+        core = shape[1:] if scanned else shape
+        dp = dp_axes_for(core[0], mesh) if len(core) else None
+        # GQA cache leaves
+        if name in ("k", "v") and len(core) == 4:          # [B,N,Hkv,dh]
+            ps = P(dp, None, "model", None) if core[2] % msize == 0 \
+                else P(dp, None, None, "model")
+        elif name in ("k_scale", "v_scale") and len(core) == 3:
+            ps = P(dp, None, "model") if core[2] % msize == 0 else P(dp, None, None)
+        elif name == "slot_pos":
+            ps = P(dp, None)
+        elif name in ("seq_lens",):
+            ps = P(dp)
+        # MLA cache leaves (latent dim replicated over model; DESIGN §6)
+        elif name == "content" and len(core) == 3:         # [B,N,d_c]
+            ps = P(dp, None, None)
+        elif name == "rope" and len(core) == 3:
+            ps = P(dp, None, None)
+        elif name == "scale" and len(core) == 2:
+            ps = P(dp, None)
+        # recurrent states
+        elif name == "h" and len(core) == 2:               # rglru [B, d_rnn]
+            ps = P(dp, "model")
+        elif name == "conv":                               # [B, W-1, d_rnn]
+            ps = P(dp, None, "model")
+        elif name == "c" and len(core) == 4:               # mlstm [B,H,dhk,dhv]
+            ps = P(dp, "model", None, None) if core[1] % msize == 0 \
+                else P(dp, None, "model", None)
+        elif name in ("c", "n", "h") and len(core) == 3:   # [B,H,dh]
+            ps = P(dp, None, "model")
+        elif name == "m" and len(core) == 2:               # [B,H]
+            ps = P(dp, None)
+        elif len(core) >= 1:
+            ps = P(dp, *([None] * (len(core) - 1)))
+        else:
+            ps = P()
+        if scanned:
+            ps = P(None, *ps)
+        parts = list(ps)[: len(shape)]
+        parts += [None] * (len(shape) - len(parts))
+        return sanitize_pspec(P(*parts), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def batch_pspecs(batch, mesh):
+    def spec(path, leaf):
+        dp = dp_axes_for(leaf.shape[0], mesh) if leaf.ndim else None
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def to_named(pspecs, mesh):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,129 @@
+"""Step functions (train / prefill / decode) + ShapeDtypeStruct input specs.
+
+These are the units the dry-run lowers and the launchers run. All are pure
+functions of (params, state, batch) so they jit/pjit cleanly; input_specs
+builds allocation-free stand-ins for every (architecture x input-shape) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+from repro.optim.schedule import warmup_cosine
+
+# (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    seq, gb, kind = SHAPES[shape]
+    if kind == "decode" and not cfg.has_decoder:
+        return False, "encoder-only arch has no decode step"
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch; long_500k needs sub-quadratic attention (DESIGN.md §5)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    warmup_steps: int = 100, total_steps: int = 10000,
+                    remat: bool = True):
+    def train_step(params, opt_state, batch, step):
+        def lfn(p):
+            return T.loss_fn(p, cfg, batch["tokens"], batch["labels"],
+                             batch.get("aux_embed"), remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+        lr_scale = warmup_cosine(step, warmup_steps=warmup_steps,
+                                 total_steps=total_steps)
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, opt_state,
+                                               params, lr_scale)
+        return new_params, new_opt, {**metrics, **om, "loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, state, aux_embed=None):
+        return T.prefill(params, cfg, tokens, state, aux_embed)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, state, pos):
+        return T.decode_step(params, cfg, token, state, pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs (no allocation — dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_spec(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def state_spec(cfg: ModelConfig, batch: int, max_len: int):
+    s = jax.eval_shape(lambda: T.init_decode_state(cfg, batch, max_len))
+    # aux embeddings live in the state after prefill
+    if cfg.n_aux_tokens:
+        s = dict(s)
+        s["aux"] = _sds((batch, cfg.n_aux_tokens, cfg.d_model), jnp.float32)
+    return s
+
+
+def input_specs(cfg: ModelConfig, shape: str, param_dtype=jnp.bfloat16):
+    """Returns (step_kind, args tuple of ShapeDtypeStructs)."""
+    seq, gb, kind = SHAPES[shape]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape}: {why}")
+    params = params_spec(cfg, param_dtype)
+
+    if kind == "train":
+        opt = jax.eval_shape(init_adamw, params)
+        batch = {"tokens": _sds((gb, seq), jnp.int32),
+                 "labels": _sds((gb, seq), jnp.int32)}
+        if cfg.n_aux_tokens:
+            batch["aux_embed"] = _sds((gb, cfg.n_aux_tokens, cfg.d_model), jnp.float32)
+        return "train", (params, opt, batch, _sds((), jnp.int32))
+
+    if kind == "prefill":
+        state = jax.eval_shape(lambda: T.init_decode_state(cfg, gb, seq))
+        args = (params, _sds((gb, seq), jnp.int32), state)
+        if cfg.n_aux_tokens:
+            args = args + (_sds((gb, cfg.n_aux_tokens, cfg.d_model), jnp.float32),)
+        return "prefill", args
+
+    # decode: one new token against a cache of `seq`
+    state = state_spec(cfg, gb, seq)
+    return "decode", (params, _sds((gb,), jnp.int32), state, _sds((gb,), jnp.int32))
+
+
+def step_fn_for(cfg: ModelConfig, kind: str, remat: bool = True):
+    if kind == "train":
+        return make_train_step(cfg, remat=remat)
+    if kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_decode_step(cfg)

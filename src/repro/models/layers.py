@@ -1,0 +1,284 @@
+"""Common transformer layers: norms, RoPE, GQA attention, MLPs, embeddings.
+
+Pure-functional JAX (params are pytrees of arrays); every op is pjit-friendly.
+Weight layouts are chosen so TP sharding rules in launch/sharding.py can key on
+axis position (heads / ffn axes are always the sharded 'model' axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * gain.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gain: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gain.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """positions [...,] -> (sin, cos) each [..., dim] (half-split convention)."""
+    half = dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [..., half]
+    ang = jnp.concatenate([ang, ang], axis=-1)            # [..., dim]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., dim]; sin/cos broadcastable to x. Half-split rotate."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate([-x2, x1], axis=-1)
+    return (x.astype(jnp.float32) * cos + rotated.astype(jnp.float32) * sin).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (training / prefill path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False            # qwen2.5 style
+    window: int = 0                   # 0 = full causal; >0 = sliding window
+    use_rope: bool = True
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array            # [d, H, dh]
+    wk: jax.Array            # [d, Hkv, dh]
+    wv: jax.Array            # [d, Hkv, dh]
+    wo: jax.Array            # [H, dh, d]
+    bq: jax.Array | None     # [H, dh]
+    bk: jax.Array | None
+    bv: jax.Array | None
+
+
+def init_attn_params(key, cfg: AttnConfig, dtype=jnp.float32) -> AttnParams:
+    ks = jax.random.split(key, 4)
+    d, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def init(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+    bias = (lambda s: jnp.zeros(s, dtype)) if cfg.qkv_bias else (lambda s: None)
+    return AttnParams(
+        wq=init(ks[0], (d, H, dh), d),
+        wk=init(ks[1], (d, Hk, dh), d),
+        wv=init(ks[2], (d, Hk, dh), d),
+        wo=init(ks[3], (H, dh, d), H * dh),
+        bq=bias((H, dh)), bk=bias((Hk, dh)), bv=bias((Hk, dh)),
+    )
+
+
+def project_qkv(params: AttnParams, cfg: AttnConfig, x: jax.Array, positions: jax.Array):
+    """x [B,S,d] -> q [B,S,H,dh], k,v [B,S,Hkv,dh] (RoPE applied to q,k)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, params.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, params.wv)
+    if params.bq is not None:
+        q, k, v = q + params.bq, k + params.bk, v + params.bv
+    if cfg.use_rope:
+        sin, cos = rope_freqs(positions, cfg.d_head, cfg.rope_theta)
+        sin, cos = sin[..., None, :], cos[..., None, :]
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def sdpa(
+    q: jax.Array,             # [B, Sq, H, dh]
+    k: jax.Array,             # [B, Sk, Hkv, dh]
+    v: jax.Array,             # [B, Sk, Hkv, dh]
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jax.Array = 0,  # absolute position of q[0] (for chunked use)
+    logit_dtype=jnp.float32,
+) -> jax.Array:
+    """Reference scaled-dot-product attention with GQA head sharing + SWA."""
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(logit_dtype), k.astype(logit_dtype))
+    logits = logits / jnp.sqrt(dh).astype(logit_dtype)
+    Sk = k.shape[1]
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(logit_dtype))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def flash_sdpa(
+    q: jax.Array,             # [B, Sq, H, dh]
+    k: jax.Array,             # [B, Sk, Hkv, dh]
+    v: jax.Array,             # [B, Sk, Hkv, dh]
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int | jax.Array = 0,
+    block_k: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Memory-efficient attention: lax.scan over KV blocks with online softmax.
+
+    Peak intermediate is O(Sq * block_k) instead of O(Sq * Sk) — this is the
+    training/prefill attention used by the full-model forward (the HLO the
+    dry-run rooflines is flash-structured, like a production framework).
+    """
+    B, Sq, H, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if Sk % block_k:
+        pad = block_k - Sk % block_k
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblocks = k.shape[1] // block_k
+    g = H // Hkv
+    qg = (q.reshape(B, Sq, Hkv, g, dh).astype(jnp.float32) / jnp.sqrt(dh))
+    qpos = jnp.arange(Sq) + q_offset
+
+    kb = k.reshape(B, nblocks, block_k, Hkv, dh)
+    vb = v.reshape(B, nblocks, block_k, Hkv, dh)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        j, k_j, v_j = inputs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_j.astype(jnp.float32))
+        kpos = j * block_k + jnp.arange(block_k)
+        valid = kpos[None, :] < Sk
+        if causal:
+            valid &= kpos[None, :] <= qpos[:, None]
+        if window:
+            valid &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        e = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(e, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", e, v_j.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, Hkv, g, Sq), -jnp.inf, jnp.float32),
+        jnp.zeros((B, Hkv, g, Sq), jnp.float32),
+        jnp.zeros((B, Hkv, g, Sq, dh), jnp.float32),
+    )
+    if unroll:
+        carry = init
+        for j in range(nblocks):
+            carry, _ = body(carry, (jnp.int32(j), kb[:, j], vb[:, j]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, init,
+            (jnp.arange(nblocks), jnp.swapaxes(kb, 0, 1), jnp.swapaxes(vb, 0, 1)))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]              # [B,Hkv,g,Sq,dh]
+    o = jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(B, Sq, H, dh)
+    return o.astype(q.dtype)
+
+
+def attention_block(
+    params: AttnParams, cfg: AttnConfig, x: jax.Array, positions: jax.Array,
+    causal: bool = True, use_flash: bool = True, unroll: bool = False,
+) -> jax.Array:
+    q, k, v = project_qkv(params, cfg, x, positions)
+    if use_flash:
+        o = flash_sdpa(q, k, v, causal=causal, window=cfg.window, unroll=unroll)
+    else:
+        o = sdpa(q, k, v, causal=causal, window=cfg.window)
+    return jnp.einsum("bshk,hkd->bsd", o, params.wo)
+
+
+def cross_attention_block(
+    params: AttnParams, cfg: AttnConfig, x: jax.Array, kv_src: jax.Array,
+) -> jax.Array:
+    """Cross attention: queries from x [B,Sq,d], keys/values from kv_src [B,Sk,d].
+
+    No RoPE, no causal mask (llama-vision / whisper style).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, params.wq)
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, params.wk)
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, params.wv)
+    if params.bq is not None:
+        q, k, v = q + params.bq, k + params.bk, v + params.bv
+    o = sdpa(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, params.wo)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+class MLPParams(NamedTuple):
+    w_gate: jax.Array | None  # [d, f] (None for plain GELU MLP)
+    w_up: jax.Array           # [d, f]
+    w_down: jax.Array         # [f, d]
+
+
+def init_mlp_params(key, d: int, f: int, gated: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+
+    def init(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+    return MLPParams(
+        w_gate=init(ks[0], (d, f), d) if gated else None,
+        w_up=init(ks[1], (d, f), d),
+        w_down=init(ks[2], (f, d), f),
+    )
+
+
+def mlp(params: MLPParams, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "gelu_tanh": lambda t: jax.nn.gelu(t, approximate=True)}[activation]
+    if params.w_gate is not None:
+        h = act(x @ params.w_gate) * (x @ params.w_up)
+    else:
+        h = act(x @ params.w_up)
+    return h @ params.w_down
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Tied unembedding: x [B,S,d] @ table.T -> [B,S,V] (f32 logits)."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), table.astype(jnp.float32))

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block =  x -> [linear -> GELU]  ⊙  [linear -> causal conv1d(w=4) -> RG-LRU] -> linear
+
+RG-LRU cell (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over the sequence (parallel depth log S);
+decoding is the O(1)-per-token recurrence. The state is NOT a KV cache, so
+the paper's quantization technique is N/A here (DESIGN.md §Arch-applicability)
+— state is kept in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+RGLRU_C = 8.0
+CONV_W = 4
+
+
+class RGLRUParams(NamedTuple):
+    w_gate_branch: jax.Array   # [d, d_rnn] (GELU branch)
+    w_in: jax.Array            # [d, d_rnn] (recurrent branch input)
+    conv_w: jax.Array          # [CONV_W, d_rnn] depthwise causal conv
+    conv_b: jax.Array          # [d_rnn]
+    w_a: jax.Array             # [d_rnn, d_rnn] recurrence-gate proj
+    b_a: jax.Array             # [d_rnn]
+    w_x: jax.Array             # [d_rnn, d_rnn] input-gate proj
+    b_x: jax.Array             # [d_rnn]
+    log_lambda: jax.Array      # [d_rnn] Λ parameter (softplus'd)
+    w_out: jax.Array           # [d_rnn, d]
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array               # [B, d_rnn] recurrent state (f32)
+    conv: jax.Array            # [B, CONV_W - 1, d_rnn] conv tail buffer
+
+
+def init_rglru_params(key, d: int, d_rnn: int, dtype=jnp.float32) -> RGLRUParams:
+    ks = jax.random.split(key, 7)
+
+    def init(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+    # Λ init so that a ~ U(0.9, 0.999)^c as in the Griffin paper
+    u = jax.random.uniform(ks[6], (d_rnn,), jnp.float32, 0.9, 0.999)
+    log_lambda = jnp.log(jnp.expm1(-jnp.log(u)))  # softplus^{-1}(-log u)
+    return RGLRUParams(
+        w_gate_branch=init(ks[0], (d, d_rnn), d),
+        w_in=init(ks[1], (d, d_rnn), d),
+        conv_w=init(ks[2], (CONV_W, d_rnn), CONV_W),
+        conv_b=jnp.zeros((d_rnn,), dtype),
+        w_a=init(ks[3], (d_rnn, d_rnn), d_rnn),
+        b_a=jnp.zeros((d_rnn,), dtype),
+        w_x=init(ks[4], (d_rnn, d_rnn), d_rnn),
+        b_x=jnp.zeros((d_rnn,), dtype),
+        log_lambda=log_lambda.astype(dtype),
+        w_out=init(ks[5], (d_rnn, d), d_rnn),
+    )
+
+
+def init_rglru_state(batch: int, d_rnn: int) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, d_rnn), jnp.float32),
+        conv=jnp.zeros((batch, CONV_W - 1, d_rnn), jnp.float32),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """x [B,S,dr]; depthwise causal conv width CONV_W. tail: [B,CONV_W-1,dr]."""
+    pad = jnp.zeros((x.shape[0], CONV_W - 1, x.shape[2]), x.dtype) if tail is None else tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # [B, S+3, dr]
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(CONV_W))
+    return out + b, xp[:, -(CONV_W - 1):]                    # (y, new tail)
+
+
+def _gates(params: RGLRUParams, u: jax.Array):
+    r = jax.nn.sigmoid(u @ params.w_a + params.b_a)
+    i = jax.nn.sigmoid(u @ params.w_x + params.b_x)
+    log_a = -RGLRU_C * jax.nn.softplus(params.log_lambda.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+    return a, gated
+
+
+def rglru_block(params: RGLRUParams, x: jax.Array,
+                state: RGLRUState | None = None):
+    """Training/prefill: x [B,S,d] -> (y [B,S,d], final RGLRUState)."""
+    gate = jax.nn.gelu(x @ params.w_gate_branch)
+    u = x @ params.w_in
+    u, conv_tail = _causal_conv(u, params.conv_w, params.conv_b,
+                                None if state is None else state.conv)
+    a, gated = _gates(params, u.astype(jnp.float32))
+
+    h0 = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32) if state is None else state.h
+    # include h0 by folding it into the first step's additive term
+    gated = gated.at[:, 0].add(a[:, 0] * h0) if state is not None else gated
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = (h.astype(x.dtype) * gate) @ params.w_out
+    return y, RGLRUState(h=h[:, -1], conv=conv_tail)
+
+
+def rglru_step(params: RGLRUParams, x_t: jax.Array, state: RGLRUState):
+    """Decode: x_t [B, d] -> (y [B, d], new state). O(1) per token."""
+    gate = jax.nn.gelu(x_t @ params.w_gate_branch)
+    u = x_t @ params.w_in                                   # [B, dr]
+    conv_in = jnp.concatenate([state.conv, u[:, None]], axis=1)  # [B, W, dr]
+    u_c = jnp.einsum("bwd,wd->bd", conv_in, params.conv_w) + params.conv_b
+    a, gated = _gates(params, u_c.astype(jnp.float32))
+    h = a * state.h + gated
+    y = (h.astype(x_t.dtype) * gate) @ params.w_out
+    return y, RGLRUState(h=h, conv=conv_in[:, 1:])

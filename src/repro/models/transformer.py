@@ -1,0 +1,560 @@
+"""Unified decoder stack: init / train-forward / prefill / decode for every
+assigned architecture family.
+
+Structure (MaxText-style): layers are grouped into superblocks of
+``cfg.layer_pattern``; full tiles are applied under ``jax.lax.scan`` with
+parameters stacked along a leading superblock axis (keeps HLO size flat in
+depth — essential for 100-layer dry-run compiles), plus an unscanned
+remainder. Decode threads per-layer states (quantized KV caches / recurrent
+states) through the same scan.
+
+The decode path runs the SnapMLA quantized pipeline *semantics* in pure jnp
+(the pipeline refs proven bit-identical to the Pallas kernels in tests); set
+``use_kernels=True`` to run the actual Pallas kernels (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import mla as mla_lib
+from repro.core.kvcache import (CacheConfig, GQACache, MLACache, gqa_append,
+                                gqa_prefill, init_gqa_cache, init_mla_cache,
+                                mla_append, mla_prefill)
+from repro.core.attention import gqa_decode_dequant_ref, mla_decode_dequant_ref
+from repro.kernels.gqa_decode import ref as gqa_ref
+from repro.kernels.mla_decode import ref as mla_kref
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import xlstm as xlstm_lib
+
+
+# ---------------------------------------------------------------------------
+# Config plumbing
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(cfg: ModelConfig, kind: str) -> L.AttnConfig:
+    return L.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.d_head, rope_theta=cfg.rope_theta, qkv_bias=cfg.qkv_bias,
+        window=cfg.window if kind == "swa" else 0,
+        use_rope=True)
+
+
+def _mla_cfg(cfg: ModelConfig) -> mla_lib.MLAConfig:
+    m = cfg.mla
+    return mla_lib.MLAConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, d_head=cfg.d_head,
+        d_rope=m.d_rope, d_c=m.d_c, q_lora_rank=m.q_lora_rank,
+        rope_theta=cfg.rope_theta)
+
+
+def _cache_cfg(cfg: ModelConfig, kind: str) -> CacheConfig:
+    return CacheConfig(fmt=cfg.kv_fmt, page_size=cfg.page_size,
+                       window=cfg.window if kind == "swa" else 0)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer parameter init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str, layer_idx_hint: int, dtype):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if kind in ("attn", "swa"):
+        p["mixer"] = L.init_attn_params(ks[0], _attn_cfg(cfg, kind), dtype)
+    elif kind == "mla":
+        p["mixer"] = mla_lib.init_mla_params(ks[0], _mla_cfg(cfg), dtype)
+    elif kind == "cross":
+        p["mixer"] = L.init_attn_params(ks[0], _attn_cfg(cfg, kind), dtype)
+        p["xgate"] = jnp.zeros((1,), dtype)          # tanh-gated (llama-vision)
+    elif kind == "dec":
+        p["mixer"] = L.init_attn_params(ks[0], _attn_cfg(cfg, kind), dtype)
+        p["ln_cross"] = jnp.ones((cfg.d_model,), dtype)
+        p["cross"] = L.init_attn_params(ks[1], _attn_cfg(cfg, kind), dtype)
+    elif kind == "rglru":
+        p["mixer"] = rglru_lib.init_rglru_params(ks[0], cfg.d_model, cfg.d_model, dtype)
+    elif kind == "mlstm":
+        p["mixer"] = xlstm_lib.init_mlstm_params(ks[0], cfg.d_model, cfg.n_heads,
+                                                 cfg.d_head, dtype)
+    elif kind == "slstm":
+        p["mixer"] = xlstm_lib.init_slstm_params(ks[0], cfg.d_model, cfg.n_heads,
+                                                 cfg.d_head, dtype)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+
+    if cfg.has_mlp and kind not in ("mlstm", "slstm"):
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        if cfg.moe is not None and layer_idx_hint >= cfg.first_k_dense:
+            p["mlp"] = moe_lib.init_moe_params(ks[2], cfg.d_model, cfg.moe, dtype)
+        elif cfg.d_ff:
+            p["mlp"] = L.init_mlp_params(ks[2], cfg.d_model, cfg.d_ff, True, dtype)
+    return p
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_embedding(ks[1], cfg.vocab_size, cfg.d_model, dtype)
+
+    # scanned superblocks: stack params along a leading axis per pattern slot
+    if cfg.n_superblocks > 0:
+        def init_block(bkey):
+            bks = jax.random.split(bkey, cfg.pattern_len)
+            return [
+                _init_layer(bks[i], cfg, kind, cfg.first_k_dense, dtype)
+                for i, kind in enumerate(cfg.layer_pattern)
+            ]
+        params["scanned"] = jax.vmap(init_block)(
+            jax.random.split(ks[2], cfg.n_superblocks))
+    # remainder layers (unscanned)
+    params["tail"] = [
+        _init_layer(k, cfg, kind, cfg.first_k_dense, dtype)
+        for k, kind in zip(jax.random.split(ks[3], max(1, len(cfg.remainder_kinds))),
+                           cfg.remainder_kinds)
+    ]
+    # deepseek-style first-k-dense layers are materialized inside the scan with
+    # MoE params; for simplicity first_k_dense>0 swaps those layers into tail.
+    if cfg.encoder_layers:
+        def init_enc(bkey):
+            return _init_layer(bkey, dataclasses.replace(cfg, moe=None), "attn", 0, dtype)
+        params["encoder"] = jax.vmap(init_enc)(
+            jax.random.split(ks[4], cfg.encoder_layers))
+        params["enc_ln_f"] = jnp.ones((cfg.d_model,), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+def _apply_mlp(p, cfg: ModelConfig, x):
+    if "mlp" not in p:
+        return x, 0.0
+    h = L.rms_norm(x, p["ln2"])
+    if cfg.moe is not None and isinstance(p["mlp"], moe_lib.MoEParams):
+        out, dropped = moe_lib.moe_layer(p["mlp"], cfg.moe, h,
+                                         act={"silu": jax.nn.silu,
+                                              "gelu": jax.nn.gelu}[cfg.act])
+        return x + out, dropped
+    return x + L.mlp(p["mlp"], h, cfg.act), 0.0
+
+
+def _apply_block_train(p, cfg: ModelConfig, kind: str, x, positions, aux):
+    h = L.rms_norm(x, p["ln1"])
+    if kind in ("attn", "swa"):
+        x = x + L.attention_block(p["mixer"], _attn_cfg(cfg, kind), h, positions,
+                                  unroll=cfg.cost_exact)
+    elif kind == "mla":
+        x = x + mla_lib.mla_attention(p["mixer"], _mla_cfg(cfg), h, positions)
+    elif kind == "cross":
+        g = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+        x = x + g * L.cross_attention_block(p["mixer"], _attn_cfg(cfg, kind), h, aux)
+    elif kind == "dec":
+        x = x + L.attention_block(p["mixer"], _attn_cfg(cfg, kind), h, positions)
+        hc = L.rms_norm(x, p["ln_cross"])
+        x = x + L.cross_attention_block(p["cross"], _attn_cfg(cfg, kind), hc, aux)
+    elif kind == "rglru":
+        y, _ = rglru_lib.rglru_block(p["mixer"], h)
+        x = x + y
+    elif kind == "mlstm":
+        y, _ = xlstm_lib.mlstm_block(p["mixer"], h)
+        return x + y, 0.0                              # self-contained, no MLP
+    elif kind == "slstm":
+        y, _ = xlstm_lib.slstm_block(p["mixer"], h)
+        return x + y, 0.0
+    return _apply_mlp(p, cfg, x)
+
+
+def _run_encoder(params, cfg: ModelConfig, aux_embed):
+    """Whisper-style bidirectional transformer encoder over frame embeddings."""
+    if cfg.encoder_layers == 0 or aux_embed is None:
+        return aux_embed
+    positions = jnp.arange(aux_embed.shape[1])
+    enc_cfg = dataclasses.replace(cfg, moe=None)
+
+    def body(x, p):
+        h = L.rms_norm(x, p["ln1"])
+        x = x + L.attention_block(p["mixer"], _attn_cfg(enc_cfg, "attn"), h,
+                                  positions, causal=False)
+        x, _ = _apply_mlp(p, enc_cfg, x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, aux_embed, params["encoder"])
+    return L.rms_norm(x, params["enc_ln_f"])
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            aux_embed: jax.Array | None = None, remat: bool = True):
+    """Training forward: tokens [B, S] -> logits [B, S, V] (f32)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(S)
+    aux = _run_encoder(params, cfg, aux_embed)
+
+    aux_losses = 0.0
+    if cfg.n_superblocks > 0:
+        def superblock(x, block_params):
+            dropped = 0.0
+            for i, kind in enumerate(cfg.layer_pattern):
+                x, d = _apply_block_train(block_params[i], cfg, kind, x, positions, aux)
+                dropped = dropped + d
+            return x, dropped
+
+        sb = jax.checkpoint(superblock) if remat else superblock
+        if cfg.cost_exact:
+            # unrolled (no while loop): exact under HLO cost analysis
+            for i in range(cfg.n_superblocks):
+                bp = jax.tree.map(lambda a: a[i], params["scanned"])
+                x, d = sb(x, bp)
+                aux_losses = aux_losses + d
+        else:
+            x, droppeds = jax.lax.scan(sb, x, params["scanned"])
+            aux_losses = jnp.sum(droppeds)
+    for p, kind in zip(params["tail"], cfg.remainder_kinds):
+        x, d = _apply_block_train(p, cfg, kind, x, positions, aux)
+        aux_losses = aux_losses + d
+
+    x = L.rms_norm(x, params["ln_f"])
+    table = params.get("unembed", params["embed"])
+    return L.unembed(table, x), aux_losses
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, aux_embed=None, remat=True):
+    """Next-token cross entropy; labels == -1 are masked."""
+    logits, aux = forward(params, cfg, tokens, aux_embed, remat)
+    V = logits.shape[-1]
+    mask = labels >= 0
+    lab = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"ce": loss, "moe_dropped": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+def _init_layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "swa"):
+        return init_gqa_cache(_cache_cfg(cfg, kind), batch, max_len,
+                              cfg.n_kv_heads, cfg.d_head)
+    if kind == "mla":
+        return init_mla_cache(_cache_cfg(cfg, kind), batch, max_len,
+                              cfg.mla.d_c, cfg.mla.d_rope)
+    if kind == "cross":
+        return init_gqa_cache(_cache_cfg(cfg, "attn"), batch,
+                              max(cfg.n_aux_tokens, 1), cfg.n_kv_heads, cfg.d_head)
+    if kind == "dec":
+        return {
+            "self": init_gqa_cache(_cache_cfg(cfg, "attn"), batch, max_len,
+                                   cfg.n_kv_heads, cfg.d_head),
+            "cross": init_gqa_cache(_cache_cfg(cfg, "attn"), batch,
+                                    max(cfg.n_aux_tokens, 1), cfg.n_kv_heads,
+                                    cfg.d_head),
+        }
+    if kind == "rglru":
+        return rglru_lib.init_rglru_state(batch, cfg.d_model)
+    if kind == "mlstm":
+        return xlstm_lib.init_mlstm_state(batch, cfg.n_heads, cfg.d_head)
+    if kind == "slstm":
+        return xlstm_lib.init_slstm_state(batch, cfg.n_heads, cfg.d_head)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    state: dict[str, Any] = {}
+    if cfg.n_superblocks > 0:
+        def one(_):
+            return [
+                _init_layer_state(cfg, kind, batch, max_len)
+                for kind in cfg.layer_pattern
+            ]
+        state["scanned"] = jax.vmap(lambda i: one(i))(jnp.arange(cfg.n_superblocks))
+    state["tail"] = [
+        _init_layer_state(cfg, kind, batch, max_len)
+        for kind in cfg.remainder_kinds
+    ]
+    state["aux"] = None       # encoder output / image embeddings, set at prefill
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Decode step (quantized SnapMLA pipeline semantics)
+# ---------------------------------------------------------------------------
+
+# Optional sharding-constraint context for the distributed decode path
+# (set by launch/dryrun.py; see EXPERIMENTS §Perf "attention locality"):
+# {"mesh": Mesh, "dp": axis-or-tuple-or-None}. Constrains per-head decode
+# tensors to stay 'model'-sharded on heads, preventing GSPMD from resharding
+# the (huge) KV cache through all-gathers.
+SHARD_CTX = None
+
+
+def _wsc(x, *spec):
+    if SHARD_CTX is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    mesh = SHARD_CTX["mesh"]
+    parts = []
+    for p_, dim in zip(spec, x.shape):
+        if p_ == "model" and dim % mesh.shape["model"] != 0:
+            p_ = None
+        elif p_ == "dp":
+            p_ = SHARD_CTX["dp"]
+        parts.append(p_)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*parts)))
+
+def _attn_decode(p, cfg: ModelConfig, kind: str, x_t, cache: GQACache, pos):
+    """One-token GQA/SWA decode against a quantized cache."""
+    acfg = _attn_cfg(cfg, kind)
+    ccfg = _cache_cfg(cfg, kind)
+    q, k, v = L.project_qkv(p, acfg, x_t[:, None, :], pos[:, None])
+    cache = gqa_append(cache, ccfg, k[:, 0], v[:, 0])
+    window = cfg.window if kind == "swa" else 0
+    qd = _wsc(q[:, 0].astype(jnp.float32), "dp", "model", None)
+    o = gqa_ref.gqa_decode_parallel_ref(
+        qd, cache.k, cache.v, cache.k_scale,
+        cache.v_scale, cache.slot_pos, pos, window=window,
+        block_n=ccfg.page_size, fmt=ccfg.fmt if ccfg.quantized else "none")
+    o = _wsc(o, "dp", "model", None)
+    o = jnp.einsum("bhk,hkd->bd", o.astype(x_t.dtype), p.wo)
+    return o, cache
+
+
+def _cross_decode(p, cfg: ModelConfig, x_t, cache: GQACache):
+    """One-token cross-attention against the static (quantized) aux cache."""
+    q = jnp.einsum("bd,dhk->bhk", x_t, p.wq)
+    if p.bq is not None:
+        q = q + p.bq
+    pos = jnp.full((x_t.shape[0],), jnp.iinfo(jnp.int32).max - 1, jnp.int32)
+    ccfg = _cache_cfg(cfg, "attn")
+    o = gqa_ref.gqa_decode_parallel_ref(
+        q.astype(jnp.float32), cache.k, cache.v, cache.k_scale,
+        cache.v_scale, cache.slot_pos, pos, window=0,
+        block_n=ccfg.page_size, fmt=ccfg.fmt if ccfg.quantized else "none")
+    return jnp.einsum("bhk,hkd->bd", o.astype(x_t.dtype), p.wo)
+
+
+def _mla_decode(p, cfg: ModelConfig, x_t, cache: MLACache, pos):
+    """SnapMLA decode: Fused-Q-Quant + Fused-K-Append + scale-fused kernel."""
+    mcfg = _mla_cfg(cfg)
+    ccfg = _cache_cfg(cfg, "mla")
+    c_kv, k_r = mla_lib.project_kv(p, mcfg, x_t[:, None, :], pos[:, None])
+    if SHARD_CTX is not None and SHARD_CTX.get("use_shard_map"):
+        from repro.core.distributed_decode import (mla_append_shard_map,
+                                                   shard_map_applicable)
+        if shard_map_applicable(SHARD_CTX["mesh"], SHARD_CTX["dp"],
+                                x_t.shape[0], cfg.n_heads):
+            cache = mla_append_shard_map(SHARD_CTX["mesh"], SHARD_CTX["dp"],
+                                         cache, ccfg, c_kv[:, 0], k_r[:, 0])
+        else:
+            cache = mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0])
+    else:
+        cache = mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0])
+    q_c, q_r = mla_lib.project_q(p, mcfg, x_t[:, None, :], pos[:, None])
+    q_lat = _wsc(mla_lib.absorb_q(p, q_c[:, 0]), "dp", "model", None)
+    fmt = ccfg.fmt if ccfg.quantized else "none"
+    q_c8, q_r_s, sigma_q = mla_kref.prepare_q(q_lat, q_r[:, 0], fmt)
+    q_c8 = _wsc(q_c8, "dp", "model", None)
+    if SHARD_CTX is not None and SHARD_CTX.get("use_shard_map"):
+        # collective-free attention region (EXPERIMENTS §Perf, core/
+        # distributed_decode.py) — explicit shard_map over dp x model
+        from repro.core.distributed_decode import (mla_decode_shard_map,
+                                                   shard_map_applicable)
+        if shard_map_applicable(SHARD_CTX["mesh"], SHARD_CTX["dp"],
+                                q_c8.shape[0], q_c8.shape[1]):
+            o_lat = mla_decode_shard_map(
+                SHARD_CTX["mesh"], SHARD_CTX["dp"], q_c8, q_r_s, sigma_q,
+                cache, softmax_scale=mcfg.softmax_scale,
+                block_n=ccfg.page_size, fmt=fmt)
+            return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
+    o_lat, _ = mla_kref.snapmla_decode_parallel_ref(
+        q_c8, q_r_s, sigma_q, cache.content,
+        cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens,
+        softmax_scale=mcfg.softmax_scale, block_n=ccfg.page_size, fmt=fmt)
+    o_lat = _wsc(o_lat, "dp", "model", None)
+    return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
+
+
+def _apply_block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos):
+    h = L.rms_norm(x_t, p["ln1"])
+    if kind in ("attn", "swa"):
+        y, state = _attn_decode(p["mixer"], cfg, kind, h, state, pos)
+        x_t = x_t + y
+    elif kind == "mla":
+        y, state = _mla_decode(p["mixer"], cfg, h, state, pos)
+        x_t = x_t + y
+    elif kind == "cross":
+        g = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x_t.dtype)
+        x_t = x_t + g * _cross_decode(p["mixer"], cfg, h, state)
+    elif kind == "dec":
+        y, self_c = _attn_decode(p["mixer"], cfg, "attn", h, state["self"], pos)
+        x_t = x_t + y
+        hc = L.rms_norm(x_t, p["ln_cross"])
+        x_t = x_t + _cross_decode(p["cross"], cfg, hc, state["cross"])
+        state = {"self": self_c, "cross": state["cross"]}
+    elif kind == "rglru":
+        y, state = rglru_lib.rglru_step(p["mixer"], h, state)
+        x_t = x_t + y
+    elif kind == "mlstm":
+        y, state = xlstm_lib.mlstm_step(p["mixer"], h, state)
+        return x_t + y, state
+    elif kind == "slstm":
+        y, state = xlstm_lib.slstm_step(p["mixer"], h, state)
+        return x_t + y, state
+    x_t, _ = _apply_mlp(p, cfg, x_t)
+    return x_t, state
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, state, pos: jax.Array):
+    """token [B] int32, pos [B] int32 -> (logits [B, V], new state)."""
+    x_t = L.embed(params["embed"], token)
+    aux = state.get("aux")
+
+    new_state = dict(state)
+    if cfg.n_superblocks > 0:
+        def step(x_t, inputs):
+            block_params, block_state = inputs
+            new_states = []
+            for i, kind in enumerate(cfg.layer_pattern):
+                x_t, s = _apply_block_decode(block_params[i], cfg, kind, x_t,
+                                             block_state[i], pos)
+                new_states.append(s)
+            return x_t, new_states
+
+        if cfg.cost_exact:
+            outs = []
+            for i in range(cfg.n_superblocks):
+                bp = jax.tree.map(lambda a: a[i], params["scanned"])
+                bs = jax.tree.map(lambda a: a[i], state["scanned"])
+                x_t, ns = step(x_t, (bp, bs))
+                outs.append(ns)
+            new_state["scanned"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x_t, scanned_states = jax.lax.scan(
+                step, x_t, (params["scanned"], state["scanned"]))
+            new_state["scanned"] = scanned_states
+    tail_states = []
+    for p, kind, s in zip(params["tail"], cfg.remainder_kinds, state["tail"]):
+        x_t, s = _apply_block_decode(p, cfg, kind, x_t, s, pos)
+        tail_states.append(s)
+    new_state["tail"] = tail_states
+
+    x_t = L.rms_norm(x_t, params["ln_f"])
+    table = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", x_t.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Prefill (prompt -> cache states + last-token logits)
+# ---------------------------------------------------------------------------
+
+def _prefill_layer_state(p, cfg: ModelConfig, kind: str, x, state, aux):
+    """Compute the post-prompt state for one layer while producing its output."""
+    positions = jnp.arange(x.shape[1])
+    h = L.rms_norm(x, p["ln1"])
+    if kind in ("attn", "swa"):
+        acfg = _attn_cfg(cfg, kind)
+        q, k, v = L.project_qkv(p["mixer"], acfg, h, positions)
+        o = L.flash_sdpa(q, k, v, causal=True, window=acfg.window,
+                         unroll=cfg.cost_exact)
+        state = gqa_prefill(state, _cache_cfg(cfg, kind), k, v)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["mixer"].wo)
+    elif kind == "mla":
+        mcfg = _mla_cfg(cfg)
+        x = x + mla_lib.mla_attention(p["mixer"], mcfg, h, positions)
+        c_kv, k_r = mla_lib.project_kv(p["mixer"], mcfg, h, positions)
+        state = mla_prefill(state, _cache_cfg(cfg, "mla"), c_kv, k_r)
+    elif kind == "cross":
+        g = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+        x = x + g * L.cross_attention_block(p["mixer"], _attn_cfg(cfg, kind), h, aux)
+        state = _fill_cross_cache(p["mixer"], cfg, aux, state)
+    elif kind == "dec":
+        acfg = _attn_cfg(cfg, kind)
+        q, k, v = L.project_qkv(p["mixer"], acfg, h, positions)
+        o = L.flash_sdpa(q, k, v, causal=True, unroll=cfg.cost_exact)
+        self_c = gqa_prefill(state["self"], _cache_cfg(cfg, "attn"), k, v)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["mixer"].wo)
+        hc = L.rms_norm(x, p["ln_cross"])
+        x = x + L.cross_attention_block(p["cross"], acfg, hc, aux)
+        state = {"self": self_c,
+                 "cross": _fill_cross_cache(p["cross"], cfg, aux, state["cross"])}
+    elif kind == "rglru":
+        y, state = rglru_lib.rglru_block(p["mixer"], h)
+        x = x + y
+    elif kind == "mlstm":
+        y, state = xlstm_lib.mlstm_block(p["mixer"], h)
+        return x + y, state
+    elif kind == "slstm":
+        y, state = xlstm_lib.slstm_block(p["mixer"], h)
+        return x + y, state
+    x, _ = _apply_mlp(p, cfg, x)
+    return x, state
+
+
+def _fill_cross_cache(attn_p, cfg: ModelConfig, aux, cache: GQACache) -> GQACache:
+    k = jnp.einsum("bsd,dhk->bshk", aux, attn_p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", aux, attn_p.wv)
+    if attn_p.bk is not None:
+        k, v = k + attn_p.bk, v + attn_p.bv
+    return gqa_prefill(cache, _cache_cfg(cfg, "attn"), k, v)
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, state,
+            aux_embed: jax.Array | None = None):
+    """tokens [B, S] -> (last-token logits [B, V], filled decode state)."""
+    x = L.embed(params["embed"], tokens)
+    aux = _run_encoder(params, cfg, aux_embed)
+    new_state = dict(state)
+    new_state["aux"] = aux
+
+    if cfg.n_superblocks > 0:
+        def step(x, inputs):
+            block_params, block_state = inputs
+            new_states = []
+            for i, kind in enumerate(cfg.layer_pattern):
+                x, s = _prefill_layer_state(block_params[i], cfg, kind, x,
+                                            block_state[i], aux)
+                new_states.append(s)
+            return x, new_states
+
+        if cfg.cost_exact:
+            outs = []
+            for i in range(cfg.n_superblocks):
+                bp = jax.tree.map(lambda a: a[i], params["scanned"])
+                bs = jax.tree.map(lambda a: a[i], state["scanned"])
+                x, ns = step(x, (bp, bs))
+                outs.append(ns)
+            new_state["scanned"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, scanned_states = jax.lax.scan(
+                step, x, (params["scanned"], state["scanned"]))
+            new_state["scanned"] = scanned_states
+    tail_states = []
+    for p, kind, s in zip(params["tail"], cfg.remainder_kinds, state["tail"]):
+        x, s = _prefill_layer_state(p, cfg, kind, x, s, aux)
+        tail_states.append(s)
+    new_state["tail"] = tail_states
+
+    x_last = L.rms_norm(x[:, -1], params["ln_f"])
+    table = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", x_last.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return logits, new_state

@@ -1,0 +1,207 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory), arXiv:2405.04517.
+
+mLSTM — parallelizable matrix-memory cell with exponential gating:
+    train: quadratic masked form (like attention with a log-gate decay matrix)
+    decode: C_t = f' C_{t-1} + i' k_t v_t^T ;  n_t = f' n_{t-1} + i' k_t
+            h_t = C_t^T q_t / max(|n_t . q_t|, exp(-m_t))
+    with the max-stabilizer m_t = max(log f + m_{t-1}, log i).
+
+sLSTM — scalar-memory cell with recurrent (per-head block-diagonal) weights;
+    inherently sequential -> lax.scan over time for training.
+
+Neither block has a KV cache, so SnapMLA quantization is N/A (documented in
+DESIGN.md); decode state is O(1) in sequence length which is what makes the
+``long_500k`` shape runnable for this family. States kept in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMParams(NamedTuple):
+    w_q: jax.Array        # [d, H, dh]
+    w_k: jax.Array        # [d, H, dh]
+    w_v: jax.Array        # [d, H, dh]
+    w_i: jax.Array        # [d, H]  input-gate logit
+    w_f: jax.Array        # [d, H]  forget-gate logit
+    b_i: jax.Array        # [H]
+    b_f: jax.Array        # [H]
+    w_o_gate: jax.Array   # [d, H, dh] output gate (sigmoid)
+    w_out: jax.Array      # [H, dh, d]
+    gn_gain: jax.Array    # [H, dh] per-head group-norm gain
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array          # [B, H, dh, dh] matrix memory
+    n: jax.Array          # [B, H, dh] normalizer
+    m: jax.Array          # [B, H] stabilizer
+
+
+def init_mlstm_params(key, d: int, n_heads: int, d_head: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+
+    def init(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+    return MLSTMParams(
+        w_q=init(ks[0], (d, n_heads, d_head), d),
+        w_k=init(ks[1], (d, n_heads, d_head), d),
+        w_v=init(ks[2], (d, n_heads, d_head), d),
+        w_i=init(ks[3], (d, n_heads), d),
+        w_f=init(ks[4], (d, n_heads), d),
+        b_i=jnp.zeros((n_heads,), dtype),
+        b_f=jnp.full((n_heads,), 3.0, dtype),   # bias toward remembering
+        w_o_gate=init(ks[5], (d, n_heads, d_head), d),
+        w_out=init(ks[6], (n_heads, d_head, d), n_heads * d_head),
+        gn_gain=jnp.ones((n_heads, d_head), dtype),
+    )
+
+
+def init_mlstm_state(batch: int, n_heads: int, d_head: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((batch, n_heads, d_head, d_head), jnp.float32),
+        n=jnp.zeros((batch, n_heads, d_head), jnp.float32),
+        m=jnp.full((batch, n_heads), -jnp.inf, jnp.float32),
+    )
+
+
+def _head_norm(h: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm over dh: h [..., H, dh]."""
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return h * jax.lax.rsqrt(var + eps) * gain
+
+
+def mlstm_block(params: MLSTMParams, x: jax.Array):
+    """Training/prefill (fresh state): x [B,S,d] -> (y [B,S,d], final state).
+
+    Quadratic parallel form (xLSTM paper eq. 'parallel mLSTM').
+    """
+    B, S, d = x.shape
+    H, dh = params.w_q.shape[1], params.w_q.shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, params.w_q) / jnp.sqrt(dh)
+    k = jnp.einsum("bsd,dhk->bshk", x, params.w_k)
+    v = jnp.einsum("bsd,dhk->bshk", x, params.w_v)
+    i_log = (jnp.einsum("bsd,dh->bsh", x, params.w_i) + params.b_i).astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(
+        (jnp.einsum("bsd,dh->bsh", x, params.w_f) + params.b_f).astype(jnp.float32))
+
+    f_cum = jnp.cumsum(f_log, axis=1)                       # [B,S,H]
+    # D[t,s] = f_cum[t] - f_cum[s] + i_log[s]   for s <= t
+    dmat = f_cum[:, :, None, :] - f_cum[:, None, :, :] + i_log[:, None, :, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    dmat = jnp.where(mask, dmat, -jnp.inf)                  # [B,T,S,H]
+    m = jnp.max(dmat, axis=2, keepdims=True)                # [B,T,1,H]
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bthk,bshk->btsh", q.astype(jnp.float32), k.astype(jnp.float32))
+    ct = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(ct, axis=2)), jnp.exp(-m[:, :, 0]))  # [B,T,H]
+    h = jnp.einsum("btsh,bshk->bthk", ct, v.astype(jnp.float32)) / norm[..., None]
+
+    o_gate = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", x, params.w_o_gate))
+    y = _head_norm(h.astype(x.dtype), params.gn_gain) * o_gate
+    y = jnp.einsum("bshk,hkd->bsd", y, params.w_out)
+
+    # final recurrent state (for prefill -> decode handoff)
+    m_fin = f_cum[:, -1:, :] - f_cum + i_log                # decay to last step
+    w = jnp.exp(m_fin - jnp.max(m_fin, axis=1, keepdims=True))
+    c_fin = jnp.einsum("bsh,bshk,bshl->bhkl", w, k.astype(jnp.float32), v.astype(jnp.float32))
+    n_fin = jnp.einsum("bsh,bshk->bhk", w, k.astype(jnp.float32))
+    state = MLSTMState(c=c_fin, n=n_fin, m=jnp.max(m_fin, axis=1))
+    return y, state
+
+
+def mlstm_step(params: MLSTMParams, x_t: jax.Array, state: MLSTMState):
+    """Decode: x_t [B,d] -> (y [B,d], new state). O(dh^2) per token."""
+    H, dh = params.w_q.shape[1], params.w_q.shape[2]
+    q = jnp.einsum("bd,dhk->bhk", x_t, params.w_q).astype(jnp.float32) / jnp.sqrt(dh)
+    k = jnp.einsum("bd,dhk->bhk", x_t, params.w_k).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", x_t, params.w_v).astype(jnp.float32)
+    i_log = (jnp.einsum("bd,dh->bh", x_t, params.w_i) + params.b_i).astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(
+        (jnp.einsum("bd,dh->bh", x_t, params.w_f) + params.b_f).astype(jnp.float32))
+
+    m_new = jnp.maximum(f_log + state.m, i_log)
+    f_p = jnp.exp(f_log + state.m - m_new)[..., None]
+    i_p = jnp.exp(i_log - m_new)[..., None]
+    c = f_p[..., None] * state.c + i_p[..., None] * k[..., :, None] * v[..., None, :]
+    n = f_p * state.n + i_p * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    h = jnp.einsum("bhkl,bhk->bhl", c, q) / denom[..., None]
+
+    o_gate = jax.nn.sigmoid(jnp.einsum("bd,dhk->bhk", x_t, params.w_o_gate))
+    y = _head_norm(h.astype(x_t.dtype), params.gn_gain) * o_gate
+    return jnp.einsum("bhk,hkd->bd", y, params.w_out), MLSTMState(c, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMParams(NamedTuple):
+    w: jax.Array          # [4, d, H, dh]  (z, i, f, o input projections)
+    r: jax.Array          # [4, H, dh, dh] recurrent block-diagonal per head
+    b: jax.Array          # [4, H, dh]
+    w_out: jax.Array      # [H, dh, d]
+    gn_gain: jax.Array    # [H, dh]
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array          # [B, H, dh]
+    n: jax.Array          # [B, H, dh]
+    h: jax.Array          # [B, H, dh]
+    m: jax.Array          # [B, H, dh]
+
+
+def init_slstm_params(key, d: int, n_heads: int, d_head: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    w = (jax.random.normal(ks[0], (4, d, n_heads, d_head), jnp.float32) / jnp.sqrt(d)).astype(dtype)
+    r = (jax.random.normal(ks[1], (4, n_heads, d_head, d_head), jnp.float32) / jnp.sqrt(d_head)).astype(dtype)
+    b = jnp.zeros((4, n_heads, d_head), dtype).at[2].set(3.0)  # forget bias
+    w_out = (jax.random.normal(ks[2], (n_heads, d_head, d), jnp.float32)
+             / jnp.sqrt(n_heads * d_head)).astype(dtype)
+    return SLSTMParams(w, r, b, w_out, jnp.ones((n_heads, d_head), dtype))
+
+
+def init_slstm_state(batch: int, n_heads: int, d_head: int) -> SLSTMState:
+    z = jnp.zeros((batch, n_heads, d_head), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -jnp.inf))
+
+
+def slstm_step(params: SLSTMParams, x_t: jax.Array, state: SLSTMState):
+    """x_t [B, d] -> (y [B, d], new state)."""
+    pre = jnp.einsum("bd,gdhk->gbhk", x_t, params.w).astype(jnp.float32)
+    rec = jnp.einsum("bhk,ghkl->gbhl", state.h, params.r.astype(jnp.float32))
+    z_, i_, f_, o_ = pre + rec + params.b.astype(jnp.float32)[:, None]
+
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    f_log = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(f_log + state.m, i_)
+    i_p = jnp.exp(i_ - m_new)
+    f_p = jnp.exp(f_log + state.m - m_new)
+    c = f_p * state.c + i_p * z
+    n = jnp.maximum(f_p * state.n + i_p, jnp.exp(-m_new))
+    h = o * (c / n)
+    y = _head_norm(h.astype(x_t.dtype), params.gn_gain)
+    return jnp.einsum("bhk,hkd->bd", y, params.w_out), SLSTMState(c, n, h, m_new)
+
+
+def slstm_block(params: SLSTMParams, x: jax.Array, state: SLSTMState | None = None):
+    """Training/prefill: sequential lax.scan over time. x [B,S,d]."""
+    B, S, d = x.shape
+    H, dh = params.w.shape[2], params.w.shape[3]
+    st = state if state is not None else init_slstm_state(B, H, dh)
+
+    def body(carry, x_t):
+        y, new = slstm_step(params, x_t, carry)
+        return new, y
+
+    final, ys = jax.lax.scan(body, st, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), final

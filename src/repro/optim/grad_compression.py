@@ -1,0 +1,57 @@
+"""INT8 error-feedback gradient compression for the DP all-reduce.
+
+Distributed-optimization trick for multi-pod training: gradients crossing the
+slow inter-pod links are per-tensor int8-quantized before the reduction, with
+the quantization residual fed back into the next step (error feedback keeps
+the compression unbiased over time — Karimireddy et al., 2019).
+
+Used via shard_map around the gradient reduction in launch/train.py when
+``compress_grads=True``; this module provides the (de)compression math, which
+is mesh-agnostic and unit-tested for the error-feedback contraction property.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any      # pytree like grads, f32
+
+
+def init_ef_state(grads_like) -> EFState:
+    return EFState(jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads_like))
+
+
+def compress(g: jax.Array, residual: jax.Array):
+    """g + residual -> (int8 payload, f32 scale, new residual)."""
+    corrected = g.astype(jnp.float32) + residual
+    amax = jnp.max(jnp.abs(corrected))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_residual = corrected - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, state: EFState):
+    """Pytree version. Returns (payload tree of (q, scale), new EFState)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    qs, new_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = compress(g, r)
+        qs.append((q, s))
+        new_r.append(nr)
+    return treedef.unflatten(qs), EFState(treedef.unflatten(new_r))
+
+
+def decompress_tree(payload):
+    return jax.tree.map(lambda qs: decompress(*qs), payload,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and isinstance(x[0], jax.Array))

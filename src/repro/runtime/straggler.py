@@ -1,0 +1,48 @@
+"""Straggler detection for synchronous SPMD training.
+
+In a synchronous pjit step, one slow host drags the whole mesh (every
+collective waits). Detection: each host tracks an EWMA of its own step wall
+time; a host whose time exceeds ``threshold``x the fleet median (exchanged
+through the same allgather that carries metrics) is flagged. The production
+action — documented in DESIGN.md — is hot-spare swap + elastic restart from
+the latest checkpoint; here the detector and its policy hooks are implemented
+and unit-tested with injected timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ewma_alpha: float = 0.2
+    threshold: float = 1.5       # x fleet median
+    warmup_steps: int = 5        # ignore compile/first steps
+
+
+class StragglerDetector:
+    def __init__(self, cfg: StragglerConfig, n_hosts: int):
+        self.cfg = cfg
+        self.n_hosts = n_hosts
+        self.ewma = np.zeros(n_hosts)
+        self.steps = 0
+        self.flagged: list[tuple[int, int]] = []   # (step, host)
+
+    def update(self, per_host_times: np.ndarray) -> list[int]:
+        """per_host_times [n_hosts] seconds for this step -> flagged hosts."""
+        self.steps += 1
+        a = self.cfg.ewma_alpha
+        if self.steps == 1:
+            self.ewma = per_host_times.astype(float).copy()
+        else:
+            self.ewma = (1 - a) * self.ewma + a * per_host_times
+        if self.steps <= self.cfg.warmup_steps:
+            return []
+        med = float(np.median(self.ewma))
+        slow = [h for h in range(self.n_hosts)
+                if self.ewma[h] > self.cfg.threshold * med]
+        for h in slow:
+            self.flagged.append((self.steps, h))
+        return slow

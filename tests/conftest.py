@@ -1,0 +1,5 @@
+import pathlib
+import sys
+
+# allow `pytest tests/` without PYTHONPATH=src
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))

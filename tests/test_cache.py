@@ -1,0 +1,59 @@
+"""KV cache semantics: windows, masking, MLA append/prefill equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kvcache import (CacheConfig, gqa_append, gqa_prefill,
+                                init_gqa_cache, init_mla_cache, mla_append,
+                                mla_prefill, paged_gather, init_paged_mla_pool)
+
+
+def test_mla_append_equals_prefill():
+    B, d_c, d_r, S = 2, 16, 8, 20
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=8)
+    c = jax.random.normal(jax.random.PRNGKey(0), (B, S, d_c))
+    r = jax.random.normal(jax.random.PRNGKey(1), (B, S, d_r)) * 10
+    bulk = mla_prefill(init_mla_cache(cfg, B, 32, d_c, d_r), cfg, c, r)
+    inc = init_mla_cache(cfg, B, 32, d_c, d_r)
+    for t in range(S):
+        inc = mla_append(inc, cfg, c[:, t], r[:, t])
+    np.testing.assert_allclose(np.asarray(bulk.content, np.float32),
+                               np.asarray(inc.content, np.float32))
+    np.testing.assert_allclose(np.asarray(bulk.scale), np.asarray(inc.scale))
+    assert int(inc.seq_lens[0]) == S
+
+
+def test_window_ring_overwrites_old_slots():
+    B, Hkv, dh, window = 1, 1, 4, 8
+    cfg = CacheConfig(fmt="none", page_size=8, window=window)
+    cache = init_gqa_cache(cfg, B, 64, Hkv, dh)
+    assert cache.capacity == window
+    for t in range(12):
+        k = jnp.full((B, Hkv, dh), float(t))
+        cache = gqa_append(cache, cfg, k, k)
+    sp = np.asarray(cache.slot_pos[0])
+    # slots hold positions 4..11 (last `window` tokens)
+    assert sorted(sp.tolist()) == list(range(4, 12))
+    # slot content matches position labels
+    kv = np.asarray(cache.k[0, :, 0, 0], np.float32)
+    assert np.allclose(kv, sp.astype(np.float32))
+
+
+def test_bf16_cache_has_unit_scales():
+    cfg = CacheConfig(fmt="none")
+    cache = init_gqa_cache(cfg, 2, 16, 2, 4)
+    assert cache.k.dtype == jnp.bfloat16
+    assert np.all(np.asarray(cache.k_scale) == 1.0)
+
+
+def test_paged_pool_gather_roundtrip():
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=4)
+    pool = init_paged_mla_pool(cfg, n_pages=8, max_pages_per_seq=2, batch=2,
+                               d_c=6, d_r=4)
+    pt = jnp.array([[3, 1], [0, 5]], jnp.int32)
+    content = pool.content.at[3, 0, 0].set(7.0)
+    pool = pool._replace(content=content, page_table=pt,
+                         seq_lens=jnp.array([5, 8], jnp.int32))
+    c, r, s = paged_gather(pool)
+    assert c.shape == (2, 8, 6)
+    assert float(c[0, 0, 0]) == 7.0

@@ -1,0 +1,38 @@
+"""Data pipeline: determinism, host sharding, resumability."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, batch_iterator, host_slice, synth_batch
+
+CFG = DataConfig(vocab_size=128, seq_len=16, global_batch=8, seed=7)
+
+
+def test_deterministic_per_step():
+    a = synth_batch(CFG, 3)
+    b = synth_batch(CFG, 3)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = synth_batch(CFG, 4)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_host_slices_partition_global_batch():
+    full = synth_batch(CFG, 0)
+    parts = [host_slice(CFG, 0, h, 4) for h in range(4)]
+    glued = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+    np.testing.assert_array_equal(glued, np.asarray(full["tokens"]))
+
+
+def test_iterator_resumes():
+    it = batch_iterator(CFG, start_step=5)
+    step, batch = next(it)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]),
+                                  np.asarray(synth_batch(CFG, 5)["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    b = synth_batch(CFG, 1)
+    assert b["tokens"].shape == b["labels"].shape == (8, 16)
+    # the underlying sequence is contiguous: labels[t] == tokens[t+1]
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))

@@ -1,0 +1,38 @@
+"""shard_map-explicit decode attention == the pjit oracle (EXPERIMENTS §Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed_decode import (mla_decode_shard_map,
+                                           shard_map_applicable)
+from repro.core.kvcache import CacheConfig, init_mla_cache, mla_prefill
+from repro.kernels.mla_decode import ref as R
+
+
+def test_applicability_rules():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert shard_map_applicable(mesh, "data", 4, 8)
+    assert shard_map_applicable(mesh, None, 1, 8)
+
+
+def test_shard_map_matches_oracle_single_device():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    B, H, d_c, d_r, N, S = 2, 4, 32, 16, 64, 50
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=32)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    cache = mla_prefill(init_mla_cache(cfg, B, N, d_c, d_r), cfg,
+                        jax.random.normal(ks[0], (B, S, d_c)) * 2,
+                        jax.random.normal(ks[1], (B, S, d_r)) * 20)
+    q_c8, q_r, sq = R.prepare_q(jax.random.normal(ks[2], (B, H, d_c)),
+                                jax.random.normal(ks[3], (B, H, d_r)) * 3)
+    with mesh:
+        o_sm = jax.jit(lambda qc, qr, s: mla_decode_shard_map(
+            mesh, "data", qc, qr, s, cache, softmax_scale=0.1, block_n=32,
+            fmt="fp8_e4m3"))(q_c8, q_r, sq)
+    o_ref, _ = R.snapmla_decode_parallel_ref(
+        q_c8, q_r.astype(jnp.float32), sq, cache.content,
+        cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens,
+        softmax_scale=0.1, block_n=32)
+    np.testing.assert_allclose(np.asarray(o_sm), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,69 @@
+"""Preemption -> checkpoint -> clean exit; restart supervisor; stragglers."""
+import numpy as np
+
+from repro.checkpoint.checkpoint import latest_checkpoint
+from repro.configs import get_smoke_config
+from repro.launch.train import train_loop
+from repro.runtime.fault_tolerance import (PreemptionHandler, RestartPolicy,
+                                           run_with_restarts)
+from repro.runtime.straggler import StragglerConfig, StragglerDetector
+
+
+def test_preemption_checkpoints_and_exits(tmp_path):
+    cfg = get_smoke_config("granite-3-2b")
+    handler = PreemptionHandler(install=False)
+
+    # trigger preemption after ~2 steps via a wrapped handler flag
+    class TripWire:
+        def __init__(self):
+            self.count = 0
+        @property
+        def requested(self):
+            self.count += 1
+            return self.count > 2
+
+    out = train_loop(cfg, steps=50, batch=4, seq=16, ckpt_dir=str(tmp_path),
+                     ckpt_every=1000, preemption=TripWire(), log_every=100)
+    assert out["status"] == "preempted"
+    assert out["final_step"] < 50
+    assert latest_checkpoint(str(tmp_path)) is not None
+
+
+def test_run_with_restarts_retries_then_succeeds():
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("simulated node failure")
+        return "done"
+
+    restarts = []
+    out = run_with_restarts(flaky, RestartPolicy(max_restarts=5),
+                            on_restart=lambda i: restarts.append(i))
+    assert out == "done"
+    assert len(restarts) == 2
+
+
+def test_run_with_restarts_exhausts_budget():
+    def always_fails():
+        raise RuntimeError("hard failure")
+
+    try:
+        run_with_restarts(always_fails, RestartPolicy(max_restarts=2))
+        raised = False
+    except RuntimeError:
+        raised = True
+    assert raised
+
+
+def test_straggler_detector_flags_slow_host():
+    det = StragglerDetector(StragglerConfig(warmup_steps=2, threshold=1.5), 8)
+    times = np.ones(8)
+    for step in range(10):
+        t = times.copy()
+        if step >= 5:
+            t[3] = 4.0                      # host 3 goes slow
+        flagged = det.update(t)
+    assert 3 in flagged
+    assert all(h == 3 for _, h in det.flagged)

@@ -1,0 +1,85 @@
+"""FP8 quantized GQA decode kernel: sweeps over kv-head counts, windows, formats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import gqa_decode_dequant_ref
+from repro.core.kvcache import CacheConfig, init_gqa_cache, gqa_prefill, gqa_append
+from repro.kernels.gqa_decode import ref as R
+from repro.kernels.gqa_decode.ops import gqa_decode
+
+
+def _cache(key, B, S, N, Hkv, dh, fmt, window, page):
+    cfg = CacheConfig(fmt=fmt, page_size=page, window=window)
+    ks = jax.random.split(key, 2)
+    cache = init_gqa_cache(cfg, B, N, Hkv, dh)
+    return cfg, gqa_prefill(cache, cfg, jax.random.normal(ks[0], (B, S, Hkv, dh)),
+                            jax.random.normal(ks[1], (B, S, Hkv, dh)))
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "int8", "none"])
+@pytest.mark.parametrize("Hkv,g,dh,window", [
+    (1, 8, 32, 0),        # MQA (recurrentgemma-like)
+    (2, 8, 64, 0),        # qwen2.5-like
+    (4, 2, 32, 96),       # windowed (mixtral/gemma3-like)
+    (8, 1, 16, 0),        # MHA
+])
+def test_kernel_matches_pipeline_ref(fmt, Hkv, g, dh, window):
+    B, S, N, bn = 2, 150, 192, 64
+    H = Hkv * g
+    key = jax.random.PRNGKey(Hkv * 31 + g)
+    cfg, cache = _cache(key, B, S, N, Hkv, dh, fmt, window, bn)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, H, dh))
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    o_k = gqa_decode(q, cache, pos, window=window, block_n=bn, fmt=fmt)
+    o_r = gqa_decode(q, cache, pos, window=window, block_n=bn, fmt=fmt,
+                     use_kernel=False)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vs_dequant_oracle_and_window_semantics():
+    B, S, N, Hkv, g, dh, window = 2, 150, 192, 2, 4, 32, 64
+    H = Hkv * g
+    cfg, cache = _cache(jax.random.PRNGKey(2), B, S, N, Hkv, dh, "fp8_e4m3",
+                        window, 64)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, H, dh))
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    o_k = gqa_decode(q, cache, pos, window=window, block_n=64)
+    o_e = gqa_decode_dequant_ref(q, cache, pos, window=window)
+    rel = np.abs(np.asarray(o_k - o_e)).max() / np.abs(np.asarray(o_e)).max()
+    assert rel < 0.08, rel
+
+
+def test_ring_buffer_append_matches_prefill():
+    """Appending tokens one-by-one through the ring == bulk prefill."""
+    B, Hkv, dh, window = 1, 2, 16, 32
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=16, window=window)
+    S = 50
+    key = jax.random.PRNGKey(4)
+    k = jax.random.normal(key, (B, S, Hkv, dh))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, S, Hkv, dh))
+    c1 = gqa_prefill(init_gqa_cache(cfg, B, 64, Hkv, dh), cfg, k, v)
+    c2 = init_gqa_cache(cfg, B, 64, Hkv, dh)
+    for t in range(S):
+        c2 = gqa_append(c2, cfg, k[:, t], v[:, t])
+    np.testing.assert_allclose(np.asarray(c1.k, np.float32),
+                               np.asarray(c2.k, np.float32), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1.slot_pos), np.asarray(c2.slot_pos))
+
+
+def test_parallel_ref_equals_sequential():
+    B, S, N, Hkv, g, dh = 2, 150, 192, 2, 4, 32
+    for window in (0, 64):
+        cfg, cache = _cache(jax.random.PRNGKey(6), B, S, N, Hkv, dh,
+                            "fp8_e4m3", window, 64)
+        q = jax.random.normal(jax.random.PRNGKey(7), (B, Hkv * g, dh)).astype(jnp.float32)
+        pos = jnp.full((B,), S - 1, jnp.int32)
+        a = R.gqa_decode_pipeline_ref(q, cache.k, cache.v, cache.k_scale,
+                                      cache.v_scale, cache.slot_pos, pos,
+                                      window=window, block_n=64)
+        b = R.gqa_decode_parallel_ref(q, cache.k, cache.v, cache.k_scale,
+                                      cache.v_scale, cache.slot_pos, pos,
+                                      window=window, block_n=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)

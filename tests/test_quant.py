@@ -1,0 +1,123 @@
+"""Quantization primitive tests (paper §3.1 / Appendix C) + hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@pytest.mark.parametrize("fmt,tol", [("fp8_e4m3", 0.07), ("int8", 0.03)])
+@pytest.mark.parametrize("gran", ["per_token", "per_channel", "per_tensor", "per_block"])
+def test_roundtrip_error_bound(fmt, tol, gran):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 64)) * 3.0
+    fn = {
+        "per_token": quant.quantize_per_token,
+        "per_channel": quant.quantize_per_channel,
+        "per_tensor": quant.quantize_per_tensor,
+        "per_block": lambda t, fmt: quant.quantize_per_block(t, (32, 32), fmt),
+    }[gran]
+    q = fn(x, fmt)
+    rt = q.dequant()
+    rel = np.abs(np.asarray(rt - x)) / (np.abs(np.asarray(x)) + 1e-3)
+    # elementwise relative error bounded by format mantissa resolution
+    assert np.median(rel) < tol, (gran, fmt, np.median(rel))
+
+
+def test_per_token_scale_shape_and_positivity():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 7, 16))
+    q = quant.quantize_per_token(x)
+    assert q.scale.shape == (4, 7, 1)
+    assert np.all(np.asarray(q.scale) > 0)
+
+
+def test_rope_aware_domain_alignment():
+    """Key Step 1 (Eq. 6): concat(content_q, rope_scaled) * scale must
+    reconstruct [content; rope] (rope exactly up to bf16, content to fp8)."""
+    key = jax.random.PRNGKey(2)
+    c = jax.random.normal(key, (8, 64)) * 2
+    r = jax.random.normal(jax.random.PRNGKey(3), (8, 16)) * 300  # wide range
+    raq = quant.quantize_rope_aware(c, r, rope_dtype=jnp.float32)
+    rope_rt = np.asarray(raq.dequant_rope())
+    assert np.allclose(rope_rt, np.asarray(r), rtol=2e-3, atol=1e-3)
+    content_rt = np.asarray(raq.dequant_content())
+    rel = np.abs(content_rt - np.asarray(c)).max() / np.abs(np.asarray(c)).max()
+    assert rel < 0.1
+
+
+def test_rope_aware_beats_unaware_on_heavy_tailed_rope():
+    """The paper's central numerical claim (Fig. 3b)."""
+    key = jax.random.PRNGKey(4)
+    c = jax.random.normal(key, (256, 64)) * 2
+    r_base = jax.random.normal(jax.random.PRNGKey(5), (256, 16)) * 20
+    out = jax.random.normal(jax.random.PRNGKey(6), (256, 16)) * 500
+    mask = jax.random.bernoulli(jax.random.PRNGKey(7), 0.05, (256, 16))
+    r = jnp.where(mask, out, r_base)
+
+    aware = quant.quantize_rope_aware(c, r, rope_dtype=jnp.float32)
+    unaware = quant.quantize_rope_unaware(c, r)
+    err_aware = float(jnp.mean((aware.dequant_rope() - r) ** 2))
+    err_unaware = float(jnp.mean(
+        (unaware.rope_scaled * unaware.scale - r) ** 2))
+    assert err_aware < err_unaware / 10, (err_aware, err_unaware)
+    # content error also suffers under joint scale
+    errc_aware = float(jnp.mean((aware.dequant_content() - c) ** 2))
+    errc_unaware = float(jnp.mean((unaware.dequant_content() - c) ** 2))
+    assert errc_aware < errc_unaware
+
+
+def test_scale_fusion_algebra():
+    """Key Step 2: P (S_V . V_q) == (P . S_V) V_q (associativity, Eq. in §3.2.2)."""
+    key = jax.random.PRNGKey(8)
+    p = jax.nn.softmax(jax.random.normal(key, (4, 32)))
+    vq = jax.random.normal(jax.random.PRNGKey(9), (32, 16))
+    sv = jax.random.uniform(jax.random.PRNGKey(10), (32,), minval=0.1, maxval=2.0)
+    lhs = p @ (sv[:, None] * vq)
+    rhs = (p * sv[None, :]) @ vq
+    assert np.allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5, atol=1e-5)
+
+
+def test_fuse_and_quantize_p_bounds():
+    p = jnp.abs(jax.random.normal(jax.random.PRNGKey(11), (8, 64)))
+    sv = jnp.ones((64,))
+    p8, sp = quant.fuse_and_quantize_p(p, sv)
+    assert p8.dtype == jnp.float8_e4m3fn
+    assert np.all(np.abs(np.asarray(p8, np.float32)) <= 448.0)
+    rt = np.asarray(p8, np.float32) * np.asarray(sp)
+    assert np.allclose(rt, np.asarray(p), rtol=0.1, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 32), st.integers(2, 64),
+       st.floats(1e-3, 1e3), st.sampled_from(["fp8_e4m3", "int8"]))
+def test_property_scale_invariance(m, n, alpha, fmt):
+    """Per-token quantization commutes with positive per-tensor scaling:
+    q(alpha * x).q == q(x).q (same codes) and scale scales by alpha."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(m * 131 + n), (m, n)))
+    x = x + np.sign(x) * 1e-3        # avoid denormal edge dominance
+    q1 = quant.quantize_per_token(jnp.asarray(x), fmt)
+    q2 = quant.quantize_per_token(jnp.asarray(alpha * x), fmt)
+    assert np.allclose(np.asarray(q1.q, np.float32),
+                       np.asarray(q2.q, np.float32), atol=1)
+    assert np.allclose(np.asarray(q2.scale), alpha * np.asarray(q1.scale),
+                       rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(1, 16), st.integers(2, 48))
+def test_property_roundtrip_monotone_granularity(b, n):
+    """Finer granularity never increases MSE for a FIXED-POINT format
+    (int8): per_token <= per_tensor. This is *not* strictly true for FP8 —
+    floating-point rounding is scale-free, so rescaling only helps against
+    range clipping (the paper's outlier argument) — hence the loose fp8
+    bound below instead of strict monotonicity."""
+    x = np.array(jax.random.normal(jax.random.PRNGKey(b * 977 + n), (b, n)))
+    x[0, 0] = 50.0                    # inject an outlier row
+    mse_tok = float(quant.quant_mse(jnp.asarray(x), "int8", "per_token"))
+    mse_ten = float(quant.quant_mse(jnp.asarray(x), "int8", "per_tensor"))
+    assert mse_tok <= mse_ten * 1.01 + 1e-9
+    # (no fp8 assertion: fp8 per-token can be locally worse than per-tensor on
+    # tiny rows — its advantage is range/outlier handling, tested separately
+    # in test_rope_aware_beats_unaware_on_heavy_tailed_rope.)

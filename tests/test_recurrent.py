@@ -1,0 +1,66 @@
+"""Recurrent blocks: parallel (train) forms == step-by-step (decode) forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import rglru as R
+from repro.models import xlstm as X
+
+
+def test_rglru_block_equals_steps():
+    d, B, S = 16, 2, 12
+    params = R.init_rglru_params(jax.random.PRNGKey(0), d, d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    y_par, st_par = R.rglru_block(params, x)
+    st = R.init_rglru_state(B, d)
+    ys = []
+    for t in range(S):
+        y, st = R.rglru_step(params, x[:, t], st)
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_par.h), np.asarray(st.h),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_state_carries_across_chunks():
+    d, B = 8, 1
+    params = R.init_rglru_params(jax.random.PRNGKey(2), d, d)
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, 10, d))
+    y_full, _ = R.rglru_block(params, x)
+    y1, st = R.rglru_block(params, x[:, :6])
+    y2, _ = R.rglru_block(params, x[:, 6:], st)
+    np.testing.assert_allclose(np.asarray(y_full[:, 6:]), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_parallel_equals_recurrent():
+    d, B, S, H, dh = 16, 2, 10, 2, 8
+    params = X.init_mlstm_params(jax.random.PRNGKey(4), d, H, dh)
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, d))
+    y_par, st_par = X.mlstm_block(params, x)
+    st = X.init_mlstm_state(B, H, dh)
+    ys = []
+    for t in range(S):
+        y, st = X.mlstm_step(params, x[:, t], st)
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_par.c), np.asarray(st.c),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_slstm_block_equals_steps():
+    d, B, S, H, dh = 12, 2, 7, 2, 6
+    params = X.init_slstm_params(jax.random.PRNGKey(6), d, H, dh)
+    x = jax.random.normal(jax.random.PRNGKey(7), (B, S, d))
+    y_par, st_par = X.slstm_block(params, x)
+    st = X.init_slstm_state(B, H, dh)
+    ys = []
+    for t in range(S):
+        y, st = X.slstm_step(params, x[:, t], st)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(jnp.stack(ys, 1)),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,73 @@
+"""Sharding-rule unit tests: rank correctness, divisibility sanitization,
+weight-stationary mode, and the attention-fallback policy from §Perf."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config, get_config
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(1)     # (n_devices, 1) ('data','model')
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-v3-mla",
+                                  "recurrentgemma-9b", "xlstm-1.3b"])
+def test_param_pspecs_rank_matches(mesh, arch):
+    cfg = get_smoke_config(arch)
+    params = jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    specs = SH.param_pspecs(params, mesh)
+    for leaf, spec in zip(jax.tree.leaves(params), jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))):
+        assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+
+
+def test_sanitize_drops_nondivisible_axes():
+    import numpy as np
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 4}
+    ps = SH.sanitize_pspec(P("model", "data"), (49155, 2048), FakeMesh())
+    assert ps == P(None, "data")          # 49155 % 16 != 0 -> replicated
+    ps = SH.sanitize_pspec(P("model", None), (32, 8), FakeMesh())
+    assert ps == P("model", None)
+
+
+def test_weight_stationary_removes_dp_axes(mesh):
+    cfg = get_smoke_config("mla-7b")
+    params = jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    specs = SH.param_pspecs(params, mesh, weight_stationary=True)
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert "data" not in [a for part in spec if part
+                              for a in (part if isinstance(part, tuple) else (part,))]
+
+
+def test_attn_fallback_policy():
+    """Heads not divisible by the model axis: train replicates, decode may
+    shard head_dim (EXPERIMENTS §Perf: the 8.2x train collective fix)."""
+    class FakeMesh:
+        shape = {"model": 16, "data": 4}
+        axis_names = ("data", "model")
+    rules_train = SH._rules("data", "model", 16, attn_fallback="replicate")
+    rules_serve = SH._rules("data", "model", 16, attn_fallback="shard_dh")
+    shape = (3072, 24, 128)     # llama3.2-3b wq: H=24 not divisible by 16
+    assert rules_train["wq"](shape) == P("data", None, None)
+    assert rules_serve["wq"](shape) == P("data", None, "model")
+    shape_ok = (3072, 32, 128)
+    assert rules_train["wq"](shape_ok) == P("data", "model", None)
+    # xLSTM contraction operands are never model-sharded
+    assert rules_train["w_q"]((2048, 4, 512)) == P("data", None, None)
+    assert rules_train["w_v"]((2048, 4, 512)) == P("data", None, "model")
+
+
+def test_dp_axes_for_small_batch(mesh):
+    big = SH.dp_axes_for(16 * SH.dp_size(mesh), mesh)
+    assert big is not None
+    assert SH.dp_axes_for(1, mesh) is None or SH.dp_size(mesh) == 1
