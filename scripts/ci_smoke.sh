@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Fast end-to-end CI gate: tier-1 test suite + a real serving smoke run
+# (prefill -> quantized decode -> greedy generation), both the per-step
+# decode loop and the fused scan-based path.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+python -m repro.launch.serve --smoke --gen 4
+python -m repro.launch.serve --smoke --gen 4 --fused
+
+echo "[ci_smoke] OK"

@@ -55,6 +55,9 @@ class ModelConfig:
     # serving / quantized KV cache (the paper's technique)
     kv_fmt: str = "fp8_e4m3"         # fp8_e4m3 | int8 | none (bf16 baseline)
     page_size: int = 128
+    # split-KV (flash-decoding) sequence parallelism in decode attention:
+    # 0 = auto (context-length heuristic), 1 = single-pass, >1 = fixed splits
+    kv_splits: int = 0
     # capability flags for the shape grid
     subquadratic: bool = False       # can run long_500k decode
     has_decoder: bool = True         # encoder-only archs would be False

@@ -26,6 +26,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# jax.shard_map only exists on newer jax; fall back to the experimental home
+# (same callable) so this module works across the toolchain versions in use.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:                       # pragma: no cover - version dep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core.kvcache import MLACache
 from repro.kernels.mla_decode import ref as mla_ref
 
@@ -52,17 +58,32 @@ def mla_decode_shard_map(
     softmax_scale: float,
     block_n: int,
     fmt: str,
+    num_splits: int = 1,
 ) -> jax.Array:
-    """Returns o_latent [B, H, d_c] f32; attention region is collective-free."""
+    """Returns o_latent [B, H, d_c] f32; attention region is collective-free.
+
+    ``num_splits > 1`` runs the split-KV (flash-decoding) pipeline *inside*
+    the mapped region: the KV axis is replicated per chip, so splits cut a
+    chip-local axis and compose with the zero-collective property — the
+    combine is a per-chip reduction over that chip's own partials.
+    """
     dpa = dp_axes
 
     def local_attn(q_c8, q_r, sq, content, rope, scale, seq_lens):
-        o, _lse = mla_ref.snapmla_decode_parallel_ref(
-            q_c8, q_r, sq, content, rope, scale, seq_lens,
-            softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
+        if num_splits > 1:
+            # parallel (einsum) split form — while-loop-free inside the
+            # mapped region, same rationale as the pjit serve path
+            o, _lse = mla_ref.snapmla_decode_splitkv_parallel_ref(
+                q_c8, q_r, sq, content, rope, scale, seq_lens,
+                softmax_scale=softmax_scale, num_splits=num_splits,
+                block_n=block_n, fmt=fmt)
+        else:
+            o, _lse = mla_ref.snapmla_decode_parallel_ref(
+                q_c8, q_r, sq, content, rope, scale, seq_lens,
+                softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
         return o
 
-    f = jax.shard_map(
+    f = _shard_map(
         local_attn,
         mesh=mesh,
         in_specs=(P(dpa, "model", None), P(dpa, "model", None), P(dpa, "model"),
@@ -94,7 +115,7 @@ def mla_append_shard_map(mesh, dp_axes, cache: MLACache, cache_cfg,
     def local_append(cache, c_kv, k_r):
         return mla_append(cache, cache_cfg, c_kv, k_r)
 
-    f = jax.shard_map(
+    f = _shard_map(
         local_append, mesh=mesh,
         in_specs=(cache_specs, P(dpa, None), P(dpa, None)),
         out_specs=cache_specs)

@@ -62,6 +62,13 @@ class MLACache(NamedTuple):
 
 
 def init_mla_cache(cfg: CacheConfig, batch: int, max_len: int, d_c: int, d_r: int) -> MLACache:
+    """Allocate an MLA cache with capacity rounded up to the page size.
+
+    The rounding is load-bearing: the decode kernels require block-aligned
+    capacity (ops.snapmla_decode asserts it) — aligned allocation here is what
+    lets every decode step skip re-padding the whole cache (an O(max_len) HBM
+    copy per step in the old path).
+    """
     n = _round_up(max_len, cfg.page_size)
     return MLACache(
         content=jnp.zeros((batch, n, d_c), cfg.storage_dtype()),

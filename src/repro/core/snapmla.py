@@ -31,6 +31,10 @@ class SnapMLAConfig:
     cache: CacheConfig = CacheConfig()
     use_kernel: bool = True       # pallas kernels (interpret on CPU) vs jnp refs
     interpret: bool = True
+    # split-KV (flash-decoding) sequence parallelism for the decode kernel:
+    # None or 0 = context-length heuristic (ops.default_num_splits), 1 =
+    # always single-pass (bit-exact seed path), >1 = fixed split count.
+    num_splits: int | None = None
 
     @property
     def fmt(self) -> str:
@@ -95,6 +99,7 @@ def decode_step(
         softmax_scale=cfg.mla.softmax_scale,
         block_n=cfg.cache.page_size,
         fmt=cfg.fmt if cfg.cache.quantized else "none",
+        num_splits=cfg.num_splits,
         use_kernel=cfg.use_kernel, interpret=cfg.interpret)
 
     out = mla_lib.output_proj(params, o_lat.astype(h_t.dtype))

@@ -18,6 +18,32 @@ Implements the full quantized decode pipeline of §3.2.3 inside one
     4. Block-wise dynamic P quantization (sigma_p = max|p~|/qmax).
     5. FP8 PV "GEMM" + implicit dequantization via Eq. 12-13 accumulation.
 
+Split-KV (flash-decoding) variant — ``mla_decode_splitkv_pallas``:
+
+  grid = (batch, num_splits, kv_blocks_per_split) with the block loop still
+  innermost and sequential. Each split runs the exact same scale-fused FP8
+  block pipeline over its KV slice and emits partial (o, lse, sigma_p); a
+  second ``lse_combine_pallas`` kernel merges the partials with the standard
+  max-shift LSE rescale. The Appendix-E "monotonic scale progression"
+  argument restated for the split grid: scale monotonicity is only required
+  *within* one online-softmax accumulation chain (it is what makes the
+  Eq. 12-13 rescale factors sp_prev/sp_new well-conditioned), and under the
+  split grid each chain is confined to one (batch, split) cell whose block
+  loop is still executed in order by the sequential innermost grid dimension
+  — so the per-chain progression is preserved verbatim. *Across* splits no
+  ordering is needed at all: each split's sigma_p is carried into its partial
+  scale-carrying LSE (lse_s = m_s + log(sigma_p_s * l~_s), with o_s already
+  normalized so sigma_p cancels elementwise), and the combine is an
+  order-free sum of exp(lse_s - max lse) weights — the implicit
+  dequantization of Eqs. 12-13 stays exact under any split interleaving.
+
+  Block-level early exit: ``seq_lens`` is scalar-prefetched, so the BlockSpec
+  index maps clamp every out-of-range block index to the last live block of
+  that sequence — the pipeline then re-"fetches" an already-resident block
+  (Pallas elides the DMA when the index is unchanged) and ``pl.when`` skips
+  the compute. HBM traffic therefore scales with ``seq_lens``, not with the
+  padded cache capacity.
+
 TPU adaptation notes (DESIGN.md §2): FP8 here is the *storage* dtype — blocks
 are upcast to f32 on load inside the kernel (v5e has no FP8 MXU; the win is
 HBM bytes, which is what decode attention is bound by at small head counts).
@@ -25,9 +51,9 @@ The paged variant uses a scalar-prefetched page table in the BlockSpec index
 maps — the TPU-native PagedAttention (replaces the paper's TMA-driven
 Fused-K-Append read path).
 
-Validated in interpret mode against ref.snapmla_decode_pipeline_ref (exact
-same arithmetic) and core.attention.mla_decode_dequant_ref (quantization
-error bound).
+Validated in interpret mode against ref.snapmla_decode_pipeline_ref /
+ref.snapmla_decode_splitkv_ref (exact same arithmetic) and
+core.attention.mla_decode_dequant_ref (quantization error bound).
 """
 from __future__ import annotations
 
@@ -56,6 +82,52 @@ def _quantize_block(p_fused, fmt: str, qmax: float):
         sp = jnp.ones_like(sp)
         p8 = p_fused
     return p8, sp
+
+
+def _block_pipeline(qc, qr, sq, c, r, sk, tok0, seq_len,
+                    m_ref, l_ref, sp_ref, acc_ref, *,
+                    softmax_scale: float, fmt: str, qmax: float):
+    """One KV block of the scale-fused FP8 pipeline (steps 1-5 of §3.2.3).
+
+    Shared verbatim between the single-pass, split-KV, and paged kernels so
+    their per-block arithmetic is bit-identical. ``tok0`` is the absolute
+    token index of the block's first entry; state is carried in VMEM scratch.
+    """
+    # --- Key Step 1: uniform QK + single rescale -------------------------
+    s = jax.lax.dot_general(qc, c, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s += jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    s = s * (sq[:, None] * sk[None, :]) * softmax_scale            # [H, bn]
+
+    tok = tok0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = tok < seq_len
+    s = jnp.where(valid, s, NEG_INF)
+
+    # --- online softmax ---------------------------------------------------
+    m_prev, l_prev, sp_prev = m_ref[...], l_ref[...], sp_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))               # [H]
+    e = jnp.exp(s - m_new[:, None])
+    e = jnp.where(valid, e, 0.0)
+
+    # --- Key Step 2: scale fusion + block-wise dynamic P quantization -----
+    p_fused = e * sk[None, :]
+    p8, sp_new = _quantize_block(p_fused, fmt, qmax)
+
+    # --- implicit dequantization (Eqs. 12-13) ------------------------------
+    corr = jnp.exp(m_prev - m_new) * (sp_prev / sp_new)            # [H]
+    l_ref[...] = l_prev * corr + jnp.sum(e, axis=-1) / sp_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p8, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    sp_ref[...] = sp_new
+
+
+def _init_state(m_ref, l_ref, sp_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    sp_ref[...] = jnp.ones_like(sp_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
 
 
 def _mla_decode_kernel(
@@ -87,10 +159,7 @@ def _mla_decode_kernel(
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        sp_ref[...] = jnp.ones_like(sp_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _init_state(m_ref, l_ref, sp_ref, acc_ref)
 
     qc = q_c_ref[0].astype(jnp.float32)              # [H, d_c]
     qr = q_r_ref[0].astype(jnp.float32)              # [H, d_r]
@@ -104,34 +173,9 @@ def _mla_decode_kernel(
         r = rope_ref[0].astype(jnp.float32)
         sk = sigma_k_ref[0].astype(jnp.float32)
 
-    # --- Key Step 1: uniform QK + single rescale -------------------------
-    s = jax.lax.dot_general(qc, c, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s += jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    s = s * (sq[:, None] * sk[None, :]) * softmax_scale            # [H, bn]
-
-    tok = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = tok < seq_lens_ref[b]
-    s = jnp.where(valid, s, NEG_INF)
-
-    # --- online softmax ---------------------------------------------------
-    m_prev, l_prev, sp_prev = m_ref[...], l_ref[...], sp_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))               # [H]
-    e = jnp.exp(s - m_new[:, None])
-    e = jnp.where(valid, e, 0.0)
-
-    # --- Key Step 2: scale fusion + block-wise dynamic P quantization -----
-    p_fused = e * sk[None, :]
-    p8, sp_new = _quantize_block(p_fused, fmt, qmax)
-
-    # --- implicit dequantization (Eqs. 12-13) ------------------------------
-    corr = jnp.exp(m_prev - m_new) * (sp_prev / sp_new)            # [H]
-    l_ref[...] = l_prev * corr + jnp.sum(e, axis=-1) / sp_new
-    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-        p8, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
-    sp_ref[...] = sp_new
+    _block_pipeline(qc, qr, sq, c, r, sk, j * block_n, seq_lens_ref[b],
+                    m_ref, l_ref, sp_ref, acc_ref,
+                    softmax_scale=softmax_scale, fmt=fmt, qmax=qmax)
 
     @pl.when(j == nblocks - 1)
     def _finalize():
@@ -197,6 +241,211 @@ def mla_decode_pallas(
         ],
         interpret=interpret,
     )(seq_lens, q_c8, q_r, sigma_q, content, rope, sigma_k)
+
+
+# ---------------------------------------------------------------------------
+# Split-KV (flash-decoding) variant
+# ---------------------------------------------------------------------------
+
+def _mla_decode_splitkv_kernel(
+    # scalar prefetch
+    seq_lens_ref,           # [B] int32
+    # inputs (VMEM blocks)
+    q_c_ref,                # [1, H, d_c]
+    q_r_ref,                # [1, H, d_r]
+    sigma_q_ref,            # [1, H]
+    content_ref,            # [1, bn, d_c]
+    rope_ref,               # [1, bn, d_r]
+    sigma_k_ref,            # [1, bn]
+    # outputs (per-split partials)
+    o_ref,                  # [1, 1, H, d_c] f32
+    lse_ref,                # [1, 1, H]      f32 (scale-carrying LSE)
+    sp_ref_out,             # [1, 1, H]      f32 (final per-split sigma_p)
+    # scratch
+    m_ref, l_ref, sp_ref,   # [H]
+    acc_ref,                # [H, d_c]
+    *,
+    softmax_scale: float,
+    block_n: int,
+    blocks_per_split: int,
+    fmt: str,
+    qmax: float,
+):
+    b = pl.program_id(0)
+    s_id = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_state(m_ref, l_ref, sp_ref, acc_ref)
+
+    # Block-level early exit: blocks whose first token is past seq_len carry
+    # no valid entries (valid tokens are a prefix), so skip their compute
+    # entirely. Their DMA was already elided by the clamped index map.
+    g = s_id * blocks_per_split + j                    # global KV block index
+    live = g * block_n < seq_lens_ref[b]
+
+    @pl.when(live)
+    def _compute():
+        qc = q_c_ref[0].astype(jnp.float32)
+        qr = q_r_ref[0].astype(jnp.float32)
+        sq = sigma_q_ref[0].astype(jnp.float32)
+        c = content_ref[0].astype(jnp.float32)
+        r = rope_ref[0].astype(jnp.float32)
+        sk = sigma_k_ref[0].astype(jnp.float32)
+        _block_pipeline(qc, qr, sq, c, r, sk, g * block_n, seq_lens_ref[b],
+                        m_ref, l_ref, sp_ref, acc_ref,
+                        softmax_scale=softmax_scale, fmt=fmt, qmax=qmax)
+
+    @pl.when(j == blocks_per_split - 1)
+    def _finalize():
+        # Empty splits (no live block touched the state) publish a neutral
+        # partial: o = 0, lse = NEG_INF — the combine weight exp(lse - m*)
+        # then vanishes. l > 0 iff at least one valid token was accumulated.
+        l = l_ref[...]
+        has = l > 0.0
+        safe_l = jnp.where(has, l, 1.0)
+        o_ref[0, 0] = jnp.where(has[:, None], acc_ref[...] / safe_l[:, None], 0.0)
+        lse_ref[0, 0] = jnp.where(
+            has, m_ref[...] + jnp.log(sp_ref[...] * safe_l), NEG_INF)
+        sp_ref_out[0, 0] = sp_ref[...]
+
+
+def _clamped_block_index(seq_lens_ref, b, s_id, j, blocks_per_split, block_n):
+    """Global block index for (split, block), clamped to the last live block of
+    sequence ``b`` so dead blocks re-address an already-resident page (the
+    Pallas pipeline elides the DMA when the index map output is unchanged)."""
+    g = s_id * blocks_per_split + j
+    last_live = jnp.maximum((seq_lens_ref[b] + block_n - 1) // block_n - 1, 0)
+    return jnp.minimum(g, last_live)
+
+
+def mla_decode_splitkv_pallas(
+    q_c8: jax.Array,        # [B, H, d_c] storage dtype
+    q_r: jax.Array,         # [B, H, d_r] f32 (pre-divided by sigma_q)
+    sigma_q: jax.Array,     # [B, H] f32
+    content: jax.Array,     # [B, N, d_c]
+    rope: jax.Array,        # [B, N, d_r]
+    sigma_k: jax.Array,     # [B, N] f32
+    seq_lens: jax.Array,    # [B] int32
+    *,
+    softmax_scale: float,
+    num_splits: int,
+    block_n: int = 128,
+    fmt: str = "fp8_e4m3",
+    interpret: bool = True,
+    return_partials: bool = False,
+):
+    """Sequence-parallel (flash-decoding) SnapMLA decode.
+
+    Grid (batch, num_splits, kv_blocks_per_split): each split runs the
+    scale-fused FP8 pipeline over its KV slice and emits partial
+    (o, lse, sigma_p); ``lse_combine_pallas`` merges them. Returns
+    (o [B,H,d_c] f32, lse [B,H]) — plus the raw partials when
+    ``return_partials`` (for oracles/telemetry).
+    """
+    B, H, d_c = q_c8.shape
+    d_r = q_r.shape[-1]
+    N = content.shape[1]
+    assert N % block_n == 0, (N, block_n)
+    nblocks = N // block_n
+    assert 1 <= num_splits <= nblocks, (num_splits, nblocks)
+    blocks_per_split = (nblocks + num_splits - 1) // num_splits
+    qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+
+    kernel = functools.partial(
+        _mla_decode_splitkv_kernel, softmax_scale=softmax_scale,
+        block_n=block_n, blocks_per_split=blocks_per_split, fmt=fmt, qmax=qmax)
+
+    def kv_idx(b, s, j, sl):
+        return (b, _clamped_block_index(sl, b, s, j, blocks_per_split, block_n), 0)
+
+    def sk_idx(b, s, j, sl):
+        return (b, _clamped_block_index(sl, b, s, j, blocks_per_split, block_n))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, num_splits, blocks_per_split),
+        in_specs=[
+            pl.BlockSpec((1, H, d_c), lambda b, s, j, sl: (b, 0, 0)),
+            pl.BlockSpec((1, H, d_r), lambda b, s, j, sl: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, s, j, sl: (b, 0)),
+            pl.BlockSpec((1, block_n, d_c), kv_idx),
+            pl.BlockSpec((1, block_n, d_r), kv_idx),
+            pl.BlockSpec((1, block_n), sk_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, H, d_c), lambda b, s, j, sl: (b, s, 0, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, s, j, sl: (b, s, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, s, j, sl: (b, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, d_c), jnp.float32),
+        ],
+    )
+    o_p, lse_p, sp_p = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, num_splits, H, d_c), jnp.float32),
+            jax.ShapeDtypeStruct((B, num_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, num_splits, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seq_lens, q_c8, q_r, sigma_q, content, rope, sigma_k)
+
+    o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
+    if return_partials:
+        return o, lse, (o_p, lse_p, sp_p)
+    return o, lse
+
+
+def _lse_combine_kernel(o_p_ref, lse_p_ref, o_ref, lse_ref):
+    """Max-shift LSE combine of per-split partials (one batch row per step).
+
+    The per-split sigma_p is carried inside the scale-carrying partial LSE
+    (lse_s = m_s + log(sigma_p_s * l~_s) with o_s = acc_s / l~_s, so sigma_p
+    cancels elementwise in o_s and survives only in the weight) — making the
+    standard flash-decoding combine exact for the quantized pipeline.
+    """
+    lse_p = lse_p_ref[0]                               # [S, H]
+    o_p = o_p_ref[0]                                   # [S, H, d_c]
+    m_star = jnp.max(lse_p, axis=0)                    # [H]
+    w = jnp.exp(lse_p - m_star[None, :])               # [S, H]
+    den = jnp.sum(w, axis=0)                           # [H]
+    num = jnp.sum(w[:, :, None] * o_p, axis=0)         # [H, d_c]
+    o_ref[0] = num / den[:, None]
+    lse_ref[0] = m_star + jnp.log(den)
+
+
+def lse_combine_pallas(
+    o_partial: jax.Array,     # [B, S, H, d_c] f32
+    lse_partial: jax.Array,   # [B, S, H] f32 (scale-carrying, NEG_INF if empty)
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Combine split-KV partials: returns (o [B,H,d_c], lse [B,H])."""
+    B, S, H, d_c = o_partial.shape
+    return pl.pallas_call(
+        _lse_combine_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, H, d_c), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, H), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, d_c), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, d_c), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(o_partial, lse_partial)
 
 
 def mla_decode_paged_pallas(

@@ -1,8 +1,16 @@
 """Jit'd public wrappers for the SnapMLA MLA decode kernel.
 
-``snapmla_decode`` consumes a quantized MLACache directly; handles padding to
-block multiples and selects kernel vs pure-jnp reference path. On CPU the
-kernel runs in interpret mode; on TPU set interpret=False.
+``snapmla_decode`` consumes a quantized MLACache directly; selects between the
+single-pass kernel, the split-KV (flash-decoding) kernel, and the pure-jnp
+reference paths. ``num_splits=None`` applies ``default_num_splits`` — a
+context-length heuristic that keeps short contexts on the single-pass path
+(bit-exact with the seed kernel) and cuts long contexts into sequence-parallel
+splits. On CPU the kernels run in interpret mode; on TPU set interpret=False.
+
+Cache alignment: the cache capacity must be a multiple of ``block_n``
+(``init_mla_cache`` rounds ``max_len`` up to the page size, so this holds by
+construction) — the former per-step ``jnp.pad`` of the whole cache was an
+O(max_len) HBM copy on every decode step and has been removed.
 """
 from __future__ import annotations
 
@@ -15,8 +23,48 @@ from repro.core.kvcache import MLACache, PagedMLAPool
 from repro.kernels.mla_decode import kernel as _k
 from repro.kernels.mla_decode import ref as _ref
 
+# Split sizing: aim for splits of ~SPLIT_TARGET_TOKENS so each split amortizes
+# its combine cost, capped at MAX_SPLITS partial buffers.
+SPLIT_TARGET_TOKENS = 4096
+MAX_SPLITS = 8
 
-@partial(jax.jit, static_argnames=("softmax_scale", "block_n", "fmt", "use_kernel", "interpret"))
+
+def default_num_splits(context_len: int, block_n: int = 128,
+                       target_tokens: int = SPLIT_TARGET_TOKENS,
+                       max_splits: int = MAX_SPLITS) -> int:
+    """num_splits heuristic keyed on context length (cache capacity).
+
+    Short contexts (< 2 * target) stay single-pass — bit-exact with the seed
+    kernel and no combine overhead. Longer contexts get the largest power of
+    two <= context/target, capped at ``max_splits`` and at the block count.
+    """
+    nblocks = max(1, -(-context_len // block_n))
+    s = 1
+    while s * 2 <= min(max_splits, context_len // target_tokens, nblocks):
+        s *= 2
+    return s
+
+
+def resolve_num_splits(requested: int | None, capacity: int,
+                       block_n: int) -> int:
+    """Single resolution rule for every decode path (kernel, pjit ref,
+    shard_map ref): None/0 = auto heuristic; fixed counts are clamped to the
+    block count so a config tuned for long contexts still traces on a short
+    cache."""
+    splits = requested if requested else default_num_splits(capacity, block_n)
+    return max(1, min(splits, capacity // block_n))
+
+
+def _check_alignment(n: int, block_n: int) -> None:
+    if n % block_n:
+        raise ValueError(
+            f"cache capacity {n} is not a multiple of block_n={block_n}; "
+            "allocate caches with init_mla_cache (it rounds max_len up to the "
+            "page size) so the decode kernel never re-pads the cache per step")
+
+
+@partial(jax.jit, static_argnames=("softmax_scale", "block_n", "fmt",
+                                   "num_splits", "use_kernel", "interpret"))
 def snapmla_decode(
     q_c8: jax.Array,
     q_r: jax.Array,
@@ -26,25 +74,30 @@ def snapmla_decode(
     softmax_scale: float,
     block_n: int = 128,
     fmt: str = "fp8_e4m3",
+    num_splits: int | None = None,
     use_kernel: bool = True,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode one token per sequence. Returns (o_latent [B,H,d_c] f32, lse)."""
     N = cache.content.shape[1]
-    pad = (-N) % block_n
-    content, rope, scale = cache.content, cache.rope, cache.scale
-    if pad:
-        content = jnp.pad(content, ((0, 0), (0, pad), (0, 0)))
-        rope = jnp.pad(rope, ((0, 0), (0, pad), (0, 0)))
-        scale = jnp.pad(scale, ((0, 0), (0, pad)), constant_values=1.0)
-    args = (q_c8, q_r.astype(jnp.float32), sigma_q, content,
-            rope.astype(jnp.float32), scale, cache.seq_lens)
+    _check_alignment(N, block_n)
+    splits = resolve_num_splits(num_splits, N, block_n)
+    args = (q_c8, q_r.astype(jnp.float32), sigma_q, cache.content,
+            cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens)
     if use_kernel:
-        return _k.mla_decode_pallas(
-            *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
-            interpret=interpret)
-    return _ref.snapmla_decode_pipeline_ref(
-        *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
+        if splits == 1:
+            return _k.mla_decode_pallas(
+                *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
+                interpret=interpret)
+        return _k.mla_decode_splitkv_pallas(
+            *args, softmax_scale=softmax_scale, num_splits=splits,
+            block_n=block_n, fmt=fmt, interpret=interpret)
+    if splits == 1:
+        return _ref.snapmla_decode_pipeline_ref(
+            *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
+    return _ref.snapmla_decode_splitkv_ref(
+        *args, softmax_scale=softmax_scale, num_splits=splits,
+        block_n=block_n, fmt=fmt)
 
 
 @partial(jax.jit, static_argnames=("softmax_scale", "fmt", "interpret"))

@@ -1,12 +1,16 @@
 """Pure-jnp oracle for the SnapMLA FP8 MLA decode pipeline.
 
-Two references:
+Three references:
 
   * ``snapmla_decode_pipeline_ref`` — bit-faithful emulation of the quantized
     block-wise pipeline (paper §3.2.3 + Appendix D, Eqs. 12-13): online
     softmax, per-token V-scale fusion, block-wise dynamic P quantization, and
     implicit dequantization via scale-aware accumulation. The Pallas kernel
     must match this to ~1e-5 (same arithmetic, different schedule).
+  * ``snapmla_decode_splitkv_ref`` — split-KV (flash-decoding) oracle: runs the
+    pipeline independently per KV split, then merges the per-split
+    (o, lse, sigma_p) partials with ``lse_combine_ref``. The split-KV Pallas
+    kernel must match this to ~1e-5.
   * the exact dequantize-first oracle lives in core/attention.py
     (``mla_decode_dequant_ref``) and bounds the *quantization* error.
 """
@@ -16,6 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+
+# Finite -inf sentinel (matches the kernel): keeps empty-split combines
+# NaN-free — NEG_INF - NEG_INF == 0, unlike IEEE -inf.
+NEG_INF = -1e30
 
 
 def snapmla_decode_pipeline_ref(
@@ -31,8 +39,15 @@ def snapmla_decode_pipeline_ref(
     block_n: int = 128,
     fmt: quant.QuantFormat = "fp8_e4m3",
     p_quant: bool = True,  # False => scale-fused but unquantized P (ablation)
-) -> tuple[jax.Array, jax.Array]:
-    """Returns (o [B, H, d_c] f32, lse [B, H] f32)."""
+    return_sigma_p: bool = False,
+    skip_dead_blocks: bool = False,  # mirror the kernel's pl.when early exit
+) -> tuple[jax.Array, ...]:
+    """Returns (o [B, H, d_c] f32, lse [B, H] f32) — plus the final per-head
+    sigma_p [B, H] when ``return_sigma_p`` (split-KV partial telemetry).
+
+    ``skip_dead_blocks`` freezes the carried state on blocks with no valid
+    token (instead of running their sigma_p rescale on zeros), matching the
+    split-KV kernel's block-level early exit bit-for-bit on live blocks."""
     B, H, d_c = q_c8.shape
     N = content.shape[1]
     assert N % block_n == 0, (N, block_n)
@@ -68,6 +83,12 @@ def snapmla_decode_pipeline_ref(
             corr = jnp.exp(m - m_new) * (sp / sp_new)                 # Eq. 12/13
             l_new = l * corr + jnp.sum(e, axis=-1) / sp_new
             acc_new = acc * corr[:, None] + p8 @ sl.astype(jnp.float32)
+            if skip_dead_blocks:
+                live = j * block_n < n_b
+                m_new = jnp.where(live, m_new, m)
+                l_new = jnp.where(live, l_new, l)
+                sp_new = jnp.where(live, sp_new, sp)
+                acc_new = jnp.where(live, acc_new, acc)
             return (m_new, l_new, sp_new, acc_new), None
 
         init = (
@@ -79,10 +100,106 @@ def snapmla_decode_pipeline_ref(
         (m, l, sp, acc), _ = jax.lax.scan(body, init, jnp.arange(nblocks))
         o = acc / l[:, None]                                           # sigma_p cancels
         lse = m + jnp.log(sp * l)
-        return o, lse
+        return o, lse, sp
 
-    return jax.vmap(one_batch)(qc, qr, sigma_q.astype(jnp.float32),
-                               content, rope, sigma_k.astype(jnp.float32), seq_lens)
+    o, lse, sp = jax.vmap(one_batch)(qc, qr, sigma_q.astype(jnp.float32),
+                                     content, rope, sigma_k.astype(jnp.float32),
+                                     seq_lens)
+    if return_sigma_p:
+        return o, lse, sp
+    return o, lse
+
+
+def lse_combine_ref(
+    o_partial: jax.Array,     # [B, S, H, d_c] per-split normalized outputs
+    lse_partial: jax.Array,   # [B, S, H] scale-carrying LSE (NEG_INF if empty)
+) -> tuple[jax.Array, jax.Array]:
+    """Max-shift LSE combine of split-KV partials (flash-decoding rescale).
+
+    Exact for the quantized pipeline because each split's sigma_p is carried
+    inside its scale-carrying LSE: lse_s = m_s + log(sigma_p_s * l~_s) where
+    l~_s and acc_s live in the split's final quantized domain, so the true
+    softmax denominator of split s is exp(lse_s) and sigma_p has already
+    cancelled elementwise in o_s = acc_s / l~_s (Eqs. 12-13 telescoped).
+    """
+    m_star = jnp.max(lse_partial, axis=1)                       # [B, H]
+    w = jnp.exp(lse_partial - m_star[:, None, :])               # [B, S, H]
+    den = jnp.sum(w, axis=1)                                    # [B, H]
+    num = jnp.einsum("bsh,bshc->bhc", w, o_partial)
+    return num / den[..., None], m_star + jnp.log(den)
+
+
+def _split_partials(decode_one_split, content, rope, sigma_k, seq_lens,
+                    num_splits: int, block_n: int):
+    """Shared split-KV scaffolding: cut the KV axis into ``num_splits``
+    contiguous slices of whole blocks (padding the tail slice), run
+    ``decode_one_split(content, rope, sigma_k, local_len)`` per slice —
+    returning (o, lse, sigma_p) partials — and neutralize empty slices
+    (o = 0, lse = NEG_INF, sigma_p = 1)."""
+    N = content.shape[1]
+    assert N % block_n == 0, (N, block_n)
+    nblocks = N // block_n
+    assert 1 <= num_splits <= nblocks, (num_splits, nblocks)
+    blocks_per_split = -(-nblocks // num_splits)
+    split_tokens = blocks_per_split * block_n
+    pad = num_splits * split_tokens - N
+    if pad:
+        content = jnp.pad(content.astype(jnp.float32), ((0, 0), (0, pad), (0, 0))
+                          ).astype(content.dtype)
+        rope = jnp.pad(rope, ((0, 0), (0, pad), (0, 0)))
+        sigma_k = jnp.pad(sigma_k, ((0, 0), (0, pad)), constant_values=1.0)
+
+    o_parts, lse_parts, sp_parts = [], [], []
+    for s in range(num_splits):
+        lo = s * split_tokens
+        local_len = jnp.clip(seq_lens - lo, 0, split_tokens)
+        o_s, lse_s, sp_s = decode_one_split(
+            content[:, lo:lo + split_tokens], rope[:, lo:lo + split_tokens],
+            sigma_k[:, lo:lo + split_tokens], local_len)
+        empty = local_len <= 0                                   # [B]
+        o_parts.append(jnp.where(empty[:, None, None], 0.0, o_s))
+        lse_parts.append(jnp.where(empty[:, None], NEG_INF,
+                                   jnp.nan_to_num(lse_s, neginf=NEG_INF)))
+        sp_parts.append(jnp.where(empty[:, None], 1.0, sp_s))
+    return (jnp.stack(o_parts, axis=1), jnp.stack(lse_parts, axis=1),
+            jnp.stack(sp_parts, axis=1))
+
+
+def snapmla_decode_splitkv_ref(
+    q_c8: jax.Array,       # [B, H, d_c]
+    q_r: jax.Array,        # [B, H, d_r] (pre-divided by sigma_q)
+    sigma_q: jax.Array,    # [B, H]
+    content: jax.Array,    # [B, N, d_c]
+    rope: jax.Array,       # [B, N, d_r] (pre-divided by sigma_k)
+    sigma_k: jax.Array,    # [B, N]
+    seq_lens: jax.Array,   # [B]
+    *,
+    softmax_scale: float,
+    num_splits: int,
+    block_n: int = 128,
+    fmt: quant.QuantFormat = "fp8_e4m3",
+    return_partials: bool = False,
+):
+    """Split-KV (flash-decoding) oracle: per-split pipeline + LSE combine.
+
+    Mirrors ``kernel.mla_decode_splitkv_pallas``: each slice runs the full
+    quantized pipeline with its local ragged length and the kernel's
+    dead-block early exit. The per-block sigma_p quantization decisions
+    depend on the split's running max history, so num_splits > 1 differs
+    from the single-pass pipeline only at quantization-rounding level (and
+    is exact for fmt == "none")."""
+    def one_split(c, r, sk, local_len):
+        return snapmla_decode_pipeline_ref(
+            q_c8, q_r, sigma_q, c, r, sk, local_len,
+            softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
+            return_sigma_p=True, skip_dead_blocks=True)
+
+    o_p, lse_p, sp_p = _split_partials(one_split, content, rope, sigma_k,
+                                       seq_lens, num_splits, block_n)
+    o, lse = lse_combine_ref(o_p, lse_p)
+    if return_partials:
+        return o, lse, (o_p, lse_p, sp_p)
+    return o, lse
 
 
 def snapmla_decode_parallel_ref(
@@ -148,6 +265,40 @@ def snapmla_decode_parallel_ref(
     o = num / den[..., None]
     lse = m_star[..., 0] + jnp.log(den)
     return o, lse
+
+
+def snapmla_decode_splitkv_parallel_ref(
+    q_c8: jax.Array,       # [B, H, d_c]
+    q_r: jax.Array,        # [B, H, d_r] (pre-divided by sigma_q)
+    sigma_q: jax.Array,    # [B, H]
+    content: jax.Array,    # [B, N, d_c]
+    rope: jax.Array,       # [B, N, d_r] (pre-divided by sigma_k)
+    sigma_k: jax.Array,    # [B, N]
+    seq_lens: jax.Array,   # [B]
+    *,
+    softmax_scale: float,
+    num_splits: int,
+    block_n: int = 128,
+    fmt: quant.QuantFormat = "fp8_e4m3",
+) -> tuple[jax.Array, jax.Array]:
+    """Split-KV in the *parallel* (einsum, while-loop-free) form.
+
+    The serving/pjit twin of ``snapmla_decode_splitkv_ref``: per split the
+    two-pass flash form of the pipeline runs as batched einsums (no lax.scan,
+    so XLA parallelizes freely and HLO cost_analysis counts every byte/FLOP —
+    same rationale as ``snapmla_decode_parallel_ref``), then the per-split
+    partials merge through the same ``lse_combine_ref``. Empty splits emit
+    the neutral (o=0, lse=NEG_INF) partial.
+    """
+    def one_split(c, r, sk, local_len):
+        o_s, lse_s = snapmla_decode_parallel_ref(
+            q_c8, q_r, sigma_q, c, r, sk, local_len,
+            softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
+        return o_s, lse_s, jnp.ones_like(lse_s)  # sigma_p folded into lse
+
+    o_p, lse_p, _ = _split_partials(one_split, content, rope, sigma_k,
+                                    seq_lens, num_splits, block_n)
+    return lse_combine_ref(o_p, lse_p)
 
 
 def prepare_q(q_c: jax.Array, q_r: jax.Array, fmt: quant.QuantFormat = "fp8_e4m3"):

@@ -62,6 +62,43 @@ def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     return jnp.stack(outs, axis=1), toks_per_s
 
 
+def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
+                   aux_embed=None):
+    """Scan-based generation: prefill + ONE fused decode dispatch.
+
+    Token-exact with ``generate`` (same greedy decode_step inside a lax.scan)
+    but the whole multi-token decode is a single compiled program — no
+    per-step dispatch/host round-trip — with the decode state (quantized KV
+    caches) donated so XLA updates the cache buffers in place.
+
+    Returns (generated tokens [B, gen_steps], decode tok/s).
+    """
+    mesh = mesh or make_host_mesh(1)
+    B, S = prompts.shape
+    max_len = S + gen_steps + cfg.page_size
+    prefill_fn = jax.jit(ST.make_prefill_step(cfg))
+    fused_fn = jax.jit(ST.make_fused_decode(cfg, max(gen_steps - 1, 0)),
+                       donate_argnums=(2,))
+
+    state = T.init_decode_state(cfg, B, max_len)
+    logits, state = prefill_fn(params, prompts, state, *(
+        (aux_embed,) if aux_embed is not None else ()))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    if gen_steps <= 1:
+        return tok[:, None][:, :gen_steps], 0.0
+
+    start_pos = jnp.full((B,), S, jnp.int32)
+    # AOT-compile before timing (donation happens at execution, not lowering)
+    compiled = fused_fn.lower(params, tok, state, start_pos).compile()
+    jax.block_until_ready((tok, state))
+    t0 = time.time()
+    toks, _state = compiled(params, tok, state, start_pos)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    toks_per_s = B * (gen_steps - 1) / max(dt, 1e-9)
+    return jnp.concatenate([tok[:, None], toks], axis=1), toks_per_s
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mla-7b")
@@ -71,11 +108,16 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--fmt", default="fp8_e4m3",
                     choices=["fp8_e4m3", "int8", "none"])
+    ap.add_argument("--fused", action="store_true",
+                    help="scan-based generate_fused (one dispatch) instead of "
+                         "the per-step decode loop")
+    ap.add_argument("--kv-splits", type=int, default=0,
+                    help="split-KV decode splits (0 = auto heuristic)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    cfg = dataclasses.replace(cfg, kv_fmt=args.fmt)
+    cfg = dataclasses.replace(cfg, kv_fmt=args.fmt, kv_splits=args.kv_splits)
     key = jax.random.PRNGKey(args.seed)
     params = T.init_model(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
@@ -83,13 +125,15 @@ def main():
     aux = (jax.random.normal(key, (args.batch, cfg.n_aux_tokens, cfg.d_model))
            if cfg.n_aux_tokens else None)
 
-    toks, tps = generate(cfg, params, prompts, args.gen, aux_embed=aux)
-    print(f"[serve] {cfg.name} fmt={args.fmt}: generated {toks.shape} "
+    gen_fn = generate_fused if args.fused else generate
+    toks, tps = gen_fn(cfg, params, prompts, args.gen, aux_embed=aux)
+    mode = "fused-scan" if args.fused else "step-loop"
+    print(f"[serve] {cfg.name} fmt={args.fmt} ({mode}): generated {toks.shape} "
           f"at {tps:.1f} tok/s (decode)")
 
     if args.fmt != "none":
         cfg_b = dataclasses.replace(cfg, kv_fmt="none")
-        toks_b, _ = generate(cfg_b, params, prompts, args.gen, aux_embed=aux)
+        toks_b, _ = gen_fn(cfg_b, params, prompts, args.gen, aux_embed=aux)
         agree = float(jnp.mean((toks == toks_b).astype(jnp.float32)))
         print(f"[serve] token agreement vs BF16 pipeline: {agree * 100:.1f}%")
 

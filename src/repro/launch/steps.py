@@ -71,6 +71,31 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
+def make_fused_decode(cfg: ModelConfig, n_steps: int):
+    """Multi-token greedy decode as ONE dispatch: a lax.scan over decode steps.
+
+    Replaces the per-step Python loop (one jit dispatch + host round-trip per
+    token) with a single compiled scan whose carry is (token, decode state) —
+    greedy sampling happens inside the scan. Jit with ``donate_argnums=(2,)``
+    so the cache buffers are updated in place across the whole generation.
+
+    Returns fused(params, token [B], state, start_pos [B])
+        -> (tokens [B, n_steps] int32, final state).
+    """
+    def fused_decode(params, token, state, start_pos):
+        def body(carry, i):
+            tok, st = carry
+            logits, st = T.decode_step(params, cfg, tok, st, start_pos + i)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            return (tok, st), tok
+
+        (_, state_out), toks = jax.lax.scan(
+            body, (token, state), jnp.arange(n_steps, dtype=jnp.int32))
+        return jnp.moveaxis(toks, 0, 1), state_out
+
+    return fused_decode
+
+
 # ---------------------------------------------------------------------------
 # ShapeDtypeStruct input specs (no allocation — dry-run stand-ins)
 # ---------------------------------------------------------------------------

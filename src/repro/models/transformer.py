@@ -348,6 +348,12 @@ def _cross_decode(p, cfg: ModelConfig, x_t, cache: GQACache):
     return jnp.einsum("bhk,hkd->bd", o.astype(x_t.dtype), p.wo)
 
 
+def _mla_splits(cfg: ModelConfig, capacity: int) -> int:
+    """Resolve ModelConfig.kv_splits (0 = auto) against the cache capacity."""
+    from repro.kernels.mla_decode.ops import resolve_num_splits
+    return resolve_num_splits(cfg.kv_splits, capacity, cfg.page_size)
+
+
 def _mla_decode(p, cfg: ModelConfig, x_t, cache: MLACache, pos):
     """SnapMLA decode: Fused-Q-Quant + Fused-K-Append + scale-fused kernel."""
     mcfg = _mla_cfg(cfg)
@@ -369,6 +375,7 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache: MLACache, pos):
     fmt = ccfg.fmt if ccfg.quantized else "none"
     q_c8, q_r_s, sigma_q = mla_kref.prepare_q(q_lat, q_r[:, 0], fmt)
     q_c8 = _wsc(q_c8, "dp", "model", None)
+    splits = _mla_splits(cfg, cache.capacity)
     if SHARD_CTX is not None and SHARD_CTX.get("use_shard_map"):
         # collective-free attention region (EXPERIMENTS §Perf, core/
         # distributed_decode.py) — explicit shard_map over dp x model
@@ -379,12 +386,21 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache: MLACache, pos):
             o_lat = mla_decode_shard_map(
                 SHARD_CTX["mesh"], SHARD_CTX["dp"], q_c8, q_r_s, sigma_q,
                 cache, softmax_scale=mcfg.softmax_scale,
-                block_n=ccfg.page_size, fmt=fmt)
+                block_n=ccfg.page_size, fmt=fmt, num_splits=splits)
             return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
-    o_lat, _ = mla_kref.snapmla_decode_parallel_ref(
-        q_c8, q_r_s, sigma_q, cache.content,
-        cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens,
-        softmax_scale=mcfg.softmax_scale, block_n=ccfg.page_size, fmt=fmt)
+    if splits > 1:
+        # parallel (einsum) split form: while-loop-free, so the pjit serve
+        # path stays XLA-parallel and dryrun cost_analysis stays exact
+        o_lat, _ = mla_kref.snapmla_decode_splitkv_parallel_ref(
+            q_c8, q_r_s, sigma_q, cache.content,
+            cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens,
+            softmax_scale=mcfg.softmax_scale, num_splits=splits,
+            block_n=ccfg.page_size, fmt=fmt)
+    else:
+        o_lat, _ = mla_kref.snapmla_decode_parallel_ref(
+            q_c8, q_r_s, sigma_q, cache.content,
+            cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens,
+            softmax_scale=mcfg.softmax_scale, block_n=ccfg.page_size, fmt=fmt)
     o_lat = _wsc(o_lat, "dp", "model", None)
     return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
 

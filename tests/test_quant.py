@@ -1,11 +1,29 @@
-"""Quantization primitive tests (paper §3.1 / Appendix C) + hypothesis properties."""
+"""Quantization primitive tests (paper §3.1 / Appendix C) + hypothesis properties.
+
+The property tests run under hypothesis when it is installed; on a clean
+environment they fall back to fixed-seed sampled cases so the suite still
+collects and exercises the same invariants (just without shrinking).
+"""
+import numpy as _np
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised on clean envs
+    HAVE_HYPOTHESIS = False
 
 from repro.core import quant
+
+
+def _fixed_cases(n_cases, sampler):
+    """Deterministic substitute for @given: sample n_cases arg tuples."""
+    rng = _np.random.RandomState(0)
+    return [sampler(rng) for _ in range(n_cases)]
 
 
 @pytest.mark.parametrize("fmt,tol", [("fp8_e4m3", 0.07), ("int8", 0.03)])
@@ -89,10 +107,7 @@ def test_fuse_and_quantize_p_bounds():
     assert np.allclose(rt, np.asarray(p), rtol=0.1, atol=1e-4)
 
 
-@settings(deadline=None, max_examples=25)
-@given(st.integers(2, 32), st.integers(2, 64),
-       st.floats(1e-3, 1e3), st.sampled_from(["fp8_e4m3", "int8"]))
-def test_property_scale_invariance(m, n, alpha, fmt):
+def _check_scale_invariance(m, n, alpha, fmt):
     """Per-token quantization commutes with positive per-tensor scaling:
     q(alpha * x).q == q(x).q (same codes) and scale scales by alpha."""
     x = np.asarray(jax.random.normal(jax.random.PRNGKey(m * 131 + n), (m, n)))
@@ -105,9 +120,22 @@ def test_property_scale_invariance(m, n, alpha, fmt):
                        rtol=1e-4)
 
 
-@settings(deadline=None, max_examples=25)
-@given(st.integers(1, 16), st.integers(2, 48))
-def test_property_roundtrip_monotone_granularity(b, n):
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(2, 32), st.integers(2, 64),
+           st.floats(1e-3, 1e3), st.sampled_from(["fp8_e4m3", "int8"]))
+    def test_property_scale_invariance(m, n, alpha, fmt):
+        _check_scale_invariance(m, n, alpha, fmt)
+else:
+    @pytest.mark.parametrize("m,n,alpha,fmt", _fixed_cases(
+        25, lambda rng: (int(rng.randint(2, 33)), int(rng.randint(2, 65)),
+                         float(10.0 ** rng.uniform(-3, 3)),
+                         rng.choice(["fp8_e4m3", "int8"]))))
+    def test_property_scale_invariance(m, n, alpha, fmt):
+        _check_scale_invariance(m, n, alpha, fmt)
+
+
+def _check_roundtrip_monotone_granularity(b, n):
     """Finer granularity never increases MSE for a FIXED-POINT format
     (int8): per_token <= per_tensor. This is *not* strictly true for FP8 —
     floating-point rounding is scale-free, so rescaling only helps against
@@ -121,3 +149,15 @@ def test_property_roundtrip_monotone_granularity(b, n):
     # (no fp8 assertion: fp8 per-token can be locally worse than per-tensor on
     # tiny rows — its advantage is range/outlier handling, tested separately
     # in test_rope_aware_beats_unaware_on_heavy_tailed_rope.)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=25)
+    @given(st.integers(1, 16), st.integers(2, 48))
+    def test_property_roundtrip_monotone_granularity(b, n):
+        _check_roundtrip_monotone_granularity(b, n)
+else:
+    @pytest.mark.parametrize("b,n", _fixed_cases(
+        25, lambda rng: (int(rng.randint(1, 17)), int(rng.randint(2, 49)))))
+    def test_property_roundtrip_monotone_granularity(b, n):
+        _check_roundtrip_monotone_granularity(b, n)

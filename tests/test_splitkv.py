@@ -1,0 +1,230 @@
+"""Split-KV (flash-decoding) SnapMLA decode: kernel vs oracle parity, bit-
+exactness of the num_splits=1 path, early-exit accounting, and token-exactness
+of the fused scan-based generation loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import mla_decode_dequant_ref
+from repro.core.kvcache import CacheConfig, init_mla_cache, mla_prefill
+from repro.kernels.mla_decode import ref as R
+from repro.kernels.mla_decode.kernel import (lse_combine_pallas,
+                                             mla_decode_pallas,
+                                             mla_decode_splitkv_pallas)
+from repro.kernels.mla_decode.ops import default_num_splits, snapmla_decode
+
+SCALE = 0.1
+# ragged batch: empty, one-block (<= block_n), mid-block, block-aligned, full
+RAGGED_LENS = [0, 20, 130, 192, 256]
+
+
+def _setup(key, B, S, N, d_c, d_r, fmt, page, seq_lens=None, H=4):
+    cfg = CacheConfig(fmt=fmt, page_size=page)
+    ks = jax.random.split(key, 4)
+    cache = mla_prefill(init_mla_cache(cfg, B, N, d_c, d_r), cfg,
+                        jax.random.normal(ks[0], (B, S, d_c)) * 2,
+                        jax.random.normal(ks[1], (B, S, d_r)) * 25)
+    if seq_lens is not None:
+        cache = cache._replace(seq_lens=jnp.asarray(seq_lens, jnp.int32))
+    q_c8, q_r, sq = R.prepare_q(jax.random.normal(ks[2], (B, H, d_c)),
+                                jax.random.normal(ks[3], (B, H, d_r)) * 5, fmt)
+    args = (q_c8, q_r, sq, cache.content, cache.rope.astype(jnp.float32),
+            cache.scale, cache.seq_lens)
+    return cache, args
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "int8", "none"])
+@pytest.mark.parametrize("num_splits", [1, 2, 4])
+def test_splitkv_kernel_matches_ref_ragged(fmt, num_splits):
+    """Kernel == jnp split+combine oracle on ragged lens (incl. 0, one-block),
+    partials (o, lse, sigma_p) included."""
+    B, N, bn = len(RAGGED_LENS), 256, 32
+    _, args = _setup(jax.random.PRNGKey(0), B, N, N, 32, 16, fmt, bn,
+                     seq_lens=RAGGED_LENS)
+    o_k, lse_k, (op_k, lp_k, sp_k) = mla_decode_splitkv_pallas(
+        *args, softmax_scale=SCALE, num_splits=num_splits, block_n=bn,
+        fmt=fmt, return_partials=True)
+    o_r, lse_r, (op_r, lp_r, sp_r) = R.snapmla_decode_splitkv_ref(
+        *args, softmax_scale=SCALE, num_splits=num_splits, block_n=bn,
+        fmt=fmt, return_partials=True)
+    assert not np.isnan(np.asarray(o_k)).any()
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-5, atol=1e-5)
+    # lse of the empty row is the NEG_INF sentinel on both sides
+    np.testing.assert_allclose(np.asarray(lse_k), np.asarray(lse_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sp_k), np.asarray(sp_r),
+                               rtol=1e-6, atol=0)
+    np.testing.assert_allclose(np.asarray(op_k), np.asarray(op_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lp_k), np.asarray(lp_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fmt,tol", [("fp8_e4m3", 0.06), ("int8", 0.03),
+                                     ("none", 1e-4)])
+def test_splitkv_vs_dequant_oracle(fmt, tol):
+    """Splitting must not change accuracy: only P-quantization (whose rounding
+    depends on the per-split max history) separates split-KV from the exact
+    dequantize-first oracle; fmt='none' is quantization-free, hence tight."""
+    B, N, bn = 4, 256, 64
+    cache, args = _setup(jax.random.PRNGKey(3), B, 200, N, 64, 16, fmt, bn,
+                         seq_lens=[50, 100, 200, 200], H=8)
+    o_k, _ = mla_decode_splitkv_pallas(*args, softmax_scale=SCALE,
+                                       num_splits=4, block_n=bn, fmt=fmt)
+    q_c8, q_r, sq = args[:3]
+    q_lat = q_c8.astype(jnp.float32) * sq[..., None]
+    q_rd = q_r * sq[..., None]
+    o_e = mla_decode_dequant_ref(q_lat, q_rd, cache, SCALE)
+    rel = np.abs(np.asarray(o_k - o_e)).max() / np.abs(np.asarray(o_e)).max()
+    assert rel < tol, rel
+
+
+def test_splitkv_one_split_bit_identical_to_seed_kernel():
+    """With every block live, num_splits=1 runs the identical op sequence as
+    the seed kernel (shared block pipeline) -> bitwise-equal output."""
+    B, N, bn = 2, 256, 32
+    _, args = _setup(jax.random.PRNGKey(1), B, N, N, 32, 16, "fp8_e4m3", bn,
+                     seq_lens=[N, N])
+    o_s, lse_s = mla_decode_pallas(*args, softmax_scale=SCALE, block_n=bn)
+    o_1, lse_1 = mla_decode_splitkv_pallas(*args, softmax_scale=SCALE,
+                                           num_splits=1, block_n=bn)
+    assert np.array_equal(np.asarray(o_s), np.asarray(o_1))
+    assert np.array_equal(np.asarray(lse_s), np.asarray(lse_1))
+
+
+def test_ops_num_splits_one_dispatches_bit_exact():
+    """ops.snapmla_decode(num_splits=1) reproduces today's path bit-exactly
+    on ragged lens (it dispatches to the seed kernel)."""
+    B, N, bn = 3, 256, 32
+    cache, args = _setup(jax.random.PRNGKey(2), B, N, N, 32, 16, "fp8_e4m3",
+                         bn, seq_lens=[40, 100, 256])
+    q_c8, q_r, sq = args[:3]
+    o_seed, lse_seed = mla_decode_pallas(*args, softmax_scale=SCALE, block_n=bn)
+    o_1, lse_1 = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=SCALE,
+                                block_n=bn, num_splits=1)
+    assert np.array_equal(np.asarray(o_seed), np.asarray(o_1))
+    assert np.array_equal(np.asarray(lse_seed), np.asarray(lse_1))
+
+
+@pytest.mark.parametrize("num_splits", [2, 4])
+def test_splitkv_matches_single_pass_within_quant_tol(num_splits):
+    """Split count only perturbs P-quantization rounding, never the math."""
+    B, N, bn = 4, 256, 32
+    _, args = _setup(jax.random.PRNGKey(4), B, N, N, 32, 16, "fp8_e4m3", bn,
+                     seq_lens=[1, 32, 130, 256])
+    o_1, _ = mla_decode_splitkv_pallas(*args, softmax_scale=SCALE,
+                                       num_splits=1, block_n=bn)
+    o_s, _ = mla_decode_splitkv_pallas(*args, softmax_scale=SCALE,
+                                       num_splits=num_splits, block_n=bn)
+    np.testing.assert_allclose(np.asarray(o_1), np.asarray(o_s),
+                               rtol=0.05, atol=1e-4)
+
+
+def test_lse_combine_neutral_partial_drops_out():
+    """An empty split's (o=0, lse=NEG_INF) partial must not perturb the
+    combine; all-empty rows stay NaN-free."""
+    B, S, H, d_c = 2, 3, 4, 8
+    key = jax.random.PRNGKey(5)
+    o_p = jax.random.normal(key, (B, S, H, d_c))
+    lse_p = jax.random.normal(jax.random.PRNGKey(6), (B, S, H))
+    o, lse = lse_combine_pallas(o_p, lse_p)
+    # append a neutral partial: result identical
+    o_p2 = jnp.concatenate([o_p, jnp.zeros((B, 1, H, d_c))], axis=1)
+    lse_p2 = jnp.concatenate([lse_p, jnp.full((B, 1, H), R.NEG_INF)], axis=1)
+    o2, lse2 = lse_combine_pallas(o_p2, lse_p2)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse2), rtol=1e-6)
+    # all-neutral: finite (sentinel), no NaN
+    o3, lse3 = lse_combine_pallas(jnp.zeros((B, 2, H, d_c)),
+                                  jnp.full((B, 2, H), R.NEG_INF))
+    assert np.isfinite(np.asarray(o3)).all()
+    assert not np.isnan(np.asarray(lse3)).any()
+
+
+@pytest.mark.parametrize("num_splits", [2, 4])
+def test_splitkv_parallel_ref_matches_single_pass(num_splits):
+    """The einsum (serving) split form == the single-pass parallel form within
+    quantization rounding on ragged lens — and exactly for fmt='none'."""
+    B, N, bn = len(RAGGED_LENS), 256, 32
+    for fmt, tol in [("fp8_e4m3", 0.05), ("none", 1e-5)]:
+        _, args = _setup(jax.random.PRNGKey(8), B, N, N, 32, 16, fmt, bn,
+                         seq_lens=RAGGED_LENS)
+        o_1, lse_1 = R.snapmla_decode_parallel_ref(
+            *args, softmax_scale=SCALE, block_n=bn, fmt=fmt)
+        o_s, lse_s = R.snapmla_decode_splitkv_parallel_ref(
+            *args, softmax_scale=SCALE, num_splits=num_splits, block_n=bn,
+            fmt=fmt)
+        assert not np.isnan(np.asarray(o_s)).any()
+        # row 0 is empty: single-pass parallel_ref yields NaN there (softmax
+        # over nothing), the split form yields the neutral 0/NEG_INF partial
+        np.testing.assert_allclose(np.asarray(o_1)[1:], np.asarray(o_s)[1:],
+                                   rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.asarray(lse_1)[1:], np.asarray(lse_s)[1:],
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_ops_clamps_oversized_fixed_splits():
+    """A num_splits tuned for long contexts must still trace on a short cache
+    (clamped to the block count instead of tripping the kernel assert)."""
+    B, N, bn = 2, 64, 32                              # only 2 blocks
+    cache, args = _setup(jax.random.PRNGKey(9), B, N, N, 32, 16, "fp8_e4m3",
+                         bn, seq_lens=[30, 64])
+    q_c8, q_r, sq = args[:3]
+    o, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=SCALE,
+                          block_n=bn, num_splits=8)
+    assert not np.isnan(np.asarray(o)).any()
+
+
+def test_default_num_splits_heuristic():
+    assert default_num_splits(256) == 1
+    assert default_num_splits(4096) == 1
+    assert default_num_splits(8192) == 2
+    assert default_num_splits(32768) == 8
+    assert default_num_splits(131072) == 8           # capped
+    # never exceeds the block count
+    assert default_num_splits(16384, block_n=8192) == 2
+
+
+def test_unaligned_cache_capacity_rejected():
+    """The per-step jnp.pad is gone: misaligned capacity is a hard error."""
+    B, N, bn = 2, 96, 64                             # 96 % 64 != 0
+    cache, args = _setup(jax.random.PRNGKey(7), B, 96, N, 32, 16,
+                         "fp8_e4m3", 32)             # cache built at page 32
+    q_c8, q_r, sq = args[:3]
+    with pytest.raises(ValueError, match="not a multiple"):
+        snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=SCALE, block_n=bn)
+
+
+def test_benchmark_blocks_visited_scales_with_seq_lens():
+    """Acceptance: the kernel-perf sweep's blocks-visited follows seq_lens,
+    not the padded cache capacity."""
+    from benchmarks.kernel_perf import splitkv_sweep
+    rows = {(r["context"], r["num_splits"]): r
+            for r in splitkv_sweep(contexts=(32768, 131072), fill=0.25)}
+    r32, r128 = rows[(32768, 1)], rows[(131072, 1)]
+    assert r32["blocks_visited"] == -(-int(32768 * 0.25) // 128)
+    assert r128["blocks_visited"] == 4 * r32["blocks_visited"]
+    assert r32["blocks_visited"] < r32["total_blocks"]
+    # splits shorten the critical path, not the bytes
+    r32s8 = rows[(32768, 8)]
+    assert r32s8["blocks_visited"] == r32["blocks_visited"]
+    assert r32s8["critical_path_blocks"] == -(-r32["blocks_visited"] // 8)
+
+
+def test_generate_fused_token_exact():
+    """lax.scan-based generate_fused == per-step loop generate, token for
+    token (greedy sampling inside the scan)."""
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import generate, generate_fused
+    from repro.models import transformer as T
+
+    cfg = get_smoke_config("mla-7b")
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 16), 0, cfg.vocab_size, jnp.int32)
+    toks_loop, _ = generate(cfg, params, prompts, 6)
+    toks_fused, _ = generate_fused(cfg, params, prompts, 6)
+    assert toks_fused.shape == toks_loop.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(toks_loop), np.asarray(toks_fused))
