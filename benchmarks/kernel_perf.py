@@ -79,6 +79,28 @@ def figure7():
     return rows
 
 
+def paged_splitkv_sweep(pool_capacities=(32768, 131072),
+                        seq_len=8192, splits=(1, 2, 4, 8), page=128):
+    """Early-exit accounting for the PAGED split-KV kernel: effective blocks
+    visited must scale with seq_lens, NOT with the per-sequence page-table
+    span (pool capacity) — the acceptance property of the paged path. The
+    seed paged kernel scanned all capacity/page pages serially."""
+    b_tok = D_C * 1 + D_R * 2 + 4
+    rows = []
+    for cap in pool_capacities:
+        total_pages = -(-cap // page)
+        visited = -(-seq_len // page)
+        for s in splits:
+            rows.append({
+                "pool_capacity": cap, "num_splits": s, "seq_len": seq_len,
+                "blocks_visited": visited, "total_blocks": total_pages,
+                "early_exit_savings": 1.0 - visited / total_pages,
+                "critical_path_blocks": -(-visited // s),
+                "t_us": visited * page * b_tok / V5E_HBM * 1e6,
+            })
+    return rows
+
+
 def splitkv_sweep(contexts=(8192, 32768, 65536, 131072),
                   splits=(1, 2, 4, 8), fill=0.5, block_n=128):
     """num_splits × context sweep for the split-KV (flash-decoding) kernel.
@@ -111,39 +133,108 @@ def splitkv_sweep(contexts=(8192, 32768, 65536, 131072),
     return rows
 
 
-def measured_splitkv_cpu(B=2, H=8, d_c=64, d_r=16, N=512, bn=64,
-                         splits=(1, 2, 4), iters=3):
-    """Interpret-mode wall time + parity of the split-KV decode path through
-    the jitted public wrapper (comparable with measured_kernel_cpu, which
-    benches the same wrapper; correctness-bearing, not TPU-time-bearing)."""
+def _splitkv_inputs(B, H, d_c, d_r, N, bn, seed=0):
+    """Shared bench/parity fixture: quantized cache with ragged lengths in
+    (N/3, N] so early exit is exercised per row, plus prepared queries."""
     from repro.core.kvcache import CacheConfig, init_mla_cache, mla_prefill
-    from repro.kernels.mla_decode.ops import snapmla_decode
     from repro.kernels.mla_decode import ref as kref
 
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     cfg = CacheConfig(fmt="fp8_e4m3", page_size=bn)
     cache = init_mla_cache(cfg, B, N, d_c, d_r)
     ks = jax.random.split(key, 4)
     cache = mla_prefill(cache, cfg, jax.random.normal(ks[0], (B, N, d_c)),
                         jax.random.normal(ks[1], (B, N, d_r)))
-    # ragged lengths spanning (N/3, N] so early exit is exercised per row
     lens = np.linspace(N // 3, N, B).round().astype(np.int32)
     cache = cache._replace(seq_lens=jnp.asarray(lens))
     q_c8, q_r, sq = kref.prepare_q(jax.random.normal(ks[2], (B, H, d_c)),
                                    jax.random.normal(ks[3], (B, H, d_r)))
-    scale = 1.0 / np.sqrt(d_c + d_r)
-    out = {}
+    return cache, (q_c8, q_r, sq), 1.0 / float(np.sqrt(d_c + d_r))
+
+
+def _scatter_to_pool(cache, page, n_extra=3, seed=0):
+    """Scatter a contiguous cache into a shuffled page pool + page table."""
+    B, N = np.asarray(cache.scale).shape
+    P = N // page
+    rng = np.random.RandomState(seed)
+    n_pool = B * P + n_extra
+    perm = rng.permutation(n_pool)[: B * P].reshape(B, P)
+    pool_c = np.zeros((n_pool, page) + cache.content.shape[2:],
+                      np.asarray(cache.content).dtype)
+    pool_r = np.zeros((n_pool, page) + cache.rope.shape[2:], np.float32)
+    pool_s = np.ones((n_pool, page), np.float32)
+    for b in range(B):
+        for j in range(P):
+            sl = slice(j * page, (j + 1) * page)
+            pool_c[perm[b, j]] = np.asarray(cache.content[b, sl])
+            pool_r[perm[b, j]] = np.asarray(cache.rope[b, sl], np.float32)
+            pool_s[perm[b, j]] = np.asarray(cache.scale[b, sl])
+    return (jnp.asarray(pool_c), jnp.asarray(pool_r), jnp.asarray(pool_s),
+            jnp.asarray(perm, jnp.int32))
+
+
+def parity_gate_splitkv(B=2, H=8, d_c=64, d_r=16, N=512, bn=64,
+                        splits=(1, 2, 4)) -> float:
+    """Kernel-vs-oracle parity for the contiguous split-KV path (the gate the
+    bench numbers sit behind; also run directly by `pytest -m parity`).
+    Returns the max abs error across split counts; asserts < 1e-4."""
+    from repro.kernels.mla_decode.ops import snapmla_decode
+    from repro.kernels.mla_decode import ref as kref
+
+    cache, (q_c8, q_r, sq), scale = _splitkv_inputs(B, H, d_c, d_r, N, bn)
+    worst = 0.0
     for s in splits:
         o, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
-                              block_n=bn, num_splits=s)          # compile
-        jax.block_until_ready(o)
-        # parity gate: bench numbers are only recorded for a correct kernel
+                              block_n=bn, num_splits=s)
         o_ref, _ = kref.snapmla_decode_splitkv_ref(
             q_c8, q_r, sq, cache.content, cache.rope.astype(jnp.float32),
             cache.scale, cache.seq_lens, softmax_scale=scale,
             num_splits=s, block_n=bn)
         err = float(jnp.max(jnp.abs(o - o_ref)))
         assert err < 1e-4, (s, err)
+        worst = max(worst, err)
+    return worst
+
+
+def parity_gate_paged_splitkv(B=2, H=8, d_c=64, d_r=16, N=512, page=64,
+                              splits=(1, 2, 4)) -> float:
+    """Kernel-vs-oracle parity for the PAGED split-KV path over a shuffled
+    page pool. Returns the max abs error; asserts < 1e-4."""
+    from repro.kernels.mla_decode.kernel import mla_decode_paged_splitkv_pallas
+    from repro.kernels.mla_decode import ref as kref
+
+    cache, (q_c8, q_r, sq), scale = _splitkv_inputs(B, H, d_c, d_r, N, page,
+                                                    seed=1)
+    pool_c, pool_r, pool_s, pt = _scatter_to_pool(cache, page)
+    worst = 0.0
+    for s in splits:
+        o, _ = mla_decode_paged_splitkv_pallas(
+            q_c8, q_r, sq, pool_c, pool_r, pool_s, pt, cache.seq_lens,
+            softmax_scale=scale, num_splits=s)
+        o_ref, _ = kref.snapmla_decode_paged_splitkv_ref(
+            q_c8, q_r, sq, pool_c, pool_r, pool_s, pt, cache.seq_lens,
+            softmax_scale=scale, num_splits=s)
+        err = float(jnp.max(jnp.abs(o - o_ref)))
+        assert err < 1e-4, (s, err)
+        worst = max(worst, err)
+    return worst
+
+
+def measured_splitkv_cpu(B=2, H=8, d_c=64, d_r=16, N=512, bn=64,
+                         splits=(1, 2, 4), iters=3):
+    """Interpret-mode wall time + parity of the split-KV decode path through
+    the jitted public wrapper (comparable with measured_kernel_cpu, which
+    benches the same wrapper; correctness-bearing, not TPU-time-bearing)."""
+    from repro.kernels.mla_decode.ops import snapmla_decode
+
+    # parity gate: bench numbers are only recorded for a correct kernel
+    parity_gate_splitkv(B, H, d_c, d_r, N, bn, splits)
+    cache, (q_c8, q_r, sq), scale = _splitkv_inputs(B, H, d_c, d_r, N, bn)
+    out = {}
+    for s in splits:
+        o, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
+                              block_n=bn, num_splits=s)          # compile
+        jax.block_until_ready(o)
         t0 = time.time()
         for _ in range(iters):
             o, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
@@ -153,14 +244,70 @@ def measured_splitkv_cpu(B=2, H=8, d_c=64, d_r=16, N=512, bn=64,
     return out
 
 
+def measured_paged_splitkv_cpu(B=2, H=8, d_c=64, d_r=16, N=512, page=64,
+                               splits=(1, 2, 4), iters=3):
+    """Interpret-mode wall time + parity of the paged split-KV kernel over a
+    shuffled page pool (the multi-tenant layout the kernel is built for)."""
+    from repro.kernels.mla_decode.kernel import mla_decode_paged_splitkv_pallas
+
+    parity_gate_paged_splitkv(B, H, d_c, d_r, N, page, splits)
+    cache, (q_c8, q_r, sq), scale = _splitkv_inputs(B, H, d_c, d_r, N, page,
+                                                    seed=1)
+    pool_c, pool_r, pool_s, pt = _scatter_to_pool(cache, page)
+    out = {}
+    for s in splits:
+        o, _ = mla_decode_paged_splitkv_pallas(
+            q_c8, q_r, sq, pool_c, pool_r, pool_s, pt, cache.seq_lens,
+            softmax_scale=scale, num_splits=s)                   # compile
+        jax.block_until_ready(o)
+        t0 = time.time()
+        for _ in range(iters):
+            o, _ = mla_decode_paged_splitkv_pallas(
+                q_c8, q_r, sq, pool_c, pool_r, pool_s, pt, cache.seq_lens,
+                softmax_scale=scale, num_splits=s)
+        jax.block_until_ready(o)
+        out[s] = (time.time() - t0) / iters * 1e6
+    return out
+
+
+def emit_split_profile(path=None,
+                       shapes=((512, 64, 2), (1024, 64, 2), (1024, 128, 4)),
+                       paged_shapes=((512, 64, 2),),
+                       iters=2):
+    """Run the autotuner's measured sweep over a few (capacity, block_n,
+    batch) shapes — contiguous AND paged layouts, each timed on its own
+    kernel — and persist the split profile: the JSON artifact that
+    ``ops.resolve_num_splits`` consults before falling back to the
+    heuristic. On TPU rerun with production shapes; CPU interpret-mode
+    ordering seeds the cache at reduced size (paged interpret is slow, so
+    its default shape list is shorter). ``path=None`` writes to the
+    resolver's own default (repo root / SNAPMLA_SPLIT_PROFILE override)."""
+    from repro.kernels.mla_decode import autotune
+
+    profile = autotune.SplitProfile()
+    for capacity, block_n, batch in shapes:
+        autotune.measure_split_sweep(capacity, block_n, batch,
+                                     profile=profile, iters=iters)
+    for capacity, block_n, batch in paged_shapes:
+        autotune.measure_split_sweep(capacity, block_n, batch,
+                                     profile=profile, iters=iters,
+                                     layout="paged")
+    out = profile.save(path)
+    autotune.reset(profile)          # freshly measured profile wins in-process
+    return out
+
+
 def write_bench_splitkv(path="BENCH_splitkv.json"):
     """Persist the split-KV sweep so the perf trajectory starts recording."""
     payload = {
         "sweep": splitkv_sweep(),
+        "paged_sweep": paged_splitkv_sweep(),
         "measured_cpu_interpret_us": {
             str(k): v for k, v in measured_splitkv_cpu().items()},
+        "measured_paged_cpu_interpret_us": {
+            str(k): v for k, v in measured_paged_splitkv_cpu().items()},
         "notes": "modeled v5e roofline (fill=0.5) + CPU interpret-mode wall "
-                 "time of the real Pallas kernel at reduced size",
+                 "time of the real Pallas kernels at reduced size",
     }
     pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")
     return payload
@@ -211,9 +358,22 @@ def main(csv=True):
                     f"visited={row['blocks_visited']}/{row['total_blocks']}blk "
                     f"(early-exit {row['early_exit_savings']*100:.0f}%) "
                     f"chain={row['critical_path_blocks']}blk"))
+    for row in payload["paged_sweep"]:
+        name = (f"paged_splitkv_cap{row['pool_capacity']//1024}k"
+                f"_s{row['num_splits']}")
+        out.append((name, row["t_us"],
+                    f"visited={row['blocks_visited']}/{row['total_blocks']}pg "
+                    f"(early-exit {row['early_exit_savings']*100:.0f}%) "
+                    f"chain={row['critical_path_blocks']}pg"))
     for s, us_m in payload["measured_cpu_interpret_us"].items():
         out.append((f"splitkv_cpu_interpret_s{s}", us_m,
                     "pallas interpret mode on CPU (reduced size)"))
+    for s, us_m in payload["measured_paged_cpu_interpret_us"].items():
+        out.append((f"paged_splitkv_cpu_interpret_s{s}", us_m,
+                    "pallas interpret mode on CPU (reduced size)"))
+    profile_path = emit_split_profile()
+    out.append(("split_profile", 0.0,
+                f"autotuner split profile written to {profile_path}"))
     us = measured_kernel_cpu()
     out.append(("kernel_cpu_interpret_us", us, "pallas interpret mode on CPU"))
     if csv:

@@ -10,7 +10,8 @@ import numpy as np
 
 from repro.core.kvcache import CacheConfig, init_mla_cache, mla_prefill
 from repro.kernels.mla_decode import ref as R
-from repro.kernels.mla_decode.kernel import mla_decode_paged_pallas
+from repro.kernels.mla_decode.kernel import (mla_decode_paged_pallas,
+                                             mla_decode_paged_splitkv_pallas)
 from repro.kernels.mla_decode.ops import snapmla_decode
 
 
@@ -52,6 +53,17 @@ def main():
     print("max |paged - contiguous| =", float(np.abs(o_paged - o_contig).max()))
     assert np.allclose(o_paged, o_contig, atol=1e-5)
     print("paged == contiguous: the page table drives the BlockSpec index map.")
+
+    # paged split-KV: sequence parallelism over the same pool (flash-decoding
+    # grid + LSE combine + block-level early exit, page-table addressed)
+    o_split, _ = mla_decode_paged_splitkv_pallas(
+        q_c8, q_r, sq, jnp.asarray(pool_c), jnp.asarray(pool_r),
+        jnp.asarray(pool_s), jnp.asarray(perm, jnp.int32), cache.seq_lens,
+        softmax_scale=scale, num_splits=2)
+    print("max |paged split-KV - contiguous| =",
+          float(np.abs(o_split - o_contig).max()))
+    assert np.allclose(o_split, o_contig, atol=1e-4)
+    print("paged split-KV == contiguous within quantization rounding.")
 
 
 if __name__ == "__main__":

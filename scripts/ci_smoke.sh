@@ -1,7 +1,12 @@
 #!/usr/bin/env bash
-# Fast end-to-end CI gate: tier-1 test suite + a real serving smoke run
-# (prefill -> quantized decode -> greedy generation), both the per-step
-# decode loop and the fused scan-based path.
+# Fast end-to-end CI gate: tier-1 test suite + real serving smoke runs
+# (prefill -> quantized decode -> greedy generation) across the decode
+# configurations that exercise distinct kernel paths:
+#   * per-step decode loop and the fused scan-based path
+#   * contiguous and paged (page-table) KV caches
+#   * auto and fixed (--kv-splits 4) split-KV parallelism
+# The serve driver exits non-zero on non-finite logits (serve._check_finite),
+# so a NaN anywhere in the quantized pipeline fails this script loudly.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -10,5 +15,8 @@ python -m pytest -x -q
 
 python -m repro.launch.serve --smoke --gen 4
 python -m repro.launch.serve --smoke --gen 4 --fused
+python -m repro.launch.serve --smoke --gen 4 --paged
+python -m repro.launch.serve --smoke --gen 4 --paged --fused --kv-splits 4
+python -m repro.launch.serve --smoke --gen 4 --kv-splits 4
 
 echo "[ci_smoke] OK"

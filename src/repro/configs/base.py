@@ -56,8 +56,13 @@ class ModelConfig:
     kv_fmt: str = "fp8_e4m3"         # fp8_e4m3 | int8 | none (bf16 baseline)
     page_size: int = 128
     # split-KV (flash-decoding) sequence parallelism in decode attention:
-    # 0 = auto (context-length heuristic), 1 = single-pass, >1 = fixed splits
+    # 0 = auto (measured split profile, else context-length heuristic),
+    # 1 = single-pass, >1 = fixed splits. Applies to both cache layouts.
     kv_splits: int = 0
+    # paged KV cache for 'mla' layers at decode: the latent cache lives in a
+    # page pool addressed through a per-sequence page table (multi-tenant
+    # pool layout) instead of a contiguous per-slot [B, N, ...] cache
+    kv_paged: bool = False
     # capability flags for the shape grid
     subquadratic: bool = False       # can run long_500k decode
     has_decoder: bool = True         # encoder-only archs would be False

@@ -218,6 +218,16 @@ class PagedMLAPool(NamedTuple):
                             #  unused entries point at page 0 and are masked)
     seq_lens: jax.Array     # [B]
 
+    @property
+    def page_size(self) -> int:
+        return self.content.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Per-sequence token capacity (the page-table span), matching
+        MLACache.capacity so the split resolution rule is cache-agnostic."""
+        return self.page_table.shape[1] * self.page_size
+
 
 def init_paged_mla_pool(
     cfg: CacheConfig, n_pages: int, max_pages_per_seq: int, batch: int, d_c: int, d_r: int
@@ -241,4 +251,64 @@ def paged_gather(pool: PagedMLAPool):
         c.reshape(B, P * page, d_c),
         r.reshape(B, P * page, -1),
         s.reshape(B, P * page),
+    )
+
+
+def init_paged_mla_cache(cfg: CacheConfig, batch: int, max_len: int,
+                         d_c: int, d_r: int) -> PagedMLAPool:
+    """Allocate a batch-owned paged pool: each sequence gets a private strided
+    run of pages (page table row b = [b*P, (b+1)*P)). This is the model-layer
+    entry point mirroring ``init_mla_cache`` — a multi-tenant allocator would
+    instead hand out arbitrary pool pages; the decode kernels only ever see
+    the page table, so both layouts run the same code path."""
+    n = _round_up(max_len, cfg.page_size)
+    pages_per_seq = n // cfg.page_size
+    pool = init_paged_mla_pool(cfg, batch * pages_per_seq, pages_per_seq,
+                               batch, d_c, d_r)
+    table = jnp.arange(batch * pages_per_seq, dtype=jnp.int32).reshape(
+        batch, pages_per_seq)
+    return pool._replace(page_table=table)
+
+
+def paged_mla_prefill(pool: PagedMLAPool, cfg: CacheConfig,
+                      c_kv: jax.Array, k_r: jax.Array) -> PagedMLAPool:
+    """Bulk-write a prefix through the page table: c_kv [B, S, d_c],
+    k_r [B, S, d_r] land in pages page_table[b, t // page] at slot t % page."""
+    B, S = c_kv.shape[:2]
+    page = pool.page_size
+    content, rope, scale = mla_quantize_entry(cfg, c_kv, k_r)
+    t = jnp.arange(S)
+    pids = pool.page_table[:, t // page]                      # [B, S]
+    offs = jnp.broadcast_to(t % page, (B, S))
+    return pool._replace(
+        content=pool.content.at[pids, offs].set(
+            content.astype(pool.content.dtype)),
+        rope=pool.rope.at[pids, offs].set(rope.astype(jnp.bfloat16)),
+        scale=pool.scale.at[pids, offs].set(scale),
+        seq_lens=jnp.full_like(pool.seq_lens, S),
+    )
+
+
+def paged_mla_append(pool: PagedMLAPool, cfg: CacheConfig,
+                     c_kv: jax.Array, k_r: jax.Array) -> PagedMLAPool:
+    """Append one token per sequence into its current page (instant per-token
+    quantization — the paged twin of ``mla_append``).
+
+    Writes past capacity are clamped to the FINAL slot (matching the
+    contiguous ``mla_append``'s degradation, where JAX clamps the update
+    index to N-1): without the clamp, ``t // page`` would fall off the page
+    table and JAX's scatter clamping would silently corrupt the *first* slot
+    of the last page — a live mid-sequence entry."""
+    B = c_kv.shape[0]
+    page = pool.page_size
+    content, rope, scale = mla_quantize_entry(cfg, c_kv, k_r)
+    t = jnp.minimum(pool.seq_lens, pool.capacity - 1)
+    pid = pool.page_table[jnp.arange(B), t // page]           # [B]
+    off = t % page
+    return pool._replace(
+        content=pool.content.at[pid, off].set(
+            content.astype(pool.content.dtype)),
+        rope=pool.rope.at[pid, off].set(rope.astype(jnp.bfloat16)),
+        scale=pool.scale.at[pid, off].set(scale),
+        seq_lens=pool.seq_lens + 1,
     )

@@ -19,8 +19,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mla as mla_lib
-from repro.core.kvcache import CacheConfig, MLACache, init_mla_cache, mla_prefill
-from repro.kernels.mla_decode.ops import snapmla_decode
+from repro.core.kvcache import (CacheConfig, MLACache, PagedMLAPool,
+                                init_mla_cache, init_paged_mla_cache,
+                                mla_prefill, paged_mla_append,
+                                paged_mla_prefill)
+from repro.kernels.mla_decode.ops import snapmla_decode, snapmla_decode_paged
 from repro.kernels.mla_decode import ref as mla_ref
 from repro.kernels.quantize.ops import fused_k_append, fused_q_quant
 
@@ -32,31 +35,38 @@ class SnapMLAConfig:
     use_kernel: bool = True       # pallas kernels (interpret on CPU) vs jnp refs
     interpret: bool = True
     # split-KV (flash-decoding) sequence parallelism for the decode kernel:
-    # None or 0 = context-length heuristic (ops.default_num_splits), 1 =
-    # always single-pass (bit-exact seed path), >1 = fixed split count.
+    # None or 0 = autotuner profile with the context-length heuristic as
+    # fallback (ops.resolve_num_splits), 1 = always single-pass (bit-exact
+    # seed path), >1 = fixed split count. Applies to BOTH cache layouts.
     num_splits: int | None = None
+    # paged KV: the cache is a PagedMLAPool (page-table-driven kernels) rather
+    # than a contiguous per-slot MLACache.
+    paged: bool = False
 
     @property
     def fmt(self) -> str:
         return self.cache.fmt
 
 
-def init_cache(cfg: SnapMLAConfig, batch: int, max_len: int) -> MLACache:
-    return init_mla_cache(cfg.cache, batch, max_len, cfg.mla.d_c, cfg.mla.d_rope)
+def init_cache(cfg: SnapMLAConfig, batch: int, max_len: int):
+    """MLACache, or a batch-owned PagedMLAPool when ``cfg.paged``."""
+    init = init_paged_mla_cache if cfg.paged else init_mla_cache
+    return init(cfg.cache, batch, max_len, cfg.mla.d_c, cfg.mla.d_rope)
 
 
 def prefill(
     params: mla_lib.MLAParams,
     cfg: SnapMLAConfig,
     h: jax.Array,                 # [B, S, d] prompt hidden states
-    cache: MLACache,
-) -> tuple[jax.Array, MLACache]:
+    cache,
+) -> tuple[jax.Array, "MLACache | PagedMLAPool"]:
     """Run exact prompt attention and fill the quantized cache."""
     B, S, _ = h.shape
     positions = jnp.arange(S)
     out = mla_lib.mla_attention(params, cfg.mla, h, positions, causal=True)
     c_kv, k_r = mla_lib.project_kv(params, cfg.mla, h, positions)
-    cache = mla_prefill(cache, cfg.cache, c_kv, k_r)
+    fill = paged_mla_prefill if isinstance(cache, PagedMLAPool) else mla_prefill
+    cache = fill(cache, cfg.cache, c_kv, k_r)
     return out, cache
 
 
@@ -64,15 +74,18 @@ def decode_step(
     params: mla_lib.MLAParams,
     cfg: SnapMLAConfig,
     h_t: jax.Array,               # [B, d] current token hidden state
-    cache: MLACache,
-) -> tuple[jax.Array, MLACache]:
+    cache,
+) -> tuple[jax.Array, "MLACache | PagedMLAPool"]:
     """One decode step: returns (attention output [B, d], updated cache)."""
     B = h_t.shape[0]
     positions = cache.seq_lens                         # 0-based position of h_t
+    paged = isinstance(cache, PagedMLAPool)
 
     # -- K side: project + Fused-K-Append (quantize + align + paged write) --
     c_kv, k_r = mla_lib.project_kv(params, cfg.mla, h_t[:, None, :], positions[:, None])
-    if cfg.cache.quantized:
+    if paged:
+        cache = paged_mla_append(cache, cfg.cache, c_kv[:, 0], k_r[:, 0])
+    elif cfg.cache.quantized:
         cache = fused_k_append(
             cache, c_kv[:, 0], k_r[:, 0], fmt=cfg.fmt, page=cfg.cache.page_size,
             use_kernel=cfg.use_kernel, interpret=cfg.interpret)
@@ -94,13 +107,21 @@ def decode_step(
         q_c8, q_r_s, sigma_q = mla_ref.prepare_q(q_lat, q_rope, "none")
 
     # -- SnapMLA decode kernel ----------------------------------------------
-    o_lat, _lse = snapmla_decode(
-        q_c8, q_r_s, sigma_q, cache,
-        softmax_scale=cfg.mla.softmax_scale,
-        block_n=cfg.cache.page_size,
-        fmt=cfg.fmt if cfg.cache.quantized else "none",
-        num_splits=cfg.num_splits,
-        use_kernel=cfg.use_kernel, interpret=cfg.interpret)
+    if paged:
+        o_lat, _lse = snapmla_decode_paged(
+            q_c8, q_r_s, sigma_q, cache,
+            softmax_scale=cfg.mla.softmax_scale,
+            fmt=cfg.fmt if cfg.cache.quantized else "none",
+            num_splits=cfg.num_splits,
+            use_kernel=cfg.use_kernel, interpret=cfg.interpret)
+    else:
+        o_lat, _lse = snapmla_decode(
+            q_c8, q_r_s, sigma_q, cache,
+            softmax_scale=cfg.mla.softmax_scale,
+            block_n=cfg.cache.page_size,
+            fmt=cfg.fmt if cfg.cache.quantized else "none",
+            num_splits=cfg.num_splits,
+            use_kernel=cfg.use_kernel, interpret=cfg.interpret)
 
     out = mla_lib.output_proj(params, o_lat.astype(h_t.dtype))
     return out, cache

@@ -1,0 +1,235 @@
+"""Profile-driven ``num_splits`` autotuner for the split-KV decode kernels.
+
+Replaces the static context-length heuristic (``ops.default_num_splits``) as
+the *primary* source of split counts: a small measured-sweep cache keyed on
+``(capacity, block_n, batch)`` — the three shape parameters that move the
+split/combine trade-off — persisted to a JSON artifact that the benchmarks
+emit (``benchmarks/kernel_perf.py::emit_split_profile``). Resolution order in
+``ops.resolve_num_splits``:
+
+  1. exact profile hit for (capacity, block_n, batch)  -> measured best
+  2. no profile entry / no profile file                -> heuristic fallback
+
+The profile file format (version 1); the key grows a "/paged" suffix for
+sweeps measured on the paged kernel (contiguous and paged plans never mix),
+and "best" prefers smaller split counts within WIN_MARGIN so measurement
+jitter can't flip a plan away from the bit-exact single-pass path:
+
+    {
+      "version": 1,
+      "entries": {
+        "<capacity>/<block_n>/<batch>": {
+          "best": 4,
+          "measured_us": {"1": 812.3, "2": 530.1, "4": 421.9, "8": 455.0}
+        },
+        "<capacity>/<block_n>/<batch>/paged": {...}
+      }
+    }
+
+The default artifact path is ``BENCH_splits_profile.json`` at the repo root
+(next to BENCH_splitkv.json); override with ``SNAPMLA_SPLIT_PROFILE``. The
+module-level singleton loads it lazily once; ``reset()`` drops it (tests).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+PROFILE_ENV = "SNAPMLA_SPLIT_PROFILE"
+PROFILE_VERSION = 1
+
+# Anchored at the repo root (autotune.py is src/repro/kernels/mla_decode/),
+# NOT the process CWD — `serve` launched from any directory and `pytest` from
+# the repo root must agree on which profile (if any) is in effect.
+DEFAULT_PROFILE = (pathlib.Path(__file__).resolve().parents[4]
+                   / "BENCH_splits_profile.json")
+
+
+def profile_path() -> pathlib.Path:
+    override = os.environ.get(PROFILE_ENV)
+    return pathlib.Path(override) if override else DEFAULT_PROFILE
+
+
+def _key(capacity: int, block_n: int, batch: int, layout: str) -> str:
+    base = f"{int(capacity)}/{int(block_n)}/{int(batch)}"
+    return base if layout == "contiguous" else f"{base}/{layout}"
+
+
+# A smaller split count must be beaten by at least this margin before a larger
+# one is recorded as "best": ties within measurement noise go to fewer splits,
+# so num_splits=1 (the bit-exact seed path) is only abandoned for a real win
+# and re-measuring doesn't flip the plan on jitter.
+WIN_MARGIN = 0.05
+
+
+def _pick_best(measured_us: dict[int, float]) -> int:
+    best = None
+    for s in sorted(measured_us):
+        if best is None or measured_us[s] < measured_us[best] * (1 - WIN_MARGIN):
+            best = s
+    return best
+
+
+class SplitProfile:
+    """In-memory measured-sweep cache: (capacity, block_n, batch, layout) ->
+    best num_splits, with the raw measured microseconds kept for the
+    benchmarks. ``layout`` separates the contiguous and paged kernels — their
+    DMA patterns differ, so a best measured on one never drives the other."""
+
+    def __init__(self, entries: dict | None = None):
+        self.entries: dict[str, dict] = dict(entries or {})
+
+    # -- queries ----------------------------------------------------------
+    def lookup(self, capacity: int, block_n: int, batch: int | None,
+               layout: str = "contiguous") -> int | None:
+        """Measured best split count, or None (-> heuristic fallback)."""
+        if batch is None:
+            return None
+        e = self.entries.get(_key(capacity, block_n, batch, layout))
+        try:
+            return int(e["best"]) if e else None
+        except (TypeError, KeyError, ValueError):
+            return None          # malformed entry -> heuristic fallback
+
+    def record(self, capacity: int, block_n: int, batch: int,
+               measured_us: dict[int, float],
+               layout: str = "contiguous") -> int:
+        """Store one sweep; best = fastest split count, with ties within
+        WIN_MARGIN going to the smaller count. Returns the best."""
+        if not measured_us:
+            raise ValueError("empty sweep")
+        best = _pick_best(measured_us)
+        self.entries[_key(capacity, block_n, batch, layout)] = {
+            "best": int(best),
+            "measured_us": {str(k): float(v) for k, v in measured_us.items()},
+        }
+        return int(best)
+
+    # -- persistence ------------------------------------------------------
+    def save(self, path: str | os.PathLike | None = None) -> pathlib.Path:
+        p = pathlib.Path(path) if path else profile_path()
+        p.write_text(json.dumps(
+            {"version": PROFILE_VERSION, "entries": self.entries},
+            indent=2, sort_keys=True) + "\n")
+        return p
+
+    @classmethod
+    def load(cls, path: str | os.PathLike | None = None) -> "SplitProfile":
+        p = pathlib.Path(path) if path else profile_path()
+        try:
+            payload = json.loads(p.read_text())
+        except (OSError, ValueError):
+            return cls()
+        if payload.get("version") != PROFILE_VERSION:
+            return cls()
+        entries = payload.get("entries", {})
+        return cls(entries if isinstance(entries, dict) else {})
+
+
+_PROFILE: SplitProfile | None = None
+
+
+def get_profile() -> SplitProfile:
+    """Lazily-loaded singleton backing ``ops.resolve_num_splits``."""
+    global _PROFILE
+    if _PROFILE is None:
+        _PROFILE = SplitProfile.load()
+    return _PROFILE
+
+
+def reset(profile: SplitProfile | None = None) -> None:
+    """Drop (or swap in) the singleton — tests and benchmark re-runs."""
+    global _PROFILE
+    _PROFILE = profile
+
+
+def tuned_num_splits(capacity: int, block_n: int, batch: int | None,
+                     layout: str = "contiguous") -> int | None:
+    return get_profile().lookup(capacity, block_n, batch, layout)
+
+
+# ---------------------------------------------------------------------------
+# Measured sweep (the benchmarks call this to populate the artifact)
+# ---------------------------------------------------------------------------
+
+def candidate_splits(capacity: int, block_n: int,
+                     max_splits: int = 8) -> list[int]:
+    """Powers of two up to min(max_splits, block count) — the shapes the split
+    grid can actually take."""
+    nblocks = max(1, capacity // block_n)
+    out, s = [], 1
+    while s <= min(max_splits, nblocks):
+        out.append(s)
+        s *= 2
+    return out
+
+def measure_split_sweep(capacity: int, block_n: int, batch: int,
+                        *, d_c: int = 64, d_r: int = 16, heads: int = 8,
+                        fmt: str = "fp8_e4m3", fill: float = 0.75,
+                        iters: int = 3, profile: SplitProfile | None = None,
+                        layout: str = "contiguous",
+                        interpret: bool = True) -> dict[int, float]:
+    """Time the real split-KV kernel over the candidate split counts and
+    record the winner into ``profile`` (default: the singleton) under
+    ``layout`` ("contiguous" times ``snapmla_decode`` on an MLACache,
+    "paged" times ``snapmla_decode_paged`` on a page pool — each layout's
+    plan only ever comes from its own kernel's measurements).
+
+    On CPU this times interpret-mode Pallas — relative ordering at small sizes
+    is what seeds the cache; on TPU the same sweep measures compiled kernels.
+    ``fill`` sets seq_lens = fill * capacity so early exit is in play exactly
+    as it would be in serving."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.kvcache import (CacheConfig, init_mla_cache,
+                                    init_paged_mla_cache, mla_prefill,
+                                    paged_mla_prefill)
+    from repro.kernels.mla_decode import ref as kref
+    from repro.kernels.mla_decode.ops import (snapmla_decode,
+                                              snapmla_decode_paged)
+
+    key = jax.random.PRNGKey(0)
+    cfg = CacheConfig(fmt=fmt, page_size=block_n)
+    ks = jax.random.split(key, 4)
+    ckv = jax.random.normal(ks[0], (batch, capacity, d_c))
+    kr = jax.random.normal(ks[1], (batch, capacity, d_r))
+    lens = jnp.asarray(
+        np.full((batch,), max(1, int(capacity * fill)), np.int32))
+    if layout == "paged":
+        cache = paged_mla_prefill(
+            init_paged_mla_cache(cfg, batch, capacity, d_c, d_r), cfg, ckv, kr)
+    else:
+        cache = mla_prefill(
+            init_mla_cache(cfg, batch, capacity, d_c, d_r), cfg, ckv, kr)
+    cache = cache._replace(seq_lens=lens)
+    q_c8, q_r, sq = kref.prepare_q(
+        jax.random.normal(ks[2], (batch, heads, d_c)),
+        jax.random.normal(ks[3], (batch, heads, d_r)), fmt)
+    scale = 1.0 / float(np.sqrt(d_c + d_r))
+
+    def run(s):
+        if layout == "paged":
+            return snapmla_decode_paged(q_c8, q_r, sq, cache,
+                                        softmax_scale=scale, fmt=fmt,
+                                        num_splits=s, interpret=interpret)
+        return snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
+                              block_n=block_n, fmt=fmt, num_splits=s,
+                              interpret=interpret)
+
+    measured: dict[int, float] = {}
+    for s in candidate_splits(capacity, block_n):
+        o, _ = run(s)                                       # compile
+        jax.block_until_ready(o)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            o, _ = run(s)
+        jax.block_until_ready(o)
+        measured[s] = (time.perf_counter() - t0) / iters * 1e6
+
+    (profile if profile is not None else get_profile()).record(
+        capacity, block_n, batch, measured, layout=layout)
+    return measured

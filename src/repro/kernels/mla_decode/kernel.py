@@ -44,6 +44,13 @@ Split-KV (flash-decoding) variant — ``mla_decode_splitkv_pallas``:
   the compute. HBM traffic therefore scales with ``seq_lens``, not with the
   padded cache capacity.
 
+Paged split-KV — ``mla_decode_paged_splitkv_pallas``: the same split grid and
+  per-split partial/combine layout over a page pool; the scalar-prefetched
+  page table only relocates each block's DMA source, so the contiguous and
+  paged variants share one kernel body, one early-exit predicate, and one
+  combine path (``_splitkv_partials_call`` + ``lse_combine_pallas``). HBM
+  traffic is proportional to ``seq_lens``, not pool capacity.
+
 TPU adaptation notes (DESIGN.md §2): FP8 here is the *storage* dtype — blocks
 are upcast to f32 on load inside the kernel (v5e has no FP8 MXU; the win is
 HBM bytes, which is what decode attention is bound by at small head counts).
@@ -320,6 +327,53 @@ def _clamped_block_index(seq_lens_ref, b, s_id, j, blocks_per_split, block_n):
     return jnp.minimum(g, last_live)
 
 
+def _splitkv_partials_call(
+    kernel_body,
+    *,
+    grid: tuple,
+    in_specs: list,
+    num_scalar_prefetch: int,
+    B: int,
+    num_splits: int,
+    H: int,
+    d_c: int,
+    interpret: bool,
+    operands: tuple,
+):
+    """One shared split/combine code path for BOTH the contiguous and the paged
+    split-KV kernels: identical per-split partial layout ([B, S, H, ...] with
+    the scale-carrying LSE), identical VMEM scratch for the online-softmax
+    state, identical pallas_call plumbing. Callers differ only in their grid,
+    input BlockSpecs (clamped contiguous block index vs page-table lookup) and
+    scalar-prefetch operands. Returns the raw (o, lse, sigma_p) partials."""
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, H, d_c), lambda b, s, j, *_: (b, s, 0, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, s, j, *_: (b, s, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, s, j, *_: (b, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, d_c), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel_body,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, num_splits, H, d_c), jnp.float32),
+            jax.ShapeDtypeStruct((B, num_splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, num_splits, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+
 def mla_decode_splitkv_pallas(
     q_c8: jax.Array,        # [B, H, d_c] storage dtype
     q_r: jax.Array,         # [B, H, d_r] f32 (pre-divided by sigma_q)
@@ -363,8 +417,8 @@ def mla_decode_splitkv_pallas(
     def sk_idx(b, s, j, sl):
         return (b, _clamped_block_index(sl, b, s, j, blocks_per_split, block_n))
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+    o_p, lse_p, sp_p = _splitkv_partials_call(
+        kernel,
         grid=(B, num_splits, blocks_per_split),
         in_specs=[
             pl.BlockSpec((1, H, d_c), lambda b, s, j, sl: (b, 0, 0)),
@@ -374,28 +428,10 @@ def mla_decode_splitkv_pallas(
             pl.BlockSpec((1, block_n, d_r), kv_idx),
             pl.BlockSpec((1, block_n), sk_idx),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, H, d_c), lambda b, s, j, sl: (b, s, 0, 0)),
-            pl.BlockSpec((1, 1, H), lambda b, s, j, sl: (b, s, 0)),
-            pl.BlockSpec((1, 1, H), lambda b, s, j, sl: (b, s, 0)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((H,), jnp.float32),
-            pltpu.VMEM((H,), jnp.float32),
-            pltpu.VMEM((H,), jnp.float32),
-            pltpu.VMEM((H, d_c), jnp.float32),
-        ],
+        num_scalar_prefetch=1,
+        B=B, num_splits=num_splits, H=H, d_c=d_c, interpret=interpret,
+        operands=(seq_lens, q_c8, q_r, sigma_q, content, rope, sigma_k),
     )
-    o_p, lse_p, sp_p = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, num_splits, H, d_c), jnp.float32),
-            jax.ShapeDtypeStruct((B, num_splits, H), jnp.float32),
-            jax.ShapeDtypeStruct((B, num_splits, H), jnp.float32),
-        ],
-        interpret=interpret,
-    )(seq_lens, q_c8, q_r, sigma_q, content, rope, sigma_k)
 
     o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
     if return_partials:
@@ -521,3 +557,95 @@ def _paged_body(seq_lens_ref, page_table_ref, q_c_ref, q_r_ref, sigma_q_ref,
         m_ref, l_ref, sp_ref, acc_ref,
         softmax_scale=softmax_scale, block_n=page, fmt=fmt, qmax=qmax,
         paged=False)
+
+
+# ---------------------------------------------------------------------------
+# Paged split-KV (flash-decoding over a page pool)
+# ---------------------------------------------------------------------------
+
+def _paged_splitkv_body(seq_lens_ref, page_table_ref, *rest, **kw):
+    """The paged split-KV kernel body IS the contiguous split-KV body: the page
+    table only feeds the BlockSpec index maps (where the DMA source comes
+    from), never the arithmetic — so both variants share one block pipeline,
+    one early-exit predicate, and one partial-emission epilogue verbatim."""
+    del page_table_ref  # only used by the index maps
+    _mla_decode_splitkv_kernel(seq_lens_ref, *rest, **kw)
+
+
+def _clamped_page_id(seq_lens_ref, page_table_ref, b, s_id, j,
+                     pages_per_split, page):
+    """Page-pool DMA source for (split, page-slot): the logical page index is
+    clamped to the sequence's last live page (dead slots re-address an
+    already-resident pool page, eliding the DMA — the paged analogue of
+    ``_clamped_block_index``), then translated through the page table."""
+    g = _clamped_block_index(seq_lens_ref, b, s_id, j, pages_per_split, page)
+    return page_table_ref[b, g]
+
+
+def mla_decode_paged_splitkv_pallas(
+    q_c8: jax.Array,          # [B, H, d_c] storage dtype
+    q_r: jax.Array,           # [B, H, d_r] f32 (pre-divided by sigma_q)
+    sigma_q: jax.Array,       # [B, H] f32
+    content_pool: jax.Array,  # [n_pages, page, d_c]
+    rope_pool: jax.Array,     # [n_pages, page, d_r]
+    scale_pool: jax.Array,    # [n_pages, page]
+    page_table: jax.Array,    # [B, P] int32
+    seq_lens: jax.Array,      # [B]
+    *,
+    softmax_scale: float,
+    num_splits: int,
+    fmt: str = "fp8_e4m3",
+    interpret: bool = True,
+    return_partials: bool = False,
+):
+    """Paged + split-KV SnapMLA decode: sequence parallelism over a page pool.
+
+    Grid (batch, num_splits, pages_per_split): the logical page axis of each
+    sequence (its page-table row) is cut into ``num_splits`` contiguous
+    slices; each slice runs the scale-fused FP8 block pipeline over its pages
+    — DMA sources resolved through the scalar-prefetched page table, dead
+    slots clamped to the last live page so their DMA is elided and ``pl.when``
+    skips their compute — and emits partial (o, lse, sigma_p) merged by
+    ``lse_combine_pallas``. HBM traffic scales with ``seq_lens``, not with
+    pool capacity. Returns (o [B,H,d_c] f32, lse [B,H]); plus raw partials
+    when ``return_partials``.
+    """
+    B, H, d_c = q_c8.shape
+    d_r = q_r.shape[-1]
+    page = content_pool.shape[1]
+    P = page_table.shape[1]
+    assert 1 <= num_splits <= P, (num_splits, P)
+    pages_per_split = (P + num_splits - 1) // num_splits
+    qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+
+    kernel = functools.partial(
+        _paged_splitkv_body, softmax_scale=softmax_scale, block_n=page,
+        blocks_per_split=pages_per_split, fmt=fmt, qmax=qmax)
+
+    def kv_idx(b, s, j, sl, pt):
+        return (_clamped_page_id(sl, pt, b, s, j, pages_per_split, page), 0, 0)
+
+    def sk_idx(b, s, j, sl, pt):
+        return (_clamped_page_id(sl, pt, b, s, j, pages_per_split, page), 0)
+
+    o_p, lse_p, sp_p = _splitkv_partials_call(
+        kernel,
+        grid=(B, num_splits, pages_per_split),
+        in_specs=[
+            pl.BlockSpec((1, H, d_c), lambda b, s, j, sl, pt: (b, 0, 0)),
+            pl.BlockSpec((1, H, d_r), lambda b, s, j, sl, pt: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, s, j, sl, pt: (b, 0)),
+            pl.BlockSpec((1, page, d_c), kv_idx),
+            pl.BlockSpec((1, page, d_r), kv_idx),
+            pl.BlockSpec((1, page), sk_idx),
+        ],
+        num_scalar_prefetch=2,      # seq_lens, page_table
+        B=B, num_splits=num_splits, H=H, d_c=d_c, interpret=interpret,
+        operands=(seq_lens, page_table, q_c8, q_r, sigma_q,
+                  content_pool, rope_pool, scale_pool),
+    )
+
+    o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
+    if return_partials:
+        return o, lse, (o_p, lse_p, sp_p)
+    return o, lse

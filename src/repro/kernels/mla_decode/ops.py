@@ -2,10 +2,13 @@
 
 ``snapmla_decode`` consumes a quantized MLACache directly; selects between the
 single-pass kernel, the split-KV (flash-decoding) kernel, and the pure-jnp
-reference paths. ``num_splits=None`` applies ``default_num_splits`` — a
-context-length heuristic that keeps short contexts on the single-pass path
-(bit-exact with the seed kernel) and cuts long contexts into sequence-parallel
-splits. On CPU the kernels run in interpret mode; on TPU set interpret=False.
+reference paths. ``snapmla_decode_paged`` is the same dispatch over a
+``PagedMLAPool`` (serial-page kernel vs paged split-KV kernel vs paged
+oracle). ``num_splits=None`` resolves through ``resolve_num_splits`` — the
+profile-driven autotuner (``autotune.SplitProfile``, measured sweeps keyed on
+(capacity, block_n, batch), emitted by the benchmarks as a JSON artifact)
+with ``default_num_splits``'s context-length heuristic as fallback. On CPU
+the kernels run in interpret mode; on TPU set interpret=False.
 
 Cache alignment: the cache capacity must be a multiple of ``block_n``
 (``init_mla_cache`` rounds ``max_len`` up to the page size, so this holds by
@@ -20,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.kvcache import MLACache, PagedMLAPool
+from repro.kernels.mla_decode import autotune as _autotune
 from repro.kernels.mla_decode import kernel as _k
 from repro.kernels.mla_decode import ref as _ref
 
@@ -37,6 +41,10 @@ def default_num_splits(context_len: int, block_n: int = 128,
     Short contexts (< 2 * target) stay single-pass — bit-exact with the seed
     kernel and no combine overhead. Longer contexts get the largest power of
     two <= context/target, capped at ``max_splits`` and at the block count.
+
+    This is the *fallback* of the profile-driven autotuner: when the measured
+    split profile (``autotune.SplitProfile``) has an entry for the exact
+    (capacity, block_n, batch), that measurement wins.
     """
     nblocks = max(1, -(-context_len // block_n))
     s = 1
@@ -46,13 +54,22 @@ def default_num_splits(context_len: int, block_n: int = 128,
 
 
 def resolve_num_splits(requested: int | None, capacity: int,
-                       block_n: int) -> int:
+                       block_n: int, batch: int | None = None,
+                       layout: str = "contiguous") -> int:
     """Single resolution rule for every decode path (kernel, pjit ref,
-    shard_map ref): None/0 = auto heuristic; fixed counts are clamped to the
-    block count so a config tuned for long contexts still traces on a short
-    cache."""
-    splits = requested if requested else default_num_splits(capacity, block_n)
-    return max(1, min(splits, capacity // block_n))
+    shard_map ref, paged pool): None/0 = auto — a measured split-profile hit
+    for (capacity, block_n, batch) under the cache ``layout`` if the
+    autotuner cache has one, else the context-length heuristic. Fixed counts
+    are clamped to the block count so a config tuned for long contexts still
+    traces on a short cache."""
+    nblocks = max(1, capacity // block_n)
+    if requested:
+        splits = requested
+    else:
+        splits = _autotune.tuned_num_splits(capacity, block_n, batch, layout)
+        if splits is None:
+            splits = default_num_splits(capacity, block_n)
+    return max(1, min(splits, nblocks))
 
 
 def _check_alignment(n: int, block_n: int) -> None:
@@ -63,8 +80,6 @@ def _check_alignment(n: int, block_n: int) -> None:
             "page size) so the decode kernel never re-pads the cache per step")
 
 
-@partial(jax.jit, static_argnames=("softmax_scale", "block_n", "fmt",
-                                   "num_splits", "use_kernel", "interpret"))
 def snapmla_decode(
     q_c8: jax.Array,
     q_r: jax.Array,
@@ -78,10 +93,39 @@ def snapmla_decode(
     use_kernel: bool = True,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
-    """Decode one token per sequence. Returns (o_latent [B,H,d_c] f32, lse)."""
+    """Decode one token per sequence. Returns (o_latent [B,H,d_c] f32, lse).
+
+    Split resolution happens OUTSIDE the jitted impl (whose jit cache keys on
+    the *resolved* count), so an in-process profile update — e.g. the
+    benchmarks calling ``emit_split_profile`` — takes effect on the next
+    direct call instead of being shadowed by an executable traced under the
+    old plan. (Callers that close over this inside their own jit still pin
+    the plan at their trace time, as any static argument is.)"""
     N = cache.content.shape[1]
     _check_alignment(N, block_n)
-    splits = resolve_num_splits(num_splits, N, block_n)
+    splits = resolve_num_splits(num_splits, N, block_n, batch=q_c8.shape[0])
+    return _snapmla_decode_impl(
+        q_c8, q_r, sigma_q, cache, softmax_scale=softmax_scale,
+        block_n=block_n, fmt=fmt, num_splits=splits, use_kernel=use_kernel,
+        interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("softmax_scale", "block_n", "fmt",
+                                   "num_splits", "use_kernel", "interpret"))
+def _snapmla_decode_impl(
+    q_c8: jax.Array,
+    q_r: jax.Array,
+    sigma_q: jax.Array,
+    cache: MLACache,
+    *,
+    softmax_scale: float,
+    block_n: int,
+    fmt: str,
+    num_splits: int,
+    use_kernel: bool,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
+    splits = num_splits
     args = (q_c8, q_r.astype(jnp.float32), sigma_q, cache.content,
             cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens)
     if use_kernel:
@@ -100,7 +144,6 @@ def snapmla_decode(
         block_n=block_n, fmt=fmt)
 
 
-@partial(jax.jit, static_argnames=("softmax_scale", "fmt", "interpret"))
 def snapmla_decode_paged(
     q_c8: jax.Array,
     q_r: jax.Array,
@@ -109,10 +152,54 @@ def snapmla_decode_paged(
     *,
     softmax_scale: float,
     fmt: str = "fp8_e4m3",
+    num_splits: int | None = None,
+    use_kernel: bool = True,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
-    return _k.mla_decode_paged_pallas(
-        q_c8, q_r.astype(jnp.float32), sigma_q,
-        pool.content, pool.rope.astype(jnp.float32), pool.scale,
-        pool.page_table, pool.seq_lens,
-        softmax_scale=softmax_scale, fmt=fmt, interpret=interpret)
+    """Decode one token per sequence against a paged pool.
+
+    ``num_splits`` follows the same resolution rule as the contiguous path
+    (None/0 = autotuner profile -> heuristic; 1 = the seed serial-page
+    kernel, bit-exact; >1 = the paged split-KV kernel with block-level early
+    exit) and, like ``snapmla_decode``, resolves outside the jitted impl so
+    profile updates aren't shadowed by the jit cache. Capacity for
+    resolution is the per-sequence page-table span ``P * page`` — the pool
+    may be much larger.
+    """
+    page = pool.content.shape[1]
+    capacity = pool.page_table.shape[1] * page
+    splits = resolve_num_splits(num_splits, capacity, page,
+                                batch=q_c8.shape[0], layout="paged")
+    return _snapmla_decode_paged_impl(
+        q_c8, q_r, sigma_q, pool, softmax_scale=softmax_scale, fmt=fmt,
+        num_splits=splits, use_kernel=use_kernel, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("softmax_scale", "fmt", "num_splits",
+                                   "use_kernel", "interpret"))
+def _snapmla_decode_paged_impl(
+    q_c8: jax.Array,
+    q_r: jax.Array,
+    sigma_q: jax.Array,
+    pool: PagedMLAPool,
+    *,
+    softmax_scale: float,
+    fmt: str,
+    num_splits: int,
+    use_kernel: bool,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
+    splits = num_splits
+    args = (q_c8, q_r.astype(jnp.float32), sigma_q,
+            pool.content, pool.rope.astype(jnp.float32), pool.scale,
+            pool.page_table, pool.seq_lens)
+    if use_kernel:
+        if splits == 1:
+            return _k.mla_decode_paged_pallas(
+                *args, softmax_scale=softmax_scale, fmt=fmt,
+                interpret=interpret)
+        return _k.mla_decode_paged_splitkv_pallas(
+            *args, softmax_scale=softmax_scale, num_splits=splits, fmt=fmt,
+            interpret=interpret)
+    return _ref.snapmla_decode_paged_splitkv_ref(
+        *args, softmax_scale=softmax_scale, num_splits=splits, fmt=fmt)

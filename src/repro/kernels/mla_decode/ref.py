@@ -202,6 +202,50 @@ def snapmla_decode_splitkv_ref(
     return o, lse
 
 
+def gather_paged_view(content_pool, rope_pool, scale_pool, page_table):
+    """Contiguous [B, P*page, ...] view of a page pool through its page table.
+
+    The split-KV kernel's page axis and the contiguous kernel's block axis
+    coincide under this gather (block_n == page), so the paged oracles are the
+    contiguous oracles applied to the gathered view."""
+    c = content_pool[page_table]                        # [B, P, page, d_c]
+    r = rope_pool[page_table]
+    s = scale_pool[page_table]
+    B, P, page = s.shape
+    return (c.reshape(B, P * page, -1), r.reshape(B, P * page, -1),
+            s.reshape(B, P * page))
+
+
+def snapmla_decode_paged_splitkv_ref(
+    q_c8: jax.Array,          # [B, H, d_c]
+    q_r: jax.Array,           # [B, H, d_r] (pre-divided by sigma_q)
+    sigma_q: jax.Array,       # [B, H]
+    content_pool: jax.Array,  # [n_pages, page, d_c]
+    rope_pool: jax.Array,     # [n_pages, page, d_r]
+    scale_pool: jax.Array,    # [n_pages, page]
+    page_table: jax.Array,    # [B, P] int32
+    seq_lens: jax.Array,      # [B]
+    *,
+    softmax_scale: float,
+    num_splits: int,
+    fmt: quant.QuantFormat = "fp8_e4m3",
+    return_partials: bool = False,
+):
+    """Paged split-KV oracle: page-table gather + the contiguous split-KV
+    oracle at block_n == page. Parity target for
+    ``kernel.mla_decode_paged_splitkv_pallas`` — the kernel resolves each
+    logical page through the scalar-prefetched page table at DMA time, the
+    oracle resolves the whole table up front; the per-split quantized
+    arithmetic (and hence every sigma_p rounding decision) is identical
+    because both walk the same pages in the same split partition."""
+    page = content_pool.shape[1]
+    c, r, s = gather_paged_view(content_pool, rope_pool, scale_pool, page_table)
+    return snapmla_decode_splitkv_ref(
+        q_c8, q_r, sigma_q, c, r.astype(jnp.float32), s, seq_lens,
+        softmax_scale=softmax_scale, num_splits=num_splits, block_n=page,
+        fmt=fmt, return_partials=return_partials)
+
+
 def snapmla_decode_parallel_ref(
     q_c8: jax.Array,       # [B, H, d_c]
     q_r: jax.Array,        # [B, H, d_r] (pre-divided by sigma_q)

@@ -28,6 +28,16 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 
 
+def _check_finite(ok, where: str) -> None:
+    """Loud NaN gate: serving must never emit non-finite logits — a NaN here
+    means the quantized decode pipeline (or a kernel change behind it) broke,
+    so fail the process rather than generate garbage tokens. ``ok`` is either
+    raw logits or an already-reduced boolean (the fused scan's every-step
+    flag); both generation paths cover every decode step."""
+    if not bool(jnp.all(jnp.isfinite(ok) if ok.ndim else ok)):
+        raise SystemExit(f"[serve] FATAL: non-finite logits at {where}")
+
+
 def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
              aux_embed=None, greedy: bool = True):
     """prompts [B, S] -> (generated tokens [B, gen_steps], decode tok/s)."""
@@ -40,12 +50,15 @@ def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     state = T.init_decode_state(cfg, B, max_len)
     logits, state = prefill_fn(params, prompts, state, *(
         (aux_embed,) if aux_embed is not None else ()))
+    _check_finite(logits, "prefill")
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
 
     outs = [tok]
     # warm up decode compile before timing
     pos = jnp.full((B,), S, jnp.int32)
     logits, state = decode_fn(params, tok, state, pos)
+    # every-step NaN gate, accumulated on device (no per-step host sync)
+    ok = jnp.all(jnp.isfinite(logits))
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     outs.append(tok)
     jax.block_until_ready(tok)
@@ -54,10 +67,12 @@ def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     for i in range(1, gen_steps - 1):
         pos = jnp.full((B,), S + i, jnp.int32)
         logits, state = decode_fn(params, tok, state, pos)
+        ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(logits)))
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         outs.append(tok)
     jax.block_until_ready(tok)
     dt = time.time() - t0
+    _check_finite(ok, "decode (any step)")
     toks_per_s = B * max(gen_steps - 2, 1) / max(dt, 1e-9)
     return jnp.stack(outs, axis=1), toks_per_s
 
@@ -83,6 +98,7 @@ def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     state = T.init_decode_state(cfg, B, max_len)
     logits, state = prefill_fn(params, prompts, state, *(
         (aux_embed,) if aux_embed is not None else ()))
+    _check_finite(logits, "prefill")
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     if gen_steps <= 1:
         return tok[:, None][:, :gen_steps], 0.0
@@ -92,9 +108,10 @@ def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     compiled = fused_fn.lower(params, tok, state, start_pos).compile()
     jax.block_until_ready((tok, state))
     t0 = time.time()
-    toks, _state = compiled(params, tok, state, start_pos)
+    toks, _state, ok = compiled(params, tok, state, start_pos)
     jax.block_until_ready(toks)
     dt = time.time() - t0
+    _check_finite(ok, "fused decode (any step)")
     toks_per_s = B * (gen_steps - 1) / max(dt, 1e-9)
     return jnp.concatenate([tok[:, None], toks], axis=1), toks_per_s
 
@@ -112,12 +129,21 @@ def main():
                     help="scan-based generate_fused (one dispatch) instead of "
                          "the per-step decode loop")
     ap.add_argument("--kv-splits", type=int, default=0,
-                    help="split-KV decode splits (0 = auto heuristic)")
+                    help="split-KV (flash-decoding) splits for decode "
+                         "attention, contiguous AND paged caches "
+                         "(0 = auto: measured split profile if present, else "
+                         "the context-length heuristic; 1 = single-pass)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache for MLA layers: latent entries live "
+                         "in a page pool addressed through per-sequence page "
+                         "tables (multi-tenant pool layout) instead of a "
+                         "contiguous per-slot cache")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    cfg = dataclasses.replace(cfg, kv_fmt=args.fmt, kv_splits=args.kv_splits)
+    cfg = dataclasses.replace(cfg, kv_fmt=args.fmt, kv_splits=args.kv_splits,
+                              kv_paged=args.paged)
     key = jax.random.PRNGKey(args.seed)
     params = T.init_model(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
@@ -128,8 +154,9 @@ def main():
     gen_fn = generate_fused if args.fused else generate
     toks, tps = gen_fn(cfg, params, prompts, args.gen, aux_embed=aux)
     mode = "fused-scan" if args.fused else "step-loop"
-    print(f"[serve] {cfg.name} fmt={args.fmt} ({mode}): generated {toks.shape} "
-          f"at {tps:.1f} tok/s (decode)")
+    cache_kind = "paged" if args.paged else "contiguous"
+    print(f"[serve] {cfg.name} fmt={args.fmt} ({mode}, {cache_kind} cache): "
+          f"generated {toks.shape} at {tps:.1f} tok/s (decode)")
 
     if args.fmt != "none":
         cfg_b = dataclasses.replace(cfg, kv_fmt="none")

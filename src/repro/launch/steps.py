@@ -80,18 +80,24 @@ def make_fused_decode(cfg: ModelConfig, n_steps: int):
     so the cache buffers are updated in place across the whole generation.
 
     Returns fused(params, token [B], state, start_pos [B])
-        -> (tokens [B, n_steps] int32, final state).
+        -> (tokens [B, n_steps] int32, final state, logits_finite [] bool).
+    ``logits_finite`` is the AND of an all-finite check over EVERY step's
+    logits, folded into the scan carry — one boolean rides along so callers
+    (serve, CI smoke) can gate on a NaN at any step, not just the last,
+    without a second dispatch or materializing [n_steps, B, V] logits.
     """
     def fused_decode(params, token, state, start_pos):
         def body(carry, i):
-            tok, st = carry
+            tok, st, ok = carry
             logits, st = T.decode_step(params, cfg, tok, st, start_pos + i)
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(logits)))
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            return (tok, st), tok
+            return (tok, st, ok), tok
 
-        (_, state_out), toks = jax.lax.scan(
-            body, (token, state), jnp.arange(n_steps, dtype=jnp.int32))
-        return jnp.moveaxis(toks, 0, 1), state_out
+        (_, state_out, ok), toks = jax.lax.scan(
+            body, (token, state, jnp.array(True)),
+            jnp.arange(n_steps, dtype=jnp.int32))
+        return jnp.moveaxis(toks, 0, 1), state_out, ok
 
     return fused_decode
 

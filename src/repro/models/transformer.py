@@ -25,7 +25,9 @@ from repro.configs.base import ModelConfig
 from repro.core import mla as mla_lib
 from repro.core.kvcache import (CacheConfig, GQACache, MLACache, gqa_append,
                                 gqa_prefill, init_gqa_cache, init_mla_cache,
-                                mla_append, mla_prefill)
+                                init_paged_mla_cache, mla_append, mla_prefill,
+                                paged_gather, paged_mla_append,
+                                paged_mla_prefill)
 from repro.core.attention import gqa_decode_dequant_ref, mla_decode_dequant_ref
 from repro.kernels.gqa_decode import ref as gqa_ref
 from repro.kernels.mla_decode import ref as mla_kref
@@ -251,8 +253,9 @@ def _init_layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
         return init_gqa_cache(_cache_cfg(cfg, kind), batch, max_len,
                               cfg.n_kv_heads, cfg.d_head)
     if kind == "mla":
-        return init_mla_cache(_cache_cfg(cfg, kind), batch, max_len,
-                              cfg.mla.d_c, cfg.mla.d_rope)
+        init = init_paged_mla_cache if cfg.kv_paged else init_mla_cache
+        return init(_cache_cfg(cfg, kind), batch, max_len,
+                    cfg.mla.d_c, cfg.mla.d_rope)
     if kind == "cross":
         return init_gqa_cache(_cache_cfg(cfg, "attn"), batch,
                               max(cfg.n_aux_tokens, 1), cfg.n_kv_heads, cfg.d_head)
@@ -348,18 +351,38 @@ def _cross_decode(p, cfg: ModelConfig, x_t, cache: GQACache):
     return jnp.einsum("bhk,hkd->bd", o.astype(x_t.dtype), p.wo)
 
 
-def _mla_splits(cfg: ModelConfig, capacity: int) -> int:
+def _mla_splits(cfg: ModelConfig, capacity: int, batch: int | None = None,
+                layout: str = "contiguous") -> int:
     """Resolve ModelConfig.kv_splits (0 = auto) against the cache capacity."""
     from repro.kernels.mla_decode.ops import resolve_num_splits
-    return resolve_num_splits(cfg.kv_splits, capacity, cfg.page_size)
+    return resolve_num_splits(cfg.kv_splits, capacity, cfg.page_size, batch,
+                              layout)
 
 
-def _mla_decode(p, cfg: ModelConfig, x_t, cache: MLACache, pos):
-    """SnapMLA decode: Fused-Q-Quant + Fused-K-Append + scale-fused kernel."""
+def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos):
+    """SnapMLA decode: Fused-Q-Quant + Fused-K-Append + scale-fused kernel.
+
+    With ``cfg.kv_paged`` the cache is a PagedMLAPool: the append goes
+    through the page table and the attention runs the split einsum form over
+    the page-table gather — the pjit twin of the paged split-KV kernel / the
+    paged oracle. Note the gather materializes the full page-table span per
+    step, so this pure-jnp model path demonstrates paged *semantics*; the
+    seq_lens-proportional HBM traffic lives in the Pallas kernel path
+    (ops.snapmla_decode_paged, reachable via core.snapmla.decode_step) —
+    wiring the kernel into the model decode behind a use_kernels flag is a
+    ROADMAP item. The shard_map collective-free region supports contiguous
+    caches only (mla_decode_shard_map consumes an MLACache); a paged config
+    under use_shard_map falls through to the pjit einsum path.
+    """
     mcfg = _mla_cfg(cfg)
     ccfg = _cache_cfg(cfg, "mla")
+    paged = cfg.kv_paged
+    use_sm = (not paged and SHARD_CTX is not None
+              and SHARD_CTX.get("use_shard_map"))
     c_kv, k_r = mla_lib.project_kv(p, mcfg, x_t[:, None, :], pos[:, None])
-    if SHARD_CTX is not None and SHARD_CTX.get("use_shard_map"):
+    if paged:
+        cache = paged_mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0])
+    elif use_sm:
         from repro.core.distributed_decode import (mla_append_shard_map,
                                                    shard_map_applicable)
         if shard_map_applicable(SHARD_CTX["mesh"], SHARD_CTX["dp"],
@@ -375,8 +398,9 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache: MLACache, pos):
     fmt = ccfg.fmt if ccfg.quantized else "none"
     q_c8, q_r_s, sigma_q = mla_kref.prepare_q(q_lat, q_r[:, 0], fmt)
     q_c8 = _wsc(q_c8, "dp", "model", None)
-    splits = _mla_splits(cfg, cache.capacity)
-    if SHARD_CTX is not None and SHARD_CTX.get("use_shard_map"):
+    splits = _mla_splits(cfg, cache.capacity, q_c8.shape[0],
+                         "paged" if paged else "contiguous")
+    if use_sm:
         # collective-free attention region (EXPERIMENTS §Perf, core/
         # distributed_decode.py) — explicit shard_map over dp x model
         from repro.core.distributed_decode import (mla_decode_shard_map,
@@ -388,19 +412,22 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache: MLACache, pos):
                 cache, softmax_scale=mcfg.softmax_scale,
                 block_n=ccfg.page_size, fmt=fmt, num_splits=splits)
             return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
+    if paged:
+        content, rope, scale = paged_gather(cache)
+    else:
+        content, rope, scale = cache.content, cache.rope, cache.scale
     if splits > 1:
         # parallel (einsum) split form: while-loop-free, so the pjit serve
         # path stays XLA-parallel and dryrun cost_analysis stays exact
         o_lat, _ = mla_kref.snapmla_decode_splitkv_parallel_ref(
-            q_c8, q_r_s, sigma_q, cache.content,
-            cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens,
-            softmax_scale=mcfg.softmax_scale, num_splits=splits,
-            block_n=ccfg.page_size, fmt=fmt)
+            q_c8, q_r_s, sigma_q, content, rope.astype(jnp.float32), scale,
+            cache.seq_lens, softmax_scale=mcfg.softmax_scale,
+            num_splits=splits, block_n=ccfg.page_size, fmt=fmt)
     else:
         o_lat, _ = mla_kref.snapmla_decode_parallel_ref(
-            q_c8, q_r_s, sigma_q, cache.content,
-            cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens,
-            softmax_scale=mcfg.softmax_scale, block_n=ccfg.page_size, fmt=fmt)
+            q_c8, q_r_s, sigma_q, content, rope.astype(jnp.float32), scale,
+            cache.seq_lens, softmax_scale=mcfg.softmax_scale,
+            block_n=ccfg.page_size, fmt=fmt)
     o_lat = _wsc(o_lat, "dp", "model", None)
     return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
 
@@ -496,7 +523,8 @@ def _prefill_layer_state(p, cfg: ModelConfig, kind: str, x, state, aux):
         mcfg = _mla_cfg(cfg)
         x = x + mla_lib.mla_attention(p["mixer"], mcfg, h, positions)
         c_kv, k_r = mla_lib.project_kv(p["mixer"], mcfg, h, positions)
-        state = mla_prefill(state, _cache_cfg(cfg, "mla"), c_kv, k_r)
+        fill = paged_mla_prefill if cfg.kv_paged else mla_prefill
+        state = fill(state, _cache_cfg(cfg, "mla"), c_kv, k_r)
     elif kind == "cross":
         g = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
         x = x + g * L.cross_attention_block(p["mixer"], _attn_cfg(cfg, kind), h, aux)

@@ -1,0 +1,217 @@
+"""resolve_num_splits + split-profile autotuner: edge cases (capacity smaller
+than one block, requested > blocks, single-token sequences), the heuristic
+fallback when no profile cache exists, profile persistence round-trips, and
+the measured sweep."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mla_decode import autotune
+from repro.kernels.mla_decode.ops import (default_num_splits,
+                                          resolve_num_splits, snapmla_decode)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_profile(tmp_path, monkeypatch):
+    """Every test starts with no profile singleton and a throwaway profile
+    path, so the repo-root artifact (if present) can't leak in."""
+    monkeypatch.setenv(autotune.PROFILE_ENV,
+                       str(tmp_path / "splits_profile.json"))
+    autotune.reset()
+    yield
+    autotune.reset()
+
+
+# ---------------------------------------------------------------------------
+# resolve_num_splits edge cases
+# ---------------------------------------------------------------------------
+
+def test_resolve_capacity_smaller_than_one_block():
+    """capacity < block_n: there is at most one block — always single-pass,
+    whatever was requested or profiled."""
+    assert resolve_num_splits(None, 64, 128) == 1
+    assert resolve_num_splits(8, 64, 128) == 1
+    assert resolve_num_splits(1, 1, 128) == 1
+
+
+def test_resolve_requested_exceeds_blocks_is_clamped():
+    assert resolve_num_splits(8, 256, 128) == 2       # only 2 blocks
+    assert resolve_num_splits(1000, 1024, 128) == 8
+    assert resolve_num_splits(3, 1024, 128) == 3      # non-power-of-2 kept
+
+
+def test_resolve_heuristic_fallback_without_profile():
+    """No profile cache anywhere: auto (None/0) must equal the heuristic."""
+    for cap in (256, 4096, 8192, 32768, 131072):
+        expect = default_num_splits(cap, 128)
+        assert resolve_num_splits(None, cap, 128, batch=4) == expect
+        assert resolve_num_splits(0, cap, 128, batch=4) == expect
+    # batch unknown (shard_map ref paths) also falls back cleanly
+    assert resolve_num_splits(None, 32768, 128) == default_num_splits(32768, 128)
+
+
+def test_resolve_profile_hit_beats_heuristic():
+    profile = autotune.SplitProfile()
+    profile.record(32768, 128, 4, {1: 900.0, 2: 500.0, 4: 400.0, 8: 450.0})
+    autotune.reset(profile)
+    assert resolve_num_splits(None, 32768, 128, batch=4) == 4
+    # different batch -> no entry -> heuristic
+    assert resolve_num_splits(None, 32768, 128, batch=2) == \
+        default_num_splits(32768, 128)
+    # explicit request still wins over the profile
+    assert resolve_num_splits(2, 32768, 128, batch=4) == 2
+
+
+def test_profile_layouts_are_separate():
+    """A best measured on the contiguous kernel never drives the paged path
+    (and vice versa) — their DMA patterns differ."""
+    profile = autotune.SplitProfile()
+    profile.record(32768, 128, 4, {1: 900.0, 4: 400.0})
+    profile.record(32768, 128, 4, {1: 900.0, 2: 300.0, 4: 400.0},
+                   layout="paged")
+    autotune.reset(profile)
+    assert resolve_num_splits(None, 32768, 128, batch=4) == 4
+    assert resolve_num_splits(None, 32768, 128, batch=4, layout="paged") == 2
+    # paged-only entry -> contiguous still falls back to the heuristic
+    profile2 = autotune.SplitProfile()
+    profile2.record(32768, 128, 2, {4: 100.0}, layout="paged")
+    autotune.reset(profile2)
+    assert resolve_num_splits(None, 32768, 128, batch=2) == \
+        default_num_splits(32768, 128)
+
+
+def test_record_prefers_fewer_splits_within_noise_margin():
+    """Ties within WIN_MARGIN go to the smaller split count, so measurement
+    jitter can't flip a plan away from the bit-exact single-pass path."""
+    profile = autotune.SplitProfile()
+    assert profile.record(4096, 128, 2, {1: 100.0, 2: 97.0, 4: 99.0}) == 1
+    assert profile.record(4096, 128, 4, {1: 100.0, 2: 80.0, 4: 79.0}) == 2
+    assert profile.record(4096, 128, 8, {1: 100.0, 4: 50.0}) == 4
+
+
+def test_lookup_malformed_entry_falls_back_to_heuristic():
+    """A hand-edited entry missing 'best' (or with garbage) must not crash
+    decode — lookup returns None and resolve uses the heuristic."""
+    profile = autotune.SplitProfile({
+        "512/64/2": {"measured_us": {"1": 100.0}},    # no "best"
+        "1024/64/2": "garbage",
+        "2048/64/2": {"best": "not-an-int-able"},
+    })
+    autotune.reset(profile)
+    assert profile.lookup(512, 64, 2) is None
+    assert profile.lookup(1024, 64, 2) is None
+    assert profile.lookup(2048, 64, 2) is None
+    assert resolve_num_splits(None, 512, 64, batch=2) == \
+        default_num_splits(512, 64)
+
+
+def test_resolve_profiled_best_clamped_to_block_count():
+    """A profile measured on long contexts must not break a short cache."""
+    profile = autotune.SplitProfile()
+    profile.record(256, 128, 2, {8: 100.0})           # absurd entry: 8 > blocks
+    autotune.reset(profile)
+    assert resolve_num_splits(None, 256, 128, batch=2) == 2
+
+
+def test_single_token_sequences_decode_under_auto_splits():
+    """seq_lens == 1 with a profiled multi-split plan: the kernel's early
+    exit handles the all-dead-blocks splits; output matches single-pass."""
+    from repro.core.kvcache import CacheConfig, init_mla_cache, mla_prefill
+    from repro.kernels.mla_decode import ref as R
+
+    B, N, bn = 2, 256, 32
+    profile = autotune.SplitProfile()
+    profile.record(N, bn, B, {1: 500.0, 4: 100.0})    # force 4 splits
+    autotune.reset(profile)
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=bn)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    cache = mla_prefill(init_mla_cache(cfg, B, N, 32, 16), cfg,
+                        jax.random.normal(ks[0], (B, N, 32)),
+                        jax.random.normal(ks[1], (B, N, 16)))
+    cache = cache._replace(seq_lens=jnp.ones((B,), jnp.int32))
+    q_c8, q_r, sq = R.prepare_q(jax.random.normal(ks[2], (B, 4, 32)),
+                                jax.random.normal(ks[3], (B, 4, 16)))
+    o_auto, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=0.1,
+                               block_n=bn)            # auto -> profiled 4
+    o_one, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=0.1,
+                              block_n=bn, num_splits=1)
+    assert not np.isnan(np.asarray(o_auto)).any()
+    np.testing.assert_allclose(np.asarray(o_auto), np.asarray(o_one),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# profile persistence + measured sweep
+# ---------------------------------------------------------------------------
+
+def test_profile_save_load_round_trip(tmp_path):
+    p = tmp_path / "prof.json"
+    profile = autotune.SplitProfile()
+    best = profile.record(4096, 128, 2, {1: 300.0, 2: 200.5, 4: 250.0})
+    assert best == 2
+    profile.save(p)
+    loaded = autotune.SplitProfile.load(p)
+    assert loaded.lookup(4096, 128, 2) == 2
+    assert loaded.lookup(4096, 128, 3) is None
+    assert loaded.lookup(4096, 128, None) is None
+    payload = json.loads(p.read_text())
+    assert payload["version"] == autotune.PROFILE_VERSION
+    assert payload["entries"]["4096/128/2"]["measured_us"]["2"] == 200.5
+
+
+def test_profile_load_missing_or_corrupt_is_empty(tmp_path):
+    assert autotune.SplitProfile.load(tmp_path / "nope.json").entries == {}
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert autotune.SplitProfile.load(bad).entries == {}
+    wrong = tmp_path / "wrong.json"
+    wrong.write_text(json.dumps({"version": 999, "entries": {"a": 1}}))
+    assert autotune.SplitProfile.load(wrong).entries == {}
+
+
+def test_candidate_splits_respect_block_count():
+    assert autotune.candidate_splits(64, 128) == [1]
+    assert autotune.candidate_splits(256, 128) == [1, 2]
+    assert autotune.candidate_splits(131072, 128) == [1, 2, 4, 8]
+
+
+def test_measure_split_sweep_records_profile_entry():
+    profile = autotune.SplitProfile()
+    measured = autotune.measure_split_sweep(128, 32, 1, d_c=16, d_r=8,
+                                            heads=2, iters=1, profile=profile)
+    assert set(measured) == {1, 2, 4}                 # 4 blocks -> 1,2,4
+    best = profile.lookup(128, 32, 1)
+    assert best in measured
+    assert measured[best] == min(measured.values())
+
+
+def test_measure_split_sweep_paged_layout():
+    """The paged sweep times the actual paged kernel and records under the
+    paged key only."""
+    profile = autotune.SplitProfile()
+    measured = autotune.measure_split_sweep(128, 32, 1, d_c=16, d_r=8,
+                                            heads=2, iters=1, profile=profile,
+                                            layout="paged")
+    assert set(measured) == {1, 2, 4}
+    assert profile.lookup(128, 32, 1, layout="paged") in measured
+    assert profile.lookup(128, 32, 1) is None          # contiguous untouched
+
+
+def test_emit_split_profile_artifact(tmp_path):
+    """The benchmark entry point writes the JSON artifact resolve reads,
+    covering both layouts."""
+    from benchmarks.kernel_perf import emit_split_profile
+
+    path = tmp_path / "prof.json"
+    out = emit_split_profile(path=str(path), shapes=((128, 32, 1),),
+                             paged_shapes=((128, 32, 1),), iters=1)
+    assert out == path
+    loaded = autotune.SplitProfile.load(path)
+    assert loaded.lookup(128, 32, 1) is not None
+    assert loaded.lookup(128, 32, 1, layout="paged") is not None
+    # emit installs the fresh profile as the in-process singleton
+    assert autotune.get_profile().lookup(128, 32, 1) is not None

@@ -1,0 +1,308 @@
+"""Paged split-KV decode: kernel vs paged pure-jnp oracle across a
+num_splits × context grid (ragged seq_lens included), agreement with the
+contiguous kernel, ops-level dispatch, early-exit accounting, and the
+paged model/serve path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kvcache import (CacheConfig, init_mla_cache,
+                                init_paged_mla_cache, mla_append, mla_prefill,
+                                paged_gather, paged_mla_append,
+                                paged_mla_prefill)
+from repro.kernels.mla_decode import ref as R
+from repro.kernels.mla_decode.kernel import (mla_decode_paged_pallas,
+                                             mla_decode_paged_splitkv_pallas,
+                                             mla_decode_splitkv_pallas)
+from repro.kernels.mla_decode.ops import snapmla_decode_paged
+
+SCALE = 0.1
+# ragged batch: empty, one-page (<= page), mid-page, page-aligned, full
+RAGGED_LENS = [0, 20, 130, 192, 256]
+
+
+def _pool_setup(key, B, S, N, d_c, d_r, fmt, page, seq_lens=None, H=4,
+                shuffle_seed=0, n_extra=3):
+    """Contiguous cache + the same data scattered into a shuffled page pool."""
+    cfg = CacheConfig(fmt=fmt, page_size=page)
+    ks = jax.random.split(key, 4)
+    cache = mla_prefill(init_mla_cache(cfg, B, N, d_c, d_r), cfg,
+                        jax.random.normal(ks[0], (B, S, d_c)) * 2,
+                        jax.random.normal(ks[1], (B, S, d_r)) * 25)
+    if seq_lens is not None:
+        cache = cache._replace(seq_lens=jnp.asarray(seq_lens, jnp.int32))
+    q_c8, q_r, sq = R.prepare_q(jax.random.normal(ks[2], (B, H, d_c)),
+                                jax.random.normal(ks[3], (B, H, d_r)) * 5, fmt)
+
+    P = N // page
+    rng = np.random.RandomState(shuffle_seed)
+    n_pool = B * P + n_extra
+    perm = rng.permutation(n_pool)[: B * P].reshape(B, P)
+    pool_c = np.zeros((n_pool, page, d_c), np.asarray(cache.content).dtype)
+    pool_r = np.zeros((n_pool, page, d_r), np.float32)
+    pool_s = np.ones((n_pool, page), np.float32)
+    for b in range(B):
+        for j in range(P):
+            sl = slice(j * page, (j + 1) * page)
+            pool_c[perm[b, j]] = np.asarray(cache.content[b, sl])
+            pool_r[perm[b, j]] = np.asarray(cache.rope[b, sl], np.float32)
+            pool_s[perm[b, j]] = np.asarray(cache.scale[b, sl])
+    pool = (jnp.asarray(pool_c), jnp.asarray(pool_r), jnp.asarray(pool_s),
+            jnp.asarray(perm, jnp.int32))
+    return cache, (q_c8, q_r, sq), pool
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "int8", "none"])
+@pytest.mark.parametrize("num_splits", [1, 2, 4])
+def test_paged_splitkv_kernel_matches_paged_oracle_ragged(fmt, num_splits):
+    """Acceptance grid: kernel == paged pure-jnp oracle on ragged lens
+    (incl. the empty and one-page rows), partials included."""
+    B, N, page = len(RAGGED_LENS), 256, 32
+    cache, q, (pc, pr, ps, pt) = _pool_setup(
+        jax.random.PRNGKey(0), B, N, N, 32, 16, fmt, page,
+        seq_lens=RAGGED_LENS)
+    o_k, lse_k, (op_k, lp_k, sp_k) = mla_decode_paged_splitkv_pallas(
+        *q, pc, pr, ps, pt, cache.seq_lens, softmax_scale=SCALE,
+        num_splits=num_splits, fmt=fmt, return_partials=True)
+    o_r, lse_r, (op_r, lp_r, sp_r) = R.snapmla_decode_paged_splitkv_ref(
+        *q, pc, pr, ps, pt, cache.seq_lens, softmax_scale=SCALE,
+        num_splits=num_splits, fmt=fmt, return_partials=True)
+    assert not np.isnan(np.asarray(o_k)).any()
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse_k), np.asarray(lse_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sp_k), np.asarray(sp_r),
+                               rtol=1e-6, atol=0)
+    np.testing.assert_allclose(np.asarray(op_k), np.asarray(op_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lp_k), np.asarray(lp_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("N,page", [(128, 32), (256, 64), (512, 64)])
+@pytest.mark.parametrize("num_splits", [2, 4])
+def test_paged_splitkv_matches_contiguous_across_contexts(N, page, num_splits):
+    """num_splits × context grid: the paged kernel on a shuffled pool equals
+    the contiguous split-KV kernel on the same data — the page table is pure
+    addressing, never arithmetic."""
+    B = 3
+    lens = [N // 3, N // 2, N]
+    cache, q, (pc, pr, ps, pt) = _pool_setup(
+        jax.random.PRNGKey(N + num_splits), B, N, N, 32, 16, "fp8_e4m3",
+        page, seq_lens=lens)
+    o_p, lse_p = mla_decode_paged_splitkv_pallas(
+        *q, pc, pr, ps, pt, cache.seq_lens, softmax_scale=SCALE,
+        num_splits=num_splits)
+    o_c, lse_c = mla_decode_splitkv_pallas(
+        *q, cache.content, cache.rope.astype(jnp.float32), cache.scale,
+        cache.seq_lens, softmax_scale=SCALE, num_splits=num_splits,
+        block_n=page)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_c),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse_p), np.asarray(lse_c),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_splitkv_single_token_sequences():
+    """seq_lens == 1 everywhere: one live token in one live page, every other
+    page dead — the extreme early-exit case must stay NaN-free and match."""
+    B, N, page = 2, 256, 32
+    cache, q, (pc, pr, ps, pt) = _pool_setup(
+        jax.random.PRNGKey(11), B, N, N, 32, 16, "fp8_e4m3", page,
+        seq_lens=[1, 1])
+    for s in (1, 2, 4):
+        o_k, _ = mla_decode_paged_splitkv_pallas(
+            *q, pc, pr, ps, pt, cache.seq_lens, softmax_scale=SCALE,
+            num_splits=s)
+        o_r, _ = R.snapmla_decode_paged_splitkv_ref(
+            *q, pc, pr, ps, pt, cache.seq_lens, softmax_scale=SCALE,
+            num_splits=s)
+        assert not np.isnan(np.asarray(o_k)).any()
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_paged_splitkv_one_split_bit_identical_to_seed_paged_kernel():
+    """num_splits=1 with every page live runs the identical op sequence as
+    the seed serial-page kernel (shared block pipeline) -> bitwise equal."""
+    B, N, page = 2, 256, 32
+    cache, q, (pc, pr, ps, pt) = _pool_setup(
+        jax.random.PRNGKey(1), B, N, N, 32, 16, "fp8_e4m3", page,
+        seq_lens=[N, N])
+    o_s, lse_s = mla_decode_paged_pallas(
+        *q, pc, pr, ps, pt, cache.seq_lens, softmax_scale=SCALE)
+    o_1, lse_1 = mla_decode_paged_splitkv_pallas(
+        *q, pc, pr, ps, pt, cache.seq_lens, softmax_scale=SCALE, num_splits=1)
+    assert np.array_equal(np.asarray(o_s), np.asarray(o_1))
+    assert np.array_equal(np.asarray(lse_s), np.asarray(lse_1))
+
+
+def test_ops_paged_dispatch_and_ref_path():
+    """ops.snapmla_decode_paged: fixed splits, auto, and the use_kernel=False
+    oracle path all agree; oversized fixed splits are clamped."""
+    from repro.core.kvcache import PagedMLAPool
+
+    B, N, page = 2, 256, 32
+    cache, q, (pc, pr, ps, pt) = _pool_setup(
+        jax.random.PRNGKey(2), B, N, N, 32, 16, "fp8_e4m3", page,
+        seq_lens=[70, 256])
+    pool = PagedMLAPool(content=pc, rope=pr.astype(jnp.bfloat16), scale=ps,
+                        page_table=pt, seq_lens=cache.seq_lens)
+    o_auto, _ = snapmla_decode_paged(*q, pool, softmax_scale=SCALE)
+    o_4, _ = snapmla_decode_paged(*q, pool, softmax_scale=SCALE, num_splits=4)
+    o_ref, _ = snapmla_decode_paged(*q, pool, softmax_scale=SCALE,
+                                    num_splits=4, use_kernel=False)
+    o_big, _ = snapmla_decode_paged(*q, pool, softmax_scale=SCALE,
+                                    num_splits=64)   # > P pages -> clamped
+    for o in (o_auto, o_4, o_ref, o_big):
+        assert not np.isnan(np.asarray(o)).any()
+    np.testing.assert_allclose(np.asarray(o_4), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o_4), np.asarray(o_auto),
+                               rtol=0.05, atol=1e-4)   # quant rounding only
+
+
+def test_paged_early_exit_insensitive_to_pool_capacity():
+    """Growing the pool AND the page-table span with dead pages must not
+    change the output — the clamped index maps never address past the last
+    live page, so work tracks seq_lens, not capacity."""
+    B, N, page = 2, 128, 32
+    cache, q, (pc, pr, ps, pt) = _pool_setup(
+        jax.random.PRNGKey(3), B, N, N, 32, 16, "fp8_e4m3", page,
+        seq_lens=[50, 100])
+    o_small, lse_small = mla_decode_paged_splitkv_pallas(
+        *q, pc, pr, ps, pt, cache.seq_lens, softmax_scale=SCALE, num_splits=2)
+    # double the logical span: extra table entries point at a garbage page
+    n_pool = pc.shape[0]
+    garbage = jnp.full((B, N // page), n_pool - 1, jnp.int32)
+    pt_wide = jnp.concatenate([pt, garbage], axis=1)
+    pc_dirty = pc.at[n_pool - 1].set(
+        jnp.full(pc.shape[1:], 100.0).astype(pc.dtype))
+    o_wide, lse_wide = mla_decode_paged_splitkv_pallas(
+        *q, pc_dirty, pr, ps, pt_wide, cache.seq_lens, softmax_scale=SCALE,
+        num_splits=2)
+    np.testing.assert_allclose(np.asarray(o_small), np.asarray(o_wide),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lse_small), np.asarray(lse_wide),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_benchmark_paged_blocks_visited_scales_with_seq_lens():
+    """Acceptance: the paged sweep's effective-blocks-visited follows
+    seq_lens, not the pool capacity, and splits shorten the critical path."""
+    from benchmarks.kernel_perf import paged_splitkv_sweep
+    rows = {(r["pool_capacity"], r["num_splits"]): r
+            for r in paged_splitkv_sweep(pool_capacities=(32768, 131072),
+                                         seq_len=8192)}
+    r32, r128 = rows[(32768, 1)], rows[(131072, 1)]
+    # 4x the pool capacity, same seq_lens -> same blocks visited
+    assert r128["blocks_visited"] == r32["blocks_visited"] == 8192 // 128
+    assert r128["total_blocks"] == 4 * r32["total_blocks"]
+    assert r128["early_exit_savings"] > r32["early_exit_savings"]
+    # splits shorten the critical path, not the bytes
+    r32s8 = rows[(32768, 8)]
+    assert r32s8["blocks_visited"] == r32["blocks_visited"]
+    assert r32s8["critical_path_blocks"] == -(-r32["blocks_visited"] // 8)
+
+
+def test_paged_cache_append_prefill_match_contiguous():
+    """paged_mla_prefill + paged_mla_append reproduce the contiguous cache
+    contents through the page-table gather (identity layout)."""
+    B, max_len, d_c, d_r, page = 2, 96, 16, 8, 32
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=page)
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 4)
+    S = 40
+    ckv, kr = (jax.random.normal(ks[0], (B, S, d_c)),
+               jax.random.normal(ks[1], (B, S, d_r)))
+    c1, k1 = (jax.random.normal(ks[2], (B, d_c)),
+              jax.random.normal(ks[3], (B, d_r)))
+
+    contig = mla_prefill(init_mla_cache(cfg, B, max_len, d_c, d_r), cfg, ckv, kr)
+    contig = mla_append(contig, cfg, c1, k1)
+    paged = paged_mla_prefill(init_paged_mla_cache(cfg, B, max_len, d_c, d_r),
+                              cfg, ckv, kr)
+    paged = paged_mla_append(paged, cfg, c1, k1)
+
+    gc, gr, gs = paged_gather(paged)
+    np.testing.assert_array_equal(np.asarray(paged.seq_lens),
+                                  np.asarray(contig.seq_lens))
+    np.testing.assert_array_equal(np.asarray(gc, np.float32),
+                                  np.asarray(contig.content, np.float32))
+    np.testing.assert_array_equal(np.asarray(gr, np.float32),
+                                  np.asarray(contig.rope, np.float32))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(contig.scale))
+
+
+def test_paged_append_past_capacity_clamps_to_final_slot():
+    """Appending beyond capacity must degrade like the contiguous cache —
+    overwrite the FINAL slot — not corrupt the first slot of the last page
+    (which holds a live mid-sequence token)."""
+    B, d_c, d_r, page = 2, 8, 4, 32
+    cfg = CacheConfig(fmt="none", page_size=page)
+    pool = init_paged_mla_cache(cfg, B, 2 * page, d_c, d_r)   # capacity 64
+    key = jax.random.PRNGKey(5)
+    ckv = jax.random.normal(key, (B, 64, d_c))
+    kr = jax.random.normal(key, (B, 64, d_r))
+    pool = paged_mla_prefill(pool, cfg, ckv, kr)              # full
+    sentinel_first_of_last_page = np.asarray(
+        paged_gather(pool)[0], np.float32)[:, page]           # token 32
+    pool = paged_mla_append(pool, cfg, jnp.ones((B, d_c)), jnp.ones((B, d_r)))
+    gc, _, _ = paged_gather(pool)
+    gc = np.asarray(gc, np.float32)
+    # final slot overwritten, mid-sequence token untouched
+    np.testing.assert_array_equal(gc[:, -1], np.ones((B, d_c), np.float32))
+    np.testing.assert_array_equal(gc[:, page], sentinel_first_of_last_page)
+
+
+def test_snapmla_layer_paged_matches_contiguous():
+    """Public SnapMLA layer API with cfg.paged=True (prefill + decode through
+    the real paged kernels) tracks the contiguous-cache layer closely; with
+    num_splits=1 and full pages the underlying op sequence is the seed one."""
+    from repro.core import mla as M
+    from repro.core.snapmla import SnapMLAConfig, decode_step, init_cache, prefill
+
+    cfg_mla = M.MLAConfig(d_model=96, n_heads=4, d_head=24, d_rope=12, d_c=48)
+    params = M.init_mla_params(jax.random.PRNGKey(0), cfg_mla)
+    B, S = 2, 30
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, S, 96))
+    steps = jax.random.normal(jax.random.PRNGKey(2), (5, B, 96))
+
+    outs = {}
+    for paged in (False, True):
+        cfg = SnapMLAConfig(mla=cfg_mla,
+                            cache=CacheConfig(fmt="fp8_e4m3", page_size=32),
+                            paged=paged, num_splits=2)
+        cache = init_cache(cfg, B, 128)
+        _, cache = prefill(params, cfg, h, cache)
+        acc = []
+        for t in range(5):
+            o, cache = decode_step(params, cfg, steps[t], cache)
+            acc.append(o)
+        outs[paged] = np.asarray(jnp.stack(acc))
+        assert int(cache.seq_lens[0]) == S + 5
+    # contiguous path uses the fused-K-append kernel, paged the jnp append —
+    # same quantization arithmetic, so outputs agree to float tolerance
+    np.testing.assert_allclose(outs[True], outs[False], rtol=1e-4, atol=1e-5)
+
+
+def test_model_paged_decode_token_exact_vs_contiguous():
+    """End to end: kv_paged=True generation equals the contiguous cache
+    generation token for token (identity page layout, same arithmetic)."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import generate
+    from repro.models import transformer as T
+
+    cfg = get_smoke_config("mla-7b")
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 16), 0, cfg.vocab_size, jnp.int32)
+    toks_contig, _ = generate(cfg, params, prompts, 5)
+    cfg_paged = dataclasses.replace(cfg, kv_paged=True)
+    toks_paged, _ = generate(cfg_paged, params, prompts, 5)
+    np.testing.assert_array_equal(np.asarray(toks_contig),
+                                  np.asarray(toks_paged))

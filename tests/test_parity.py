@@ -1,0 +1,53 @@
+"""Kernel-vs-oracle parity gates, promoted from benchmarks/kernel_perf.py
+into a fast pytest marker so CI catches combine-kernel regressions without
+running the full benchmark sweep:
+
+    pytest -m parity
+
+These call the *same* gate functions the benchmarks sit behind (the bench
+records numbers only for a kernel that passes them), at reduced size and
+with no timing loops.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.kernel_perf import (parity_gate_paged_splitkv,
+                                    parity_gate_splitkv)
+from repro.kernels.mla_decode import ref as R
+from repro.kernels.mla_decode.kernel import lse_combine_pallas
+
+pytestmark = pytest.mark.parity
+
+
+def test_parity_splitkv_contiguous():
+    """Contiguous split-KV kernel == pure-jnp split+combine oracle."""
+    err = parity_gate_splitkv(B=2, H=8, d_c=64, d_r=16, N=512, bn=64,
+                              splits=(1, 2, 4))
+    assert err < 1e-4, err
+
+
+def test_parity_splitkv_paged():
+    """Paged split-KV kernel == paged oracle over a shuffled page pool."""
+    err = parity_gate_paged_splitkv(B=2, H=8, d_c=64, d_r=16, N=512, page=64,
+                                    splits=(1, 2, 4))
+    assert err < 1e-4, err
+
+
+def test_parity_lse_combine():
+    """The combine kernel itself == the max-shift combine reference — the
+    narrowest gate on the shared merge path both split kernels feed."""
+    key = jax.random.PRNGKey(0)
+    B, S, H, d_c = 3, 4, 8, 32
+    o_p = jax.random.normal(key, (B, S, H, d_c))
+    lse_p = jax.random.normal(jax.random.PRNGKey(1), (B, S, H)) * 3
+    # include a neutral (empty-split) partial in one row
+    lse_p = lse_p.at[0, -1].set(R.NEG_INF)
+    o_p = o_p.at[0, -1].set(0.0)
+    o_k, lse_k = lse_combine_pallas(o_p, lse_p)
+    o_r, lse_r = R.lse_combine_ref(o_p, lse_p)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lse_k), np.asarray(lse_r),
+                               rtol=1e-6, atol=1e-6)
