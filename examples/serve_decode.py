@@ -23,9 +23,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "kernel"],
+                    help="decode-attention backend: 'kernel' runs the Pallas "
+                         "split-KV kernels inside the jitted decode step")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
+    cfg = dataclasses.replace(cfg, decode_backend=args.backend,
+                              use_kernels=args.backend == "kernel")
     key = jax.random.PRNGKey(0)
     params = T.init_model(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,

@@ -5,6 +5,11 @@
 #   * per-step decode loop and the fused scan-based path
 #   * contiguous and paged (page-table) KV caches
 #   * auto and fixed (--kv-splits 4) split-KV parallelism
+#   * ref (einsum-twin), kernel (Pallas split-KV, interpret-mode on the
+#     CPU runner), and shard-map (collective-free host-mesh region) decode
+#     backends — `--backend kernel` runs the actual kernels inside the
+#     jitted model decode
+#   * temperature/top-k sampling through the fused scan
 # The serve driver exits non-zero on non-finite logits (serve._check_finite),
 # so a NaN anywhere in the quantized pipeline fails this script loudly.
 set -euo pipefail
@@ -18,5 +23,11 @@ python -m repro.launch.serve --smoke --gen 4 --fused
 python -m repro.launch.serve --smoke --gen 4 --paged
 python -m repro.launch.serve --smoke --gen 4 --paged --fused --kv-splits 4
 python -m repro.launch.serve --smoke --gen 4 --kv-splits 4
+python -m repro.launch.serve --smoke --gen 4 --backend kernel
+python -m repro.launch.serve --smoke --gen 4 --backend kernel --paged
+python -m repro.launch.serve --smoke --gen 4 --backend kernel --fused
+python -m repro.launch.serve --smoke --gen 4 --backend shard-map
+python -m repro.launch.serve --smoke --gen 4 --fused \
+    --temperature 0.8 --top-k 8
 
 echo "[ci_smoke] OK"

@@ -63,6 +63,15 @@ class ModelConfig:
     # page pool addressed through a per-sequence page table (multi-tenant
     # pool layout) instead of a contiguous per-slot [B, N, ...] cache
     kv_paged: bool = False
+    # run the Pallas decode kernels inside the jitted model decode (interpret
+    # mode on CPU, compiled on TPU) instead of the pure-jnp einsum twins;
+    # consulted by decode_backend == "auto"
+    use_kernels: bool = False
+    # decode-attention backend request, resolved per step by
+    # kernels.mla_decode.backends.resolve_backend: "auto" (shard_map when the
+    # mesh context asks for it, Pallas kernels when use_kernels, else the
+    # pjit ref twin), "ref", "kernel", "shard-map", or an exact registry name
+    decode_backend: str = "auto"
     # capability flags for the shape grid
     subquadratic: bool = False       # can run long_500k decode
     has_decoder: bool = True         # encoder-only archs would be False

@@ -70,17 +70,13 @@ def mla_decode_shard_map(
     dpa = dp_axes
 
     def local_attn(q_c8, q_r, sq, content, rope, scale, seq_lens):
-        if num_splits > 1:
-            # parallel (einsum) split form — while-loop-free inside the
-            # mapped region, same rationale as the pjit serve path
-            o, _lse = mla_ref.snapmla_decode_splitkv_parallel_ref(
-                q_c8, q_r, sq, content, rope, scale, seq_lens,
-                softmax_scale=softmax_scale, num_splits=num_splits,
-                block_n=block_n, fmt=fmt)
-        else:
-            o, _lse = mla_ref.snapmla_decode_parallel_ref(
-                q_c8, q_r, sq, content, rope, scale, seq_lens,
-                softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
+        # parallel (einsum) pipeline — while-loop-free inside the mapped
+        # region, same rationale as the pjit serve path; the split-vs-single
+        # branch lives in the shared helper, not here
+        o, _lse = mla_ref.snapmla_decode_parallel_any(
+            q_c8, q_r, sq, content, rope, scale, seq_lens,
+            softmax_scale=softmax_scale, num_splits=num_splits,
+            block_n=block_n, fmt=fmt)
         return o
 
     f = _shard_map(

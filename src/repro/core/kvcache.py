@@ -46,6 +46,17 @@ def _round_up(n: int, m: int) -> int:
     return (n + m - 1) // m * m
 
 
+def page_aligned_capacity(n_tokens: int, page_size: int) -> int:
+    """Exact cache capacity for ``n_tokens`` tokens: rounded up to the page
+    size (the decode kernels' block granularity) and nothing more.
+
+    The ONE sizing rule shared by both cache initializers and the serving
+    driver — callers must not add their own page of slack on top (the old
+    ``S + gen + page_size`` sizing over-allocated a full page whenever
+    ``S + gen`` was already aligned)."""
+    return _round_up(max(int(n_tokens), 1), page_size)
+
+
 # ---------------------------------------------------------------------------
 # MLA latent cache
 # ---------------------------------------------------------------------------
@@ -69,7 +80,7 @@ def init_mla_cache(cfg: CacheConfig, batch: int, max_len: int, d_c: int, d_r: in
     lets every decode step skip re-padding the whole cache (an O(max_len) HBM
     copy per step in the old path).
     """
-    n = _round_up(max_len, cfg.page_size)
+    n = page_aligned_capacity(max_len, cfg.page_size)
     return MLACache(
         content=jnp.zeros((batch, n, d_c), cfg.storage_dtype()),
         rope=jnp.zeros((batch, n, d_r), jnp.bfloat16),
@@ -261,7 +272,7 @@ def init_paged_mla_cache(cfg: CacheConfig, batch: int, max_len: int,
     entry point mirroring ``init_mla_cache`` — a multi-tenant allocator would
     instead hand out arbitrary pool pages; the decode kernels only ever see
     the page table, so both layouts run the same code path."""
-    n = _round_up(max_len, cfg.page_size)
+    n = page_aligned_capacity(max_len, cfg.page_size)
     pages_per_seq = n // cfg.page_size
     pool = init_paged_mla_pool(cfg, batch * pages_per_seq, pages_per_seq,
                                batch, d_c, d_r)

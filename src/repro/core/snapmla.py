@@ -23,7 +23,7 @@ from repro.core.kvcache import (CacheConfig, MLACache, PagedMLAPool,
                                 init_mla_cache, init_paged_mla_cache,
                                 mla_prefill, paged_mla_append,
                                 paged_mla_prefill)
-from repro.kernels.mla_decode.ops import snapmla_decode, snapmla_decode_paged
+from repro.kernels.mla_decode import backends as mla_backends
 from repro.kernels.mla_decode import ref as mla_ref
 from repro.kernels.quantize.ops import fused_k_append, fused_q_quant
 
@@ -32,7 +32,9 @@ from repro.kernels.quantize.ops import fused_k_append, fused_q_quant
 class SnapMLAConfig:
     mla: mla_lib.MLAConfig
     cache: CacheConfig = CacheConfig()
-    use_kernel: bool = True       # pallas kernels (interpret on CPU) vs jnp refs
+    # decode-attention backend (kernels/mla_decode/backends.py): True = the
+    # Pallas split-KV kernels (interpret on CPU), False = the jnp ref twins
+    use_kernel: bool = True
     interpret: bool = True
     # split-KV (flash-decoding) sequence parallelism for the decode kernel:
     # None or 0 = autotuner profile with the context-length heuristic as
@@ -106,22 +108,16 @@ def decode_step(
     else:
         q_c8, q_r_s, sigma_q = mla_ref.prepare_q(q_lat, q_rope, "none")
 
-    # -- SnapMLA decode kernel ----------------------------------------------
-    if paged:
-        o_lat, _lse = snapmla_decode_paged(
-            q_c8, q_r_s, sigma_q, cache,
-            softmax_scale=cfg.mla.softmax_scale,
-            fmt=cfg.fmt if cfg.cache.quantized else "none",
-            num_splits=cfg.num_splits,
-            use_kernel=cfg.use_kernel, interpret=cfg.interpret)
-    else:
-        o_lat, _lse = snapmla_decode(
-            q_c8, q_r_s, sigma_q, cache,
-            softmax_scale=cfg.mla.softmax_scale,
-            block_n=cfg.cache.page_size,
-            fmt=cfg.fmt if cfg.cache.quantized else "none",
-            num_splits=cfg.num_splits,
-            use_kernel=cfg.use_kernel, interpret=cfg.interpret)
+    # -- SnapMLA decode attention: backend-registry dispatch ----------------
+    backend = mla_backends.resolve_backend(
+        "kernel" if cfg.use_kernel else "ref", paged=paged, batch=B,
+        n_heads=cfg.mla.n_heads)
+    bcfg = mla_backends.BackendConfig(
+        softmax_scale=cfg.mla.softmax_scale, block_n=cfg.cache.page_size,
+        fmt=cfg.fmt if cfg.cache.quantized else "none",
+        num_splits=cfg.num_splits, interpret=cfg.interpret)
+    o_lat = backend.decode(
+        mla_backends.DecodeQuery(q_c8, q_r_s, sigma_q), cache, bcfg)
 
     out = mla_lib.output_proj(params, o_lat.astype(h_t.dtype))
     return out, cache

@@ -7,8 +7,11 @@ split/combine trade-off — persisted to a JSON artifact that the benchmarks
 emit (``benchmarks/kernel_perf.py::emit_split_profile``). Resolution order in
 ``ops.resolve_num_splits``:
 
-  1. exact profile hit for (capacity, block_n, batch)  -> measured best
-  2. no profile entry / no profile file                -> heuristic fallback
+  1. exact profile hit for (capacity, block_n, batch)   -> measured best
+  2. nearest-batch hit: an entry with the same capacity, block_n, and layout
+     at a different batch -> its best (nearest in log-batch; the trade-off
+     scales roughly with batch ratio, so 64 is "closer" to 128 than to 8)
+  3. no usable entry / no profile file                  -> heuristic fallback
 
 The profile file format (version 1); the key grows a "/paged" suffix for
 sweeps measured on the paged kernel (contiguous and paged plans never mix),
@@ -57,6 +60,20 @@ def _key(capacity: int, block_n: int, batch: int, layout: str) -> str:
     return base if layout == "contiguous" else f"{base}/{layout}"
 
 
+def _parse_key(key: str) -> tuple[int, int, int, str] | None:
+    """Inverse of ``_key``: '<cap>/<bn>/<batch>[/<layout>]' -> tuple, or None
+    for malformed keys (hand-edited files must not crash resolution)."""
+    parts = key.split("/")
+    if len(parts) == 3:
+        parts = parts + ["contiguous"]
+    if len(parts) != 4:
+        return None
+    try:
+        return int(parts[0]), int(parts[1]), int(parts[2]), parts[3]
+    except ValueError:
+        return None
+
+
 # A smaller split count must be beaten by at least this margin before a larger
 # one is recorded as "best": ties within measurement noise go to fewer splits,
 # so num_splits=1 (the bit-exact seed path) is only abandoned for a real win
@@ -92,6 +109,34 @@ class SplitProfile:
             return int(e["best"]) if e else None
         except (TypeError, KeyError, ValueError):
             return None          # malformed entry -> heuristic fallback
+
+    def lookup_nearest(self, capacity: int, block_n: int, batch: int | None,
+                       layout: str = "contiguous") -> int | None:
+        """Exact hit, else nearest-neighbor batch interpolation: among the
+        entries sharing (capacity, block_n, layout), the best of the batch
+        nearest in log-space (ties go to the smaller batch — closer to the
+        conservative fewer-splits regime). The split/combine trade-off moves
+        with the batch *ratio*, not the difference, hence log distance. None
+        if no comparable entry exists (-> heuristic fallback)."""
+        exact = self.lookup(capacity, block_n, batch, layout)
+        if exact is not None or batch is None:
+            return exact
+        candidates: list[tuple[float, int, int]] = []
+        for key, entry in self.entries.items():
+            parsed = _parse_key(key)
+            if parsed is None or parsed[:2] != (capacity, block_n) \
+                    or parsed[3] != layout:
+                continue
+            b = parsed[2]
+            try:
+                best = int(entry["best"])
+            except (TypeError, KeyError, ValueError):
+                continue         # malformed neighbor -> skip it
+            hi, lo = max(b, batch, 1), max(min(b, batch), 1)
+            candidates.append((hi / lo, b, best))  # ratio == exp(log dist)
+        if not candidates:
+            return None
+        return min(candidates)[2]
 
     def record(self, capacity: int, block_n: int, batch: int,
                measured_us: dict[int, float],
@@ -147,7 +192,9 @@ def reset(profile: SplitProfile | None = None) -> None:
 
 def tuned_num_splits(capacity: int, block_n: int, batch: int | None,
                      layout: str = "contiguous") -> int | None:
-    return get_profile().lookup(capacity, block_n, batch, layout)
+    """Measured best for the shape: exact (capacity, block_n, batch, layout)
+    hit, else nearest-batch interpolation; None -> heuristic fallback."""
+    return get_profile().lookup_nearest(capacity, block_n, batch, layout)
 
 
 # ---------------------------------------------------------------------------

@@ -56,12 +56,13 @@ def default_num_splits(context_len: int, block_n: int = 128,
 def resolve_num_splits(requested: int | None, capacity: int,
                        block_n: int, batch: int | None = None,
                        layout: str = "contiguous") -> int:
-    """Single resolution rule for every decode path (kernel, pjit ref,
+    """Single resolution rule for every decode backend (kernel, pjit ref,
     shard_map ref, paged pool): None/0 = auto — a measured split-profile hit
     for (capacity, block_n, batch) under the cache ``layout`` if the
-    autotuner cache has one, else the context-length heuristic. Fixed counts
-    are clamped to the block count so a config tuned for long contexts still
-    traces on a short cache."""
+    autotuner cache has one (exact key, else nearest-batch interpolation),
+    else the context-length heuristic. Fixed counts are clamped to the block
+    count so a config tuned for long contexts still traces on a short
+    cache."""
     nblocks = max(1, capacity // block_n)
     if requested:
         splits = requested

@@ -345,6 +345,36 @@ def snapmla_decode_splitkv_parallel_ref(
     return lse_combine_ref(o_p, lse_p)
 
 
+def snapmla_decode_parallel_any(
+    q_c8: jax.Array,
+    q_r: jax.Array,
+    sigma_q: jax.Array,
+    content: jax.Array,
+    rope: jax.Array,
+    sigma_k: jax.Array,
+    seq_lens: jax.Array,
+    *,
+    softmax_scale: float,
+    num_splits: int = 1,
+    block_n: int = 128,
+    fmt: quant.QuantFormat = "fp8_e4m3",
+) -> tuple[jax.Array, jax.Array]:
+    """Parallel (einsum, while-loop-free) pipeline for any split count.
+
+    The single entry point for the pjit-twin decode paths (the ``jnp_ref``
+    backends and the shard_map local region): ``num_splits == 1`` is the plain
+    two-pass flash form, ``> 1`` the split-KV form with the LSE combine —
+    callers no longer duplicate that branch."""
+    if num_splits > 1:
+        return snapmla_decode_splitkv_parallel_ref(
+            q_c8, q_r, sigma_q, content, rope, sigma_k, seq_lens,
+            softmax_scale=softmax_scale, num_splits=num_splits,
+            block_n=block_n, fmt=fmt)
+    return snapmla_decode_parallel_ref(
+        q_c8, q_r, sigma_q, content, rope, sigma_k, seq_lens,
+        softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
+
+
 def prepare_q(q_c: jax.Array, q_r: jax.Array, fmt: quant.QuantFormat = "fp8_e4m3"):
     """Fused-Q-Quant reference: per-(token,head) scale + cast + rope prescale.
 

@@ -22,6 +22,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, get_smoke_config
+from repro.core.kvcache import page_aligned_capacity
 from repro.launch import sharding as SH
 from repro.launch import steps as ST
 from repro.launch.mesh import make_host_mesh
@@ -38,77 +39,126 @@ def _check_finite(ok, where: str) -> None:
         raise SystemExit(f"[serve] FATAL: non-finite logits at {where}")
 
 
+def _decode_capacity(cfg, prompt_len: int, gen_steps: int) -> int:
+    """Exact page-aligned cache capacity for prompt + generation.
+
+    Prefill writes ``prompt_len`` entries and each decode step appends one;
+    the last decode step (gen_steps-1 appends after the prefill token) needs
+    ``prompt_len + gen_steps - 1`` slots, so ``prompt_len + gen_steps``
+    rounded to the page is always enough — the former
+    ``S + gen + page_size`` sizing over-allocated a whole page whenever the
+    sum was already aligned."""
+    return page_aligned_capacity(prompt_len + gen_steps, cfg.page_size)
+
+
 def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
-             aux_embed=None, greedy: bool = True):
-    """prompts [B, S] -> (generated tokens [B, gen_steps], decode tok/s)."""
+             aux_embed=None, temperature: float = 0.0, top_k: int = 0,
+             eos_id: int | None = None, seed: int = 0):
+    """prompts [B, S] -> (generated tokens [B, gen_steps], decode tok/s).
+
+    Per-step decode loop. ``temperature``/``top_k`` switch greedy argmax to
+    sampling (one fold_in per step of a single PRNG key); ``eos_id`` stops
+    the loop early once EVERY sequence has emitted it (finished sequences
+    are padded with ``eos_id``). Note the early-stop check is a per-step
+    host sync — the price of actually ending the Python loop; the fused
+    path handles EOS sync-free inside the scan."""
     mesh = mesh or make_host_mesh(1)
     B, S = prompts.shape
-    max_len = S + gen_steps + cfg.page_size
+    max_len = _decode_capacity(cfg, S, gen_steps)
     prefill_fn = jax.jit(ST.make_prefill_step(cfg))
     decode_fn = jax.jit(ST.make_decode_step(cfg))
+    key = jax.random.PRNGKey(seed)
+
+    def pick(logits, i):
+        # greedy (temperature <= 0) ignores the key inside sample_logits
+        return ST.sample_logits(logits, jax.random.fold_in(key, i),
+                                temperature, top_k)
 
     state = T.init_decode_state(cfg, B, max_len)
     logits, state = prefill_fn(params, prompts, state, *(
         (aux_embed,) if aux_embed is not None else ()))
     _check_finite(logits, "prefill")
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    tok = pick(logits, 0)
+    done = (tok == eos_id) if eos_id is not None \
+        else jnp.zeros((B,), bool)
 
     outs = [tok]
+    if gen_steps <= 1:
+        return jnp.stack(outs, axis=1)[:, :gen_steps], 0.0
     # warm up decode compile before timing
     pos = jnp.full((B,), S, jnp.int32)
     logits, state = decode_fn(params, tok, state, pos)
-    # every-step NaN gate, accumulated on device (no per-step host sync)
+    # every-step NaN gate, accumulated on device (no per-step host sync
+    # unless EOS early stop is requested)
     ok = jnp.all(jnp.isfinite(logits))
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    tok, done = ST.apply_eos(pick(logits, 1), done, eos_id)
     outs.append(tok)
     jax.block_until_ready(tok)
 
+    steps_run = 0
     t0 = time.time()
     for i in range(1, gen_steps - 1):
+        if eos_id is not None and bool(jnp.all(done)):
+            break               # EOS early stop: every sequence finished
         pos = jnp.full((B,), S + i, jnp.int32)
         logits, state = decode_fn(params, tok, state, pos)
         ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(logits)))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok, done = ST.apply_eos(pick(logits, i + 1), done, eos_id)
         outs.append(tok)
+        steps_run += 1
     jax.block_until_ready(tok)
     dt = time.time() - t0
     _check_finite(ok, "decode (any step)")
-    toks_per_s = B * max(gen_steps - 2, 1) / max(dt, 1e-9)
+    while len(outs) < gen_steps:    # EOS-stopped early: pad to [B, gen_steps]
+        outs.append(jnp.full((B,), eos_id, jnp.int32))
+    # 0.0, not an absurd number, when EOS ended generation before the loop
+    toks_per_s = B * steps_run / max(dt, 1e-9) if steps_run else 0.0
     return jnp.stack(outs, axis=1), toks_per_s
 
 
 def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
-                   aux_embed=None):
+                   aux_embed=None, temperature: float = 0.0, top_k: int = 0,
+                   eos_id: int | None = None, seed: int = 0):
     """Scan-based generation: prefill + ONE fused decode dispatch.
 
-    Token-exact with ``generate`` (same greedy decode_step inside a lax.scan)
-    but the whole multi-token decode is a single compiled program — no
-    per-step dispatch/host round-trip — with the decode state (quantized KV
-    caches) donated so XLA updates the cache buffers in place.
+    Token-exact with ``generate`` under greedy decoding (same decode_step
+    inside a lax.scan) but the whole multi-token decode is a single compiled
+    program — no per-step dispatch/host round-trip — with the decode state
+    (quantized KV caches) donated so XLA updates the cache buffers in place.
+    ``temperature``/``top_k`` sample inside the scan (PRNG key threaded
+    through the carry); ``eos_id`` pins finished sequences to ``eos_id``.
 
     Returns (generated tokens [B, gen_steps], decode tok/s).
     """
     mesh = mesh or make_host_mesh(1)
     B, S = prompts.shape
-    max_len = S + gen_steps + cfg.page_size
+    max_len = _decode_capacity(cfg, S, gen_steps)
+    sampled = temperature > 0.0
+    key = jax.random.PRNGKey(seed)
     prefill_fn = jax.jit(ST.make_prefill_step(cfg))
-    fused_fn = jax.jit(ST.make_fused_decode(cfg, max(gen_steps - 1, 0)),
-                       donate_argnums=(2,))
+    fused_fn = jax.jit(
+        ST.make_fused_decode(cfg, max(gen_steps - 1, 0),
+                             temperature=temperature, top_k=top_k,
+                             eos_id=eos_id),
+        donate_argnums=(2,))
 
     state = T.init_decode_state(cfg, B, max_len)
     logits, state = prefill_fn(params, prompts, state, *(
         (aux_embed,) if aux_embed is not None else ()))
     _check_finite(logits, "prefill")
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    tok = ST.sample_logits(logits, jax.random.fold_in(key, 0),
+                           temperature, top_k)
     if gen_steps <= 1:
         return tok[:, None][:, :gen_steps], 0.0
 
     start_pos = jnp.full((B,), S, jnp.int32)
+    args = (params, tok, state, start_pos) + (
+        (jax.random.fold_in(key, 1),) if sampled else ())
     # AOT-compile before timing (donation happens at execution, not lowering)
-    compiled = fused_fn.lower(params, tok, state, start_pos).compile()
+    compiled = fused_fn.lower(*args).compile()
     jax.block_until_ready((tok, state))
     t0 = time.time()
-    toks, _state, ok = compiled(params, tok, state, start_pos)
+    toks, _state, ok = compiled(*args)
     jax.block_until_ready(toks)
     dt = time.time() - t0
     _check_finite(ok, "fused decode (any step)")
@@ -128,6 +178,27 @@ def main():
     ap.add_argument("--fused", action="store_true",
                     help="scan-based generate_fused (one dispatch) instead of "
                          "the per-step decode loop")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "kernel", "shard-map"],
+                    help="decode-attention backend "
+                         "(kernels/mla_decode/backends.py): 'ref' = pure-jnp "
+                         "einsum twins (pjit-friendly), 'kernel' = the Pallas "
+                         "split-KV kernels inside the jitted decode step "
+                         "(interpret on CPU, compiled on TPU; paged caches "
+                         "use the scalar-prefetched page-table kernel), "
+                         "'shard-map' = collective-free shard_map region "
+                         "over the host (data, model) mesh (contiguous "
+                         "caches; batch must divide the data axis), 'auto' = "
+                         "ref unless a mesh/kernels flag says otherwise")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (> 0 switches greedy argmax "
+                         "to temperature/top-k sampling, PRNG key threaded "
+                         "through the fused scan carry)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampling (0 = full softmax)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="EOS token id: generation early-stops (step loop) / "
+                         "pins finished sequences (fused scan) once emitted")
     ap.add_argument("--kv-splits", type=int, default=0,
                     help="split-KV (flash-decoding) splits for decode "
                          "attention, contiguous AND paged caches "
@@ -143,7 +214,14 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, kv_fmt=args.fmt, kv_splits=args.kv_splits,
-                              kv_paged=args.paged)
+                              kv_paged=args.paged,
+                              decode_backend=args.backend,
+                              use_kernels=args.backend == "kernel")
+    if args.backend == "shard-map":
+        # the shard_map backend needs a mesh context (dryrun sets SHARD_CTX
+        # for the production mesh; here: the host mesh, data = all devices)
+        T.SHARD_CTX = {"mesh": make_host_mesh(1), "dp": "data",
+                       "use_shard_map": True}
     key = jax.random.PRNGKey(args.seed)
     params = T.init_model(key, cfg)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
@@ -152,15 +230,20 @@ def main():
            if cfg.n_aux_tokens else None)
 
     gen_fn = generate_fused if args.fused else generate
-    toks, tps = gen_fn(cfg, params, prompts, args.gen, aux_embed=aux)
+    sample_kw = dict(temperature=args.temperature, top_k=args.top_k,
+                     eos_id=args.eos_id, seed=args.seed)
+    toks, tps = gen_fn(cfg, params, prompts, args.gen, aux_embed=aux,
+                       **sample_kw)
     mode = "fused-scan" if args.fused else "step-loop"
     cache_kind = "paged" if args.paged else "contiguous"
-    print(f"[serve] {cfg.name} fmt={args.fmt} ({mode}, {cache_kind} cache): "
-          f"generated {toks.shape} at {tps:.1f} tok/s (decode)")
+    print(f"[serve] {cfg.name} fmt={args.fmt} backend={args.backend} "
+          f"({mode}, {cache_kind} cache): generated {toks.shape} at "
+          f"{tps:.1f} tok/s (decode)")
 
     if args.fmt != "none":
         cfg_b = dataclasses.replace(cfg, kv_fmt="none")
-        toks_b, _ = gen_fn(cfg_b, params, prompts, args.gen, aux_embed=aux)
+        toks_b, _ = gen_fn(cfg_b, params, prompts, args.gen, aux_embed=aux,
+                           **sample_kw)
         agree = float(jnp.mean((toks == toks_b).astype(jnp.float32)))
         print(f"[serve] token agreement vs BF16 pipeline: {agree * 100:.1f}%")
 

@@ -71,32 +71,83 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
-def make_fused_decode(cfg: ModelConfig, n_steps: int):
-    """Multi-token greedy decode as ONE dispatch: a lax.scan over decode steps.
+def sample_logits(logits: jax.Array, key, temperature: float = 0.0,
+                  top_k: int = 0) -> jax.Array:
+    """Next-token selection from [B, V] logits (shared by both generation
+    paths): ``temperature <= 0`` is greedy argmax (key unused), otherwise
+    temperature scaling with optional top-k truncation + categorical draw."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k > 0 and top_k < scaled.shape[-1]:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def apply_eos(tok: jax.Array, done: jax.Array, eos_id: int | None):
+    """EOS bookkeeping shared by the step loop and the fused scan: pin
+    sequences that already finished to ``eos_id``, then fold this step's
+    emissions into the done mask. No-op when ``eos_id`` is None."""
+    if eos_id is None:
+        return tok, done
+    tok = jnp.where(done, eos_id, tok)
+    return tok, jnp.logical_or(done, tok == eos_id)
+
+
+def make_fused_decode(cfg: ModelConfig, n_steps: int, *,
+                      temperature: float = 0.0, top_k: int = 0,
+                      eos_id: int | None = None):
+    """Multi-token decode as ONE dispatch: a lax.scan over decode steps.
 
     Replaces the per-step Python loop (one jit dispatch + host round-trip per
-    token) with a single compiled scan whose carry is (token, decode state) —
-    greedy sampling happens inside the scan. Jit with ``donate_argnums=(2,)``
-    so the cache buffers are updated in place across the whole generation.
+    token) with a single compiled scan whose carry is (token, decode state,
+    ok, PRNG key, done mask) — sampling happens inside the scan. Jit with
+    ``donate_argnums=(2,)`` so the cache buffers are updated in place across
+    the whole generation.
 
-    Returns fused(params, token [B], state, start_pos [B])
+    ``temperature > 0`` enables temperature/top-k sampling: the returned
+    function then takes a PRNG key as its 5th argument, split once per step
+    inside the carry (one key in, n_steps independent draws out — no host
+    round-trips). ``temperature <= 0`` keeps the greedy 4-argument signature.
+
+    ``eos_id`` enables EOS early-stop semantics inside the scan: once a
+    sequence emits ``eos_id`` every later slot is pinned to ``eos_id`` (the
+    scan itself runs n_steps — a compiled scan has a static trip count — but
+    finished sequences stop influencing the output).
+
+    Returns fused(params, token [B], state, start_pos [B][, key])
         -> (tokens [B, n_steps] int32, final state, logits_finite [] bool).
     ``logits_finite`` is the AND of an all-finite check over EVERY step's
     logits, folded into the scan carry — one boolean rides along so callers
     (serve, CI smoke) can gate on a NaN at any step, not just the last,
     without a second dispatch or materializing [n_steps, B, V] logits.
     """
-    def fused_decode(params, token, state, start_pos):
+    sampled = temperature > 0.0
+
+    def fused_decode(params, token, state, start_pos, key=None):
+        if sampled and key is None:
+            raise ValueError("temperature > 0 needs a PRNG key argument")
+
         def body(carry, i):
-            tok, st, ok = carry
+            tok, st, ok, k, done = carry
             logits, st = T.decode_step(params, cfg, tok, st, start_pos + i)
             ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(logits)))
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            return (tok, st, ok), tok
+            if sampled:
+                k, sub = jax.random.split(k)
+                nxt = sample_logits(logits, sub, temperature, top_k)
+            else:
+                nxt = sample_logits(logits, None)
+            nxt, done = apply_eos(nxt, done, eos_id)
+            return (nxt, st, ok, k, done), nxt
 
-        (_, state_out, ok), toks = jax.lax.scan(
-            body, (token, state, jnp.array(True)),
-            jnp.arange(n_steps, dtype=jnp.int32))
+        # a sequence whose incoming token is already EOS is born finished
+        done0 = (token == eos_id) if eos_id is not None \
+            else jnp.zeros(token.shape, bool)
+        carry0 = (token, state, jnp.array(True), key if sampled else None,
+                  done0)
+        (_, state_out, ok, _, _), toks = jax.lax.scan(
+            body, carry0, jnp.arange(n_steps, dtype=jnp.int32))
         return jnp.moveaxis(toks, 0, 1), state_out, ok
 
     return fused_decode

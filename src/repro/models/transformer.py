@@ -8,9 +8,12 @@ depth — essential for 100-layer dry-run compiles), plus an unscanned
 remainder. Decode threads per-layer states (quantized KV caches / recurrent
 states) through the same scan.
 
-The decode path runs the SnapMLA quantized pipeline *semantics* in pure jnp
-(the pipeline refs proven bit-identical to the Pallas kernels in tests); set
-``use_kernels=True`` to run the actual Pallas kernels (interpret mode on CPU).
+Decode attention dispatches through the backend registry
+(``kernels/mla_decode/backends.py``): by default the pure-jnp einsum twins
+(pjit/cost-analysis friendly), with ``cfg.use_kernels=True`` (or
+``cfg.decode_backend="kernel"``, ``serve --backend kernel``) the actual
+Pallas split-KV kernels run inside the jitted decode step — interpret mode
+on CPU, compiled on TPU.
 """
 from __future__ import annotations
 
@@ -26,10 +29,10 @@ from repro.core import mla as mla_lib
 from repro.core.kvcache import (CacheConfig, GQACache, MLACache, gqa_append,
                                 gqa_prefill, init_gqa_cache, init_mla_cache,
                                 init_paged_mla_cache, mla_append, mla_prefill,
-                                paged_gather, paged_mla_append,
-                                paged_mla_prefill)
+                                paged_mla_append, paged_mla_prefill)
 from repro.core.attention import gqa_decode_dequant_ref, mla_decode_dequant_ref
 from repro.kernels.gqa_decode import ref as gqa_ref
+from repro.kernels.mla_decode import backends as BK
 from repro.kernels.mla_decode import ref as mla_kref
 from repro.models import layers as L
 from repro.models import moe as moe_lib
@@ -351,46 +354,37 @@ def _cross_decode(p, cfg: ModelConfig, x_t, cache: GQACache):
     return jnp.einsum("bhk,hkd->bd", o.astype(x_t.dtype), p.wo)
 
 
-def _mla_splits(cfg: ModelConfig, capacity: int, batch: int | None = None,
-                layout: str = "contiguous") -> int:
-    """Resolve ModelConfig.kv_splits (0 = auto) against the cache capacity."""
-    from repro.kernels.mla_decode.ops import resolve_num_splits
-    return resolve_num_splits(cfg.kv_splits, capacity, cfg.page_size, batch,
-                              layout)
-
-
 def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos):
-    """SnapMLA decode: Fused-Q-Quant + Fused-K-Append + scale-fused kernel.
+    """SnapMLA decode: Fused-Q-Quant + Fused-K-Append + backend attention.
 
-    With ``cfg.kv_paged`` the cache is a PagedMLAPool: the append goes
-    through the page table and the attention runs the split einsum form over
-    the page-table gather — the pjit twin of the paged split-KV kernel / the
-    paged oracle. Note the gather materializes the full page-table span per
-    step, so this pure-jnp model path demonstrates paged *semantics*; the
-    seq_lens-proportional HBM traffic lives in the Pallas kernel path
-    (ops.snapmla_decode_paged, reachable via core.snapmla.decode_step) —
-    wiring the kernel into the model decode behind a use_kernels flag is a
-    ROADMAP item. The shard_map collective-free region supports contiguous
-    caches only (mla_decode_shard_map consumes an MLACache); a paged config
-    under use_shard_map falls through to the pjit einsum path.
+    The attention itself is dispatched through the decode-attention backend
+    registry (``kernels.mla_decode.backends.resolve_backend``) — the single
+    decision point shared with ``core.snapmla.decode_step`` and
+    ``serve --backend``. ``cfg.decode_backend`` / ``cfg.use_kernels`` select
+    between the pjit einsum twins (``jnp_ref`` / ``jnp_paged_ref``), the
+    Pallas split-KV kernels (``pallas_splitkv`` / ``pallas_paged_splitkv``,
+    interpret mode on CPU, compiled on TPU — the paged kernel reads pages
+    through scalar-prefetched index maps, so HBM traffic follows seq_lens,
+    not pool capacity), and the collective-free ``shard_map`` region (set by
+    launch/dryrun.py via SHARD_CTX; contiguous caches, shapes permitting).
     """
     mcfg = _mla_cfg(cfg)
     ccfg = _cache_cfg(cfg, "mla")
     paged = cfg.kv_paged
-    use_sm = (not paged and SHARD_CTX is not None
-              and SHARD_CTX.get("use_shard_map"))
+    ctx = SHARD_CTX
+    backend = BK.resolve_backend(
+        cfg.decode_backend, paged=paged, batch=x_t.shape[0],
+        n_heads=cfg.n_heads,
+        mesh=ctx["mesh"] if ctx else None, dp=ctx["dp"] if ctx else None,
+        use_kernels=cfg.use_kernels,
+        prefer_shard_map=bool(ctx and ctx.get("use_shard_map")))
     c_kv, k_r = mla_lib.project_kv(p, mcfg, x_t[:, None, :], pos[:, None])
     if paged:
         cache = paged_mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0])
-    elif use_sm:
-        from repro.core.distributed_decode import (mla_append_shard_map,
-                                                   shard_map_applicable)
-        if shard_map_applicable(SHARD_CTX["mesh"], SHARD_CTX["dp"],
-                                x_t.shape[0], cfg.n_heads):
-            cache = mla_append_shard_map(SHARD_CTX["mesh"], SHARD_CTX["dp"],
-                                         cache, ccfg, c_kv[:, 0], k_r[:, 0])
-        else:
-            cache = mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0])
+    elif backend.name == "shard_map":
+        from repro.core.distributed_decode import mla_append_shard_map
+        cache = mla_append_shard_map(ctx["mesh"], ctx["dp"], cache, ccfg,
+                                     c_kv[:, 0], k_r[:, 0])
     else:
         cache = mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0])
     q_c, q_r = mla_lib.project_q(p, mcfg, x_t[:, None, :], pos[:, None])
@@ -398,36 +392,12 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos):
     fmt = ccfg.fmt if ccfg.quantized else "none"
     q_c8, q_r_s, sigma_q = mla_kref.prepare_q(q_lat, q_r[:, 0], fmt)
     q_c8 = _wsc(q_c8, "dp", "model", None)
-    splits = _mla_splits(cfg, cache.capacity, q_c8.shape[0],
-                         "paged" if paged else "contiguous")
-    if use_sm:
-        # collective-free attention region (EXPERIMENTS §Perf, core/
-        # distributed_decode.py) — explicit shard_map over dp x model
-        from repro.core.distributed_decode import (mla_decode_shard_map,
-                                                   shard_map_applicable)
-        if shard_map_applicable(SHARD_CTX["mesh"], SHARD_CTX["dp"],
-                                q_c8.shape[0], q_c8.shape[1]):
-            o_lat = mla_decode_shard_map(
-                SHARD_CTX["mesh"], SHARD_CTX["dp"], q_c8, q_r_s, sigma_q,
-                cache, softmax_scale=mcfg.softmax_scale,
-                block_n=ccfg.page_size, fmt=fmt, num_splits=splits)
-            return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
-    if paged:
-        content, rope, scale = paged_gather(cache)
-    else:
-        content, rope, scale = cache.content, cache.rope, cache.scale
-    if splits > 1:
-        # parallel (einsum) split form: while-loop-free, so the pjit serve
-        # path stays XLA-parallel and dryrun cost_analysis stays exact
-        o_lat, _ = mla_kref.snapmla_decode_splitkv_parallel_ref(
-            q_c8, q_r_s, sigma_q, content, rope.astype(jnp.float32), scale,
-            cache.seq_lens, softmax_scale=mcfg.softmax_scale,
-            num_splits=splits, block_n=ccfg.page_size, fmt=fmt)
-    else:
-        o_lat, _ = mla_kref.snapmla_decode_parallel_ref(
-            q_c8, q_r_s, sigma_q, content, rope.astype(jnp.float32), scale,
-            cache.seq_lens, softmax_scale=mcfg.softmax_scale,
-            block_n=ccfg.page_size, fmt=fmt)
+    bcfg = BK.BackendConfig(softmax_scale=mcfg.softmax_scale,
+                            block_n=ccfg.page_size, fmt=fmt,
+                            num_splits=cfg.kv_splits)
+    o_lat = backend.decode(
+        BK.DecodeQuery(q_c8, q_r_s, sigma_q), cache, bcfg,
+        {"mesh": ctx["mesh"], "dp": ctx["dp"]} if ctx else None)
     o_lat = _wsc(o_lat, "dp", "model", None)
     return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
 

@@ -58,11 +58,59 @@ def test_resolve_profile_hit_beats_heuristic():
     profile.record(32768, 128, 4, {1: 900.0, 2: 500.0, 4: 400.0, 8: 450.0})
     autotune.reset(profile)
     assert resolve_num_splits(None, 32768, 128, batch=4) == 4
-    # different batch -> no entry -> heuristic
-    assert resolve_num_splits(None, 32768, 128, batch=2) == \
-        default_num_splits(32768, 128)
+    # different batch -> nearest-neighbor interpolation from the batch=4 entry
+    assert resolve_num_splits(None, 32768, 128, batch=2) == 4
+    # different capacity -> no comparable entry -> heuristic
+    assert resolve_num_splits(None, 16384, 128, batch=4) == \
+        default_num_splits(16384, 128)
     # explicit request still wins over the profile
     assert resolve_num_splits(2, 32768, 128, batch=4) == 2
+
+
+def test_lookup_nearest_batch_interpolation():
+    """Exact miss interpolates from the nearest measured batch (log-space
+    distance, ties to the smaller batch); capacity/block_n/layout never
+    cross-pollinate."""
+    profile = autotune.SplitProfile()
+    profile.record(32768, 128, 2, {1: 900.0, 2: 500.0})
+    profile.record(32768, 128, 64, {1: 900.0, 8: 400.0})
+    autotune.reset(profile)
+    # batch 4 is nearer (in log space) to 2 than to 64
+    assert profile.lookup_nearest(32768, 128, 4) == 2
+    # batch 32 is nearer to 64
+    assert profile.lookup_nearest(32768, 128, 32) == 8
+    # ratios decide: 16 is 8x away from 2 but only 4x from 64 -> nearer 64
+    assert profile.lookup_nearest(32768, 128, 16) == 8
+    # a true log-space tie goes to the smaller batch
+    tie = autotune.SplitProfile()
+    tie.record(4096, 128, 2, {1: 100.0, 2: 50.0})
+    tie.record(4096, 128, 8, {1: 100.0, 4: 50.0})
+    assert tie.lookup_nearest(4096, 128, 4) == 2
+    # exact hit still wins
+    assert profile.lookup_nearest(32768, 128, 64) == 8
+    # exact-match lookup is untouched by interpolation
+    assert profile.lookup(32768, 128, 4) is None
+    # resolve_num_splits consumes the interpolated best
+    assert resolve_num_splits(None, 32768, 128, batch=4) == 2
+    # batch None (shard_map ref paths) never interpolates
+    assert profile.lookup_nearest(32768, 128, None) is None
+    # other block_n / capacity / layout -> no neighbors -> None
+    assert profile.lookup_nearest(32768, 64, 4) is None
+    assert profile.lookup_nearest(16384, 128, 4) is None
+    assert profile.lookup_nearest(32768, 128, 4, layout="paged") is None
+
+
+def test_lookup_nearest_skips_malformed_neighbors():
+    """Malformed entries (garbage best, unparseable keys) are skipped, not
+    fatal, and a well-formed neighbor still wins."""
+    profile = autotune.SplitProfile({
+        "32768/128/8": {"best": "garbage"},
+        "not-a-key": {"best": 4},
+        "32768/128/oops": {"best": 4},
+        "32768/128/2": {"best": 2, "measured_us": {}},
+    })
+    autotune.reset(profile)
+    assert profile.lookup_nearest(32768, 128, 4) == 2
 
 
 def test_profile_layouts_are_separate():

@@ -1,0 +1,311 @@
+"""Decode-attention backend registry: resolution rules and supports
+predicates, numerical agreement between backends on the same cache, and
+model-level token-exactness of the kernel backends vs the einsum-twin path
+across contiguous/paged × fused/step-loop generation. Plus the generation
+satellites that ride the same serve path: temperature/top-k sampling in the
+fused scan, EOS early-stop, and the exact page-aligned cache sizing."""
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.kvcache import (CacheConfig, init_mla_cache,
+                                init_paged_mla_cache, mla_prefill,
+                                page_aligned_capacity, paged_mla_prefill)
+from repro.kernels.mla_decode import backends as BK
+from repro.kernels.mla_decode import ref as R
+from repro.launch import steps as ST
+from repro.launch.serve import _decode_capacity, generate, generate_fused
+from repro.models import transformer as T
+
+BACKENDS = ("jnp_ref", "jnp_paged_ref", "pallas_splitkv",
+            "pallas_paged_splitkv", "shard_map")
+
+
+# ---------------------------------------------------------------------------
+# registry + resolution
+# ---------------------------------------------------------------------------
+
+def test_registry_contains_all_backends():
+    assert set(BACKENDS) <= set(BK.backend_names())
+    for name in BACKENDS:
+        b = BK.get_backend(name)
+        assert b.name == name and callable(b.decode) and callable(b.supports)
+
+
+def test_get_backend_unknown_raises():
+    with pytest.raises(ValueError, match="unknown decode backend"):
+        BK.get_backend("cuda_flash")
+
+
+def test_supports_layout_mismatch():
+    ok, why = BK.get_backend("jnp_ref").supports(None, None, 2, paged=True)
+    assert not ok and "contiguous" in why
+    ok, _ = BK.get_backend("jnp_paged_ref").supports(None, None, 2, paged=True)
+    assert ok
+    ok, why = BK.get_backend("pallas_paged_splitkv").supports(
+        None, None, 2, paged=False)
+    assert not ok and "paged" in why
+
+
+def test_supports_kernel_rejects_multi_device_mesh():
+    mesh8 = types.SimpleNamespace(size=8)
+    ok, why = BK.get_backend("pallas_splitkv").supports(None, mesh8, 2)
+    assert not ok and "pjit" in why
+    ok, _ = BK.get_backend("pallas_splitkv").supports(
+        None, types.SimpleNamespace(size=1), 2)
+    assert ok
+
+
+def test_supports_shard_map_requires_mesh_and_divisibility():
+    sm = BK.get_backend("shard_map")
+    assert not sm.supports(None, None, 2, n_heads=4)[0]
+    mesh = types.SimpleNamespace(size=2, shape={"model": 2})
+    assert sm.supports(None, mesh, 2, n_heads=4)[0]
+    ok, why = sm.supports(None, mesh, 2, n_heads=3)   # 3 % 2 != 0
+    assert not ok and "divide" in why
+    assert not sm.supports(None, mesh, 2, paged=True, n_heads=4)[0]
+
+
+def test_resolve_auto_defaults_to_ref_twin():
+    assert BK.resolve_backend("auto", paged=False, batch=2).name == "jnp_ref"
+    assert BK.resolve_backend("auto", paged=True, batch=2).name \
+        == "jnp_paged_ref"
+
+
+def test_resolve_auto_use_kernels_selects_pallas():
+    assert BK.resolve_backend("auto", paged=False, batch=2,
+                              use_kernels=True).name == "pallas_splitkv"
+    assert BK.resolve_backend("auto", paged=True, batch=2,
+                              use_kernels=True).name == "pallas_paged_splitkv"
+    # a multi-device pjit mesh degrades auto back to the ref twin (no raise)
+    mesh8 = types.SimpleNamespace(size=8, shape={"model": 8})
+    assert BK.resolve_backend("auto", paged=False, batch=2, n_heads=3,
+                              mesh=mesh8, use_kernels=True).name == "jnp_ref"
+
+
+def test_resolve_auto_prefers_shard_map_when_applicable():
+    mesh = types.SimpleNamespace(size=2, shape={"model": 2})
+    picked = BK.resolve_backend("auto", paged=False, batch=2, n_heads=4,
+                                mesh=mesh, prefer_shard_map=True)
+    assert picked.name == "shard_map"
+    # not applicable (indivisible heads) -> quiet fallback, like the old
+    # use_shard_map branch in transformer._mla_decode
+    picked = BK.resolve_backend("auto", paged=False, batch=2, n_heads=3,
+                                mesh=mesh, prefer_shard_map=True)
+    assert picked.name == "jnp_ref"
+    # paged caches never shard_map
+    picked = BK.resolve_backend("auto", paged=True, batch=2, n_heads=4,
+                                mesh=mesh, prefer_shard_map=True)
+    assert picked.name == "jnp_paged_ref"
+
+
+def test_resolve_aliases_follow_cache_layout():
+    assert BK.resolve_backend("ref", paged=True, batch=2).name \
+        == "jnp_paged_ref"
+    assert BK.resolve_backend("kernel", paged=True, batch=2).name \
+        == "pallas_paged_splitkv"
+    assert BK.resolve_backend("kernel", paged=False, batch=2).name \
+        == "pallas_splitkv"
+    # exact registry names resolve too
+    assert BK.resolve_backend("pallas_splitkv", paged=False, batch=2).name \
+        == "pallas_splitkv"
+
+
+def test_resolve_explicit_unsupported_raises():
+    with pytest.raises(ValueError, match="shard_map"):
+        BK.resolve_backend("shard-map", paged=False, batch=2, n_heads=4)
+    mesh8 = types.SimpleNamespace(size=8)
+    with pytest.raises(ValueError, match="pjit"):
+        BK.resolve_backend("kernel", paged=False, batch=2, mesh=mesh8)
+    with pytest.raises(ValueError, match="unknown decode backend"):
+        BK.resolve_backend("triton", paged=False, batch=2)
+
+
+# ---------------------------------------------------------------------------
+# backend numerical agreement (direct uniform-signature calls)
+# ---------------------------------------------------------------------------
+
+def _setup(paged: bool, B=2, S=100, N=128, d_c=32, d_r=16, H=4, page=32,
+           fmt="fp8_e4m3"):
+    cfg = CacheConfig(fmt=fmt, page_size=page)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    init = init_paged_mla_cache if paged else init_mla_cache
+    fill = paged_mla_prefill if paged else mla_prefill
+    cache = fill(init(cfg, B, N, d_c, d_r), cfg,
+                 jax.random.normal(ks[0], (B, S, d_c)),
+                 jax.random.normal(ks[1], (B, S, d_r)))
+    q = BK.DecodeQuery(*R.prepare_q(jax.random.normal(ks[2], (B, H, d_c)),
+                                    jax.random.normal(ks[3], (B, H, d_r)),
+                                    fmt))
+    bcfg = BK.BackendConfig(softmax_scale=0.1, block_n=page, fmt=fmt,
+                            num_splits=2)
+    return q, cache, bcfg
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_kernel_backend_matches_ref_backend(paged):
+    """The uniform decode signature: ref and Pallas backends agree on the
+    same cache to kernel tolerance, for both layouts and split counts."""
+    q, cache, bcfg = _setup(paged)
+    ref = BK.get_backend("jnp_paged_ref" if paged else "jnp_ref")
+    ker = BK.get_backend("pallas_paged_splitkv" if paged
+                         else "pallas_splitkv")
+    for splits in (1, 2, 4):
+        c = dataclasses.replace(bcfg, num_splits=splits)
+        o_r = ref.decode(q, cache, c, None)
+        o_k = ker.decode(q, cache, c, None)
+        assert not np.isnan(np.asarray(o_k)).any()
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_backend_decode_is_jittable():
+    """backend.decode traces under jit — the property the model decode step
+    relies on (the whole point of the registry)."""
+    q, cache, bcfg = _setup(paged=False)
+    ker = BK.get_backend("pallas_splitkv")
+    o_jit = jax.jit(lambda q, c: ker.decode(q, c, bcfg, None))(q, cache)
+    o_eager = ker.decode(q, cache, bcfg, None)
+    np.testing.assert_allclose(np.asarray(o_jit), np.asarray(o_eager),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model-level token-exactness: use_kernels vs the einsum twins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [False, True], ids=["step-loop", "fused"])
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["contiguous", "paged"])
+def test_model_use_kernels_token_exact(paged, fused):
+    """Acceptance matrix: generation with the Pallas kernels inside the
+    jitted model decode (use_kernels=True under backend 'auto') is
+    token-exact with the einsum-twin path, contiguous/paged × fused/step."""
+    cfg = dataclasses.replace(get_smoke_config("mla-7b"), kv_paged=paged)
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 16), 0, cfg.vocab_size, jnp.int32)
+    gen_fn = generate_fused if fused else generate
+    toks_ref, _ = gen_fn(cfg, params, prompts, 5)
+    cfg_k = dataclasses.replace(cfg, use_kernels=True)
+    toks_ker, _ = gen_fn(cfg_k, params, prompts, 5)
+    np.testing.assert_array_equal(np.asarray(toks_ref), np.asarray(toks_ker))
+
+
+def test_model_explicit_kernel_backend_matches_use_kernels():
+    """decode_backend='kernel' (the serve --backend kernel spelling) runs the
+    same path as use_kernels=True under 'auto'."""
+    cfg = get_smoke_config("mla-7b")
+    key = jax.random.PRNGKey(1)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size, jnp.int32)
+    a, _ = generate(dataclasses.replace(cfg, use_kernels=True), params,
+                    prompts, 4)
+    b, _ = generate(dataclasses.replace(cfg, decode_backend="kernel",
+                                        use_kernels=True), params, prompts, 4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# sampling + EOS satellites (generate_fused beyond greedy)
+# ---------------------------------------------------------------------------
+
+def test_sample_logits_greedy_is_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (3, 17))
+    got = ST.sample_logits(logits, None)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    assert got.dtype == jnp.int32
+
+
+def test_sample_logits_top_k_stays_in_support():
+    """Every draw lands inside the top-k set, and a tiny temperature
+    concentrates on the argmax."""
+    logits = jnp.array([[0.0, 5.0, 4.0, -1.0, 3.0, 2.0, 1.0, -2.0]])
+    topk = {1, 2}                                     # top-2 indices
+    for i in range(64):
+        tok = int(ST.sample_logits(logits, jax.random.PRNGKey(i),
+                                   temperature=1.0, top_k=2)[0])
+        assert tok in topk
+    cold = int(ST.sample_logits(logits, jax.random.PRNGKey(0),
+                                temperature=1e-4, top_k=0)[0])
+    assert cold == 1
+
+
+def test_fused_sampling_deterministic_per_seed():
+    """temperature>0 threads ONE key through the scan carry: same seed ->
+    identical tokens, and every token is a valid vocab id."""
+    cfg = get_smoke_config("mla-7b")
+    key = jax.random.PRNGKey(2)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size, jnp.int32)
+    kw = dict(temperature=0.8, top_k=8, seed=7)
+    a, _ = generate_fused(cfg, params, prompts, 6, **kw)
+    b, _ = generate_fused(cfg, params, prompts, 6, **kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (2, 6)
+    assert (np.asarray(a) >= 0).all() and (np.asarray(a) < cfg.vocab_size).all()
+
+
+@pytest.mark.parametrize("fused", [False, True], ids=["step-loop", "fused"])
+def test_eos_pins_every_token_after_first_hit(fused):
+    """EOS semantics on both generation paths: pick the token the greedy run
+    emits mid-generation as eos_id and re-run — every slot after a row's
+    first EOS must be EOS, shape stays [B, gen_steps]."""
+    cfg = get_smoke_config("mla-7b")
+    key = jax.random.PRNGKey(3)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size, jnp.int32)
+    gen_fn = generate_fused if fused else generate
+    free, _ = gen_fn(cfg, params, prompts, 6)
+    eos = int(free[0, 2])
+    toks, _ = gen_fn(cfg, params, prompts, 6, eos_id=eos)
+    toks = np.asarray(toks)
+    assert toks.shape == (2, 6)
+    for row in toks:
+        hits = np.flatnonzero(row == eos)
+        if hits.size:
+            assert (row[hits[0]:] == eos).all()
+    # row 0 hits eos at step 2 by construction (greedy prefix is unchanged)
+    assert (toks[0, 2:] == eos).all()
+
+
+# ---------------------------------------------------------------------------
+# exact page-aligned cache sizing (shared helper)
+# ---------------------------------------------------------------------------
+
+def test_generate_single_step_shapes_match():
+    """gen_steps=1: both generation paths return [B, 1] (the step loop used
+    to leak its warm-up token and return [B, 2])."""
+    cfg = get_smoke_config("mla-7b")
+    key = jax.random.PRNGKey(4)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size, jnp.int32)
+    a, _ = generate(cfg, params, prompts, 1)
+    b, _ = generate_fused(cfg, params, prompts, 1)
+    assert a.shape == b.shape == (2, 1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_capacity_is_exact_when_aligned():
+    """S + gen already page-aligned must NOT grow by another page (the old
+    serve sizing did), and unaligned sums round up to exactly one page."""
+    cfg = get_smoke_config("mla-7b")           # page_size 16
+    assert cfg.page_size == 16
+    assert _decode_capacity(cfg, 16, 16) == 32
+    assert _decode_capacity(cfg, 16, 17) == 48
+    assert page_aligned_capacity(32, 16) == 32
+    assert page_aligned_capacity(33, 16) == 48
+    assert page_aligned_capacity(0, 16) == 16  # never a zero-capacity cache
+
+
+def test_cache_initializers_share_capacity_rule():
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=32)
+    contig = init_mla_cache(cfg, 2, 33, 8, 4)
+    paged = init_paged_mla_cache(cfg, 2, 33, 8, 4)
+    assert contig.capacity == paged.capacity == page_aligned_capacity(33, 32)
