@@ -1,0 +1,176 @@
+"""Continuous-batching serving simulation -> BENCH_serving.json.
+
+A seeded synthetic-arrival workload driven through the serving engine
+(``repro.serving``): Poisson-ish arrivals (exponential inter-arrival gaps in
+*virtual engine steps* — arrival times are generated host-side and passed
+in; no wall-clock enters traced code, so a fixed ``--seed`` reproduces the
+exact schedule and, under greedy decoding, the exact tokens run-to-run).
+
+The sweep crosses request rate x prefix-sharing ratio. ``share_ratio`` is
+the fraction of requests whose prompt begins with a workload-common prefix
+(two full pages of it), so the allocator's refcounted prefix sharing can map
+the same physical pages across concurrent requests; each cell is also run
+with sharing disabled to report pages saved.
+
+Emitted series per cell (the ``BENCH_serving.json`` schema — see README
+"Serving engine"):
+    throughput      decode tokens/s (wall) + tokens-per-engine-step
+    latency         p50/p99 request latency and TTFT, in virtual steps
+    pages           peak/capacity, utilization series, saved_by_sharing,
+                    unshared_peak (same workload, sharing off), evictions
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.kvcache import page_aligned_capacity
+from repro.models import transformer as T
+from repro.serving import EngineConfig, Request, ServingEngine
+
+
+def make_workload(seed: int, n_requests: int, rate: float, share_ratio: float,
+                  prompt_lens: tuple[int, ...], gen_lens: tuple[int, ...],
+                  page_size: int, vocab: int) -> list[Request]:
+    """Seeded synthetic workload: exponential inter-arrival gaps at
+    ``rate`` requests/step; ``share_ratio`` of prompts start with a common
+    two-page prefix (the prefix the allocator can share)."""
+    rng = np.random.default_rng(seed)
+    shared_prefix = rng.integers(0, vocab, size=2 * page_size,
+                                 dtype=np.int32)
+    t = 0.0
+    reqs = []
+    for rid in range(n_requests):
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        S = int(rng.choice(prompt_lens))
+        body = rng.integers(0, vocab, size=S, dtype=np.int32)
+        if rng.random() < share_ratio:
+            # clamp: prompts shorter than the prefix just share what fits
+            n = min(S, len(shared_prefix))
+            body[:n] = shared_prefix[:n]
+        reqs.append(Request(rid=rid, prompt=body,
+                            max_new=int(rng.choice(gen_lens)),
+                            arrival=float(np.floor(t))))
+    return reqs
+
+
+def _pct(xs: list[int], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else -1.0
+
+
+def run_cell(cfg, params, seed: int, n_requests: int, rate: float,
+             share_ratio: float, max_batch: int, pool_pages: int,
+             prompt_lens, gen_lens, prefix_sharing: bool = True) -> dict:
+    span = page_aligned_capacity(max(prompt_lens) + max(gen_lens),
+                                 cfg.page_size) // cfg.page_size
+    reqs = make_workload(seed, n_requests, rate, share_ratio, prompt_lens,
+                         gen_lens, cfg.page_size, cfg.vocab_size)
+    engine = ServingEngine(cfg, params, EngineConfig(
+        max_batch=max_batch, max_pages_per_seq=span, n_pages=pool_pages,
+        prefix_sharing=prefix_sharing, seed=seed))
+    results = engine.run(reqs)
+    m = engine.metrics()
+    done = [r for r in results if r.status == "done"]
+    lat = [r.latency_steps for r in done]
+    ttft = [r.ttft_steps for r in done]
+    return {
+        "rate_req_per_step": rate,
+        "share_ratio": share_ratio,
+        "prefix_sharing": prefix_sharing,
+        "n_requests": n_requests,
+        "completed": len(done),
+        "evicted": sum(1 for r in results if r.status == "evicted"),
+        "steps": m["steps"],
+        "throughput": {
+            "decode_tok_per_s": m["decode_tok_per_s"],
+            "decode_tokens": m["decode_tokens"],
+            "tok_per_step": m["decode_tokens"] / max(m["steps"], 1),
+        },
+        "latency_steps": {"p50": _pct(lat, 50), "p99": _pct(lat, 99)},
+        "ttft_steps": {"p50": _pct(ttft, 50), "p99": _pct(ttft, 99)},
+        "pages": {
+            **m["pages"],
+            "mean_utilization": float(np.mean(m["utilization_series"]))
+            if m["utilization_series"] else 0.0,
+            "utilization_series": [round(u, 4)
+                                   for u in m["utilization_series"]],
+        },
+    }
+
+
+def write_bench_serving(path: str = "BENCH_serving.json", *, seed: int = 0,
+                        arch: str = "mla-7b", n_requests: int = 8,
+                        max_batch: int = 4,
+                        rates=(0.25, 1.0), share_ratios=(0.0, 0.75)) -> dict:
+    cfg = get_smoke_config(arch)
+    params = T.init_model(jax.random.PRNGKey(seed), cfg)
+    page = cfg.page_size
+    prompt_lens = (2 * page + page // 2, 3 * page)   # mixed, prefix-shareable
+    gen_lens = (page // 2, page)
+    span = page_aligned_capacity(max(prompt_lens) + max(gen_lens), page) \
+        // page
+    pool_pages = max_batch * span + 1
+    cells = []
+    for rate in rates:
+        for share in share_ratios:
+            cell = run_cell(cfg, params, seed, n_requests, rate, share,
+                            max_batch, pool_pages, prompt_lens, gen_lens)
+            # sharing-off twin of the same workload: the pages the free-list
+            # allocator saved are the headline of the prefix-sharing
+            # feature. At share_ratio 0 sharing cannot save anything, so
+            # the twin run (a full extra engine + compile) is skipped and
+            # the cell is its own baseline.
+            off = cell if share == 0.0 else run_cell(
+                cfg, params, seed, n_requests, rate, share, max_batch,
+                pool_pages, prompt_lens, gen_lens, prefix_sharing=False)
+            cell["pages"]["unshared_peak_in_use"] = \
+                off["pages"]["peak_in_use"]
+            cell["pages"]["unshared_total_allocs"] = \
+                off["pages"]["total_allocs"]
+            cells.append(cell)
+    payload = {
+        "bench": "serving_sim",
+        "arch": cfg.name,
+        "seed": seed,
+        "page_size": page,
+        "max_batch": max_batch,
+        "pool_pages": pool_pages,
+        "prompt_lens": list(prompt_lens),
+        "gen_lens": list(gen_lens),
+        "cells": cells,
+    }
+    pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default="mla-7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+    payload = write_bench_serving(args.out, seed=args.seed, arch=args.arch,
+                                  n_requests=args.requests,
+                                  max_batch=args.max_batch)
+    for c in payload["cells"]:
+        saved = c["pages"]["saved_by_sharing"]
+        print(f"[serving_sim] rate={c['rate_req_per_step']:<5} "
+              f"share={c['share_ratio']:<5} "
+              f"tok/s={c['throughput']['decode_tok_per_s']:8.1f} "
+              f"p50={c['latency_steps']['p50']:5.1f} "
+              f"p99={c['latency_steps']['p99']:5.1f} "
+              f"peak_pages={c['pages']['peak_in_use']}"
+              f"/{c['pages']['unshared_peak_in_use']} (shared/unshared) "
+              f"saved={saved} evicted={c['evicted']}")
+    print(f"[serving_sim] wrote {args.out} ({len(payload['cells'])} cells)")
+
+
+if __name__ == "__main__":
+    main()

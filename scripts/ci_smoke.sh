@@ -9,7 +9,13 @@
 #     CPU runner), and shard-map (collective-free host-mesh region) decode
 #     backends — `--backend kernel` runs the actual kernels inside the
 #     jitted model decode
-#   * temperature/top-k sampling through the fused scan
+#   * temperature/top-k/top-p (nucleus) sampling through the fused scan
+#   * the continuous-batching serving engine (--engine): staggered
+#     arrivals over fewer slots than requests, prefix sharing on — the
+#     driver exits non-zero on token divergence from the static-batch
+#     generate oracle or on leaked pool pages after drain
+#   * the serving simulator (synthetic-arrival sweep -> BENCH_serving.json,
+#     uploaded as a CI artifact)
 # The serve driver exits non-zero on non-finite logits (serve._check_finite),
 # so a NaN anywhere in the quantized pipeline fails this script loudly.
 set -euo pipefail
@@ -28,6 +34,17 @@ python -m repro.launch.serve --smoke --gen 4 --backend kernel --paged
 python -m repro.launch.serve --smoke --gen 4 --backend kernel --fused
 python -m repro.launch.serve --smoke --gen 4 --backend shard-map
 python -m repro.launch.serve --smoke --gen 4 --fused \
-    --temperature 0.8 --top-k 8
+    --temperature 0.8 --top-k 8 --top-p 0.9 --seed 3
+
+# serving engine: continuous batching with slot recycling + prefix sharing,
+# greedy-parity-gated against the static-batch generate path
+python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 2 \
+    --arrival-gap 2 --seed 1
+python -m repro.launch.serve --smoke --gen 4 --engine --backend kernel \
+    --seed 1
+
+# synthetic-arrival serving sweep (rate x prefix-share) -> BENCH_serving.json
+python benchmarks/serving_sim.py --requests 8 --seed 0 \
+    --out BENCH_serving.json
 
 echo "[ci_smoke] OK"

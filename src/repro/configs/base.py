@@ -63,6 +63,12 @@ class ModelConfig:
     # page pool addressed through a per-sequence page table (multi-tenant
     # pool layout) instead of a contiguous per-slot [B, N, ...] cache
     kv_paged: bool = False
+    # >0: size the paged pool as a SHARED multi-tenant pool with this many
+    # physical pages and an initially-empty page table (all entries parked on
+    # the page-0 scratch page) — the layout the serving engine's free-list
+    # allocator (serving.allocator.PageAllocator) hands pages out of. 0 keeps
+    # the batch-owned layout (each slot owns a private strided run of pages).
+    kv_pool_pages: int = 0
     # run the Pallas decode kernels inside the jitted model decode (interpret
     # mode on CPU, compiled on TPU) instead of the pure-jnp einsum twins;
     # consulted by decode_backend == "auto"

@@ -220,7 +220,16 @@ def gqa_prefill(cache: GQACache, cfg: CacheConfig, k: jax.Array, v: jax.Array) -
 class PagedMLAPool(NamedTuple):
     """Global page pool: pages are the unit of allocation AND the kernel's
     KV-block granularity (scalar-prefetched page table drives the BlockSpec
-    index map — the TPU-native PagedAttention)."""
+    index map — the TPU-native PagedAttention).
+
+    The page table is *per-slot* state: each row maps one batch slot's
+    logical pages to arbitrary physical pool pages. The batch-owned layout
+    (``init_paged_mla_cache`` default) fills rows with private strided runs;
+    the serving engine's multi-tenant layout has a free-list allocator
+    (``serving.allocator.PageAllocator``) write rows as requests come and go,
+    with refcounted prefix pages shared between rows and physical page 0
+    reserved as a scratch page that idle slots park on (their writes land
+    there and are never read back — entries past ``seq_lens`` are masked)."""
 
     content: jax.Array      # [n_pages, page_size, d_c]
     rope: jax.Array         # [n_pages, page_size, d_r]
@@ -266,19 +275,44 @@ def paged_gather(pool: PagedMLAPool):
 
 
 def init_paged_mla_cache(cfg: CacheConfig, batch: int, max_len: int,
-                         d_c: int, d_r: int) -> PagedMLAPool:
-    """Allocate a batch-owned paged pool: each sequence gets a private strided
-    run of pages (page table row b = [b*P, (b+1)*P)). This is the model-layer
-    entry point mirroring ``init_mla_cache`` — a multi-tenant allocator would
-    instead hand out arbitrary pool pages; the decode kernels only ever see
-    the page table, so both layouts run the same code path."""
+                         d_c: int, d_r: int, n_pages: int = 0) -> PagedMLAPool:
+    """Allocate a paged pool behind the model-layer cache interface.
+
+    ``n_pages == 0`` (default): batch-owned layout — each sequence gets a
+    private strided run of pages (page table row b = [b*P, (b+1)*P)).
+
+    ``n_pages > 0``: shared multi-tenant layout — ``n_pages`` physical pages
+    with an all-zero page table (every entry parked on page 0, the reserved
+    scratch page of the serving engine's free-list allocator) and zero
+    seq_lens; page-table rows are written per request by the allocator as
+    sequences are admitted, grown, and retired. The decode kernels only ever
+    see the page table, so both layouts run the same code path."""
     n = page_aligned_capacity(max_len, cfg.page_size)
     pages_per_seq = n // cfg.page_size
+    if n_pages:
+        return init_paged_mla_pool(cfg, n_pages, pages_per_seq, batch,
+                                   d_c, d_r)
     pool = init_paged_mla_pool(cfg, batch * pages_per_seq, pages_per_seq,
                                batch, d_c, d_r)
     table = jnp.arange(batch * pages_per_seq, dtype=jnp.int32).reshape(
         batch, pages_per_seq)
     return pool._replace(page_table=table)
+
+
+def pool_with_tables(pool: PagedMLAPool, table, seq_lens) -> PagedMLAPool:
+    """Swap a pool's page table + seq_lens for host-owned values — the
+    free-list hook the serving engine uses to push its slot assignments into
+    the jitted decode state each step. ``table`` [B, P] int32, ``seq_lens``
+    [B] int32. Handles stacked pools (a leading superblock axis from the
+    scanned-layer vmap in ``transformer.init_decode_state``) by broadcasting:
+    every layer of a scanned tile shares the same slot→pages mapping."""
+    table = jnp.asarray(table, jnp.int32)
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    if pool.page_table.ndim == table.ndim + 1:     # stacked superblock pools
+        n_sb = pool.page_table.shape[0]
+        table = jnp.broadcast_to(table[None], (n_sb,) + table.shape)
+        seq_lens = jnp.broadcast_to(seq_lens[None], (n_sb,) + seq_lens.shape)
+    return pool._replace(page_table=table, seq_lens=seq_lens)
 
 
 def paged_mla_prefill(pool: PagedMLAPool, cfg: CacheConfig,

@@ -17,6 +17,9 @@ Backends:
                         the pjit/cost-analysis-friendly twin
   jnp_paged_ref         PagedMLAPool, page-table gather + the same refs
                         (materializes the full page-table span; reference only)
+                        — page-table rows are arbitrary per-slot mappings, so
+                        batch-owned pools and the serving engine's
+                        allocator-owned (prefix-shared) tables both work
   pallas_splitkv        contiguous Pallas kernels (single-pass or split-KV,
                         interpret mode on CPU, compiled on TPU)
   pallas_paged_splitkv  paged Pallas kernels — scalar-prefetched page-table

@@ -166,6 +166,11 @@ def snapmla_decode_paged(
     profile updates aren't shadowed by the jit cache. Capacity for
     resolution is the per-sequence page-table span ``P * page`` — the pool
     may be much larger.
+
+    Page-table rows are arbitrary per-slot mappings: batch-owned strided
+    runs and the serving engine's allocator-written rows (shared refcounted
+    prefix pages, idle slots parked on the page-0 scratch page) go through
+    the identical kernel path — only entries below ``seq_lens`` are read.
     """
     page = pool.content.shape[1]
     capacity = pool.page_table.shape[1] * page

@@ -53,11 +53,12 @@ def _decode_capacity(cfg, prompt_len: int, gen_steps: int) -> int:
 
 def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
              aux_embed=None, temperature: float = 0.0, top_k: int = 0,
-             eos_id: int | None = None, seed: int = 0):
+             top_p: float = 0.0, eos_id: int | None = None, seed: int = 0):
     """prompts [B, S] -> (generated tokens [B, gen_steps], decode tok/s).
 
-    Per-step decode loop. ``temperature``/``top_k`` switch greedy argmax to
-    sampling (one fold_in per step of a single PRNG key); ``eos_id`` stops
+    Per-step decode loop. ``temperature``/``top_k``/``top_p`` switch greedy
+    argmax to sampling (one fold_in per step of a single PRNG key, nucleus
+    truncation after top-k); ``eos_id`` stops
     the loop early once EVERY sequence has emitted it (finished sequences
     are padded with ``eos_id``). Note the early-stop check is a per-step
     host sync — the price of actually ending the Python loop; the fused
@@ -72,7 +73,7 @@ def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     def pick(logits, i):
         # greedy (temperature <= 0) ignores the key inside sample_logits
         return ST.sample_logits(logits, jax.random.fold_in(key, i),
-                                temperature, top_k)
+                                temperature, top_k, top_p)
 
     state = T.init_decode_state(cfg, B, max_len)
     logits, state = prefill_fn(params, prompts, state, *(
@@ -118,15 +119,17 @@ def generate(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
 
 def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
                    aux_embed=None, temperature: float = 0.0, top_k: int = 0,
-                   eos_id: int | None = None, seed: int = 0):
+                   top_p: float = 0.0, eos_id: int | None = None,
+                   seed: int = 0):
     """Scan-based generation: prefill + ONE fused decode dispatch.
 
     Token-exact with ``generate`` under greedy decoding (same decode_step
     inside a lax.scan) but the whole multi-token decode is a single compiled
     program — no per-step dispatch/host round-trip — with the decode state
     (quantized KV caches) donated so XLA updates the cache buffers in place.
-    ``temperature``/``top_k`` sample inside the scan (PRNG key threaded
-    through the carry); ``eos_id`` pins finished sequences to ``eos_id``.
+    ``temperature``/``top_k``/``top_p`` sample inside the scan (PRNG key
+    threaded through the carry); ``eos_id`` pins finished sequences to
+    ``eos_id``.
 
     Returns (generated tokens [B, gen_steps], decode tok/s).
     """
@@ -139,7 +142,7 @@ def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     fused_fn = jax.jit(
         ST.make_fused_decode(cfg, max(gen_steps - 1, 0),
                              temperature=temperature, top_k=top_k,
-                             eos_id=eos_id),
+                             top_p=top_p, eos_id=eos_id),
         donate_argnums=(2,))
 
     state = T.init_decode_state(cfg, B, max_len)
@@ -147,7 +150,7 @@ def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
         (aux_embed,) if aux_embed is not None else ()))
     _check_finite(logits, "prefill")
     tok = ST.sample_logits(logits, jax.random.fold_in(key, 0),
-                           temperature, top_k)
+                           temperature, top_k, top_p)
     if gen_steps <= 1:
         return tok[:, None][:, :gen_steps], 0.0
 
@@ -164,6 +167,55 @@ def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     _check_finite(ok, "fused decode (any step)")
     toks_per_s = B * (gen_steps - 1) / max(dt, 1e-9)
     return jnp.concatenate([tok[:, None], toks], axis=1), toks_per_s
+
+
+def run_engine(cfg, params, prompts, args) -> None:
+    """``serve --engine``: the continuous-batching engine over the shared
+    paged pool, with the static-batch ``generate`` path as the greedy parity
+    oracle. Arrivals are staggered every ``--arrival-gap`` engine steps so
+    the run exercises admission/retirement churn; exits non-zero on token
+    mismatch (greedy) or leaked pages, so CI can gate on it."""
+    from repro.serving import EngineConfig, Request, ServingEngine
+
+    B, S = prompts.shape
+    span_pages = page_aligned_capacity(S + args.gen, cfg.page_size) \
+        // cfg.page_size
+    ecfg = EngineConfig(
+        max_batch=args.max_batch or B, max_pages_per_seq=span_pages,
+        n_pages=args.pool_pages,
+        prefix_sharing=not args.no_prefix_share,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        eos_id=args.eos_id, seed=args.seed)
+    engine = ServingEngine(cfg, params, ecfg)
+    pnp = np.asarray(prompts)
+    reqs = [Request(rid=i, prompt=pnp[i], max_new=args.gen,
+                    arrival=float(i * args.arrival_gap)) for i in range(B)]
+    results = engine.run(reqs)
+    m = engine.metrics()
+    print(f"[serve] engine: {len(results)} requests over "
+          f"{ecfg.max_batch} slots, {m['steps']} steps, "
+          f"{m['decode_tok_per_s']:.1f} tok/s (decode), "
+          f"pages peak {m['pages']['peak_in_use']}/{m['pages']['capacity']} "
+          f"(saved by sharing: {m['pages']['saved_by_sharing']}), "
+          f"evictions: {m['evictions']}")
+    if m["pages"]["free"] != m["pages"]["capacity"]:
+        raise SystemExit("[serve] FATAL: engine drained but pages leaked "
+                         f"({m['pages']['free']} free != "
+                         f"{m['pages']['capacity']} capacity)")
+    if args.temperature <= 0 and not any(r.status == "evicted"
+                                         for r in results):
+        # greedy parity oracle: the engine must be token-identical to the
+        # static-batch generate path for the same prompts/gen lengths
+        toks_ref, _ = generate(cfg, params, prompts, args.gen,
+                               eos_id=args.eos_id, seed=args.seed)
+        ref = np.asarray(toks_ref)
+        # EOS-stopped requests are a prefix of the (eos-padded) oracle row
+        bad = [r.rid for r in results
+               if r.tokens != list(ref[r.rid])[:len(r.tokens)]]
+        if bad:
+            raise SystemExit("[serve] FATAL: engine tokens diverge from the "
+                             f"static-batch generate oracle for {bad}")
+        print("[serve] engine parity vs static-batch generate: exact")
 
 
 def main():
@@ -196,6 +248,10 @@ def main():
                          "through the fused scan carry)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k truncation for sampling (0 = full softmax)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling: keep the smallest token set with "
+                         "cumulative probability >= top-p, applied after "
+                         "top-k (0 or >= 1 disables; needs --temperature)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="EOS token id: generation early-stops (step loop) / "
                          "pins finished sequences (fused scan) once emitted")
@@ -209,7 +265,26 @@ def main():
                          "in a page pool addressed through per-sequence page "
                          "tables (multi-tenant pool layout) instead of a "
                          "contiguous per-slot cache")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching serving engine (serving/): "
+                         "multi-tenant free-list page allocator with "
+                         "prefix sharing over one shared paged pool, FCFS "
+                         "slot scheduler, and the jitted decode step over "
+                         "staggered arrivals — greedy runs are gated "
+                         "against the static-batch generate oracle")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="engine decode slots (0 = one per request)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="engine pool size in physical pages (0 = auto: "
+                         "max_batch full-span sequences + the scratch page)")
+    ap.add_argument("--arrival-gap", type=int, default=1,
+                    help="engine virtual steps between request arrivals")
+    ap.add_argument("--no-prefix-share", action="store_true",
+                    help="disable the engine's refcounted prefix sharing")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for params, prompts, and sampling — "
+                         "smokes, the engine, and the serving sim are "
+                         "reproducible run-to-run for a fixed seed")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -229,9 +304,16 @@ def main():
     aux = (jax.random.normal(key, (args.batch, cfg.n_aux_tokens, cfg.d_model))
            if cfg.n_aux_tokens else None)
 
+    if args.engine:
+        if args.fused:
+            ap.error("--engine has no fused mode (it steps the decode loop "
+                     "per engine tick); drop --fused or --engine")
+        run_engine(cfg, params, prompts, args)
+        return
+
     gen_fn = generate_fused if args.fused else generate
     sample_kw = dict(temperature=args.temperature, top_k=args.top_k,
-                     eos_id=args.eos_id, seed=args.seed)
+                     top_p=args.top_p, eos_id=args.eos_id, seed=args.seed)
     toks, tps = gen_fn(cfg, params, prompts, args.gen, aux_embed=aux,
                        **sample_kw)
     mode = "fused-scan" if args.fused else "step-loop"

@@ -72,16 +72,32 @@ def make_decode_step(cfg: ModelConfig):
 
 
 def sample_logits(logits: jax.Array, key, temperature: float = 0.0,
-                  top_k: int = 0) -> jax.Array:
-    """Next-token selection from [B, V] logits (shared by both generation
-    paths): ``temperature <= 0`` is greedy argmax (key unused), otherwise
-    temperature scaling with optional top-k truncation + categorical draw."""
+                  top_k: int = 0, top_p: float = 0.0) -> jax.Array:
+    """Next-token selection from [B, V] logits (shared by the step loop, the
+    fused scan, and the serving engine): ``temperature <= 0`` is greedy
+    argmax (key unused), otherwise temperature scaling with optional top-k
+    truncation, nucleus (top-p) truncation, and a categorical draw.
+
+    ``top_p`` in (0, 1) keeps the smallest set of tokens whose cumulative
+    probability reaches ``top_p`` (the nucleus; the most-probable token is
+    always kept) and renormalizes over it. 0 or >= 1 disables the filter.
+    Applied after top-k, so ``top_k`` + ``top_p`` compose (vLLM-style)."""
     if temperature <= 0.0:
         return jnp.argmax(logits, -1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / temperature
     if top_k > 0 and top_k < scaled.shape[-1]:
         kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
         scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    if 0.0 < top_p < 1.0:
+        desc = -jnp.sort(-scaled, axis=-1)               # descending logits
+        probs = jax.nn.softmax(desc, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep while the mass BEFORE a token is < top_p: the first token is
+        # always kept, and the token that crosses the threshold is included
+        keep = (cum - probs) < top_p
+        cutoff = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1,
+                         keepdims=True)
+        scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
@@ -97,7 +113,7 @@ def apply_eos(tok: jax.Array, done: jax.Array, eos_id: int | None):
 
 def make_fused_decode(cfg: ModelConfig, n_steps: int, *,
                       temperature: float = 0.0, top_k: int = 0,
-                      eos_id: int | None = None):
+                      top_p: float = 0.0, eos_id: int | None = None):
     """Multi-token decode as ONE dispatch: a lax.scan over decode steps.
 
     Replaces the per-step Python loop (one jit dispatch + host round-trip per
@@ -106,7 +122,7 @@ def make_fused_decode(cfg: ModelConfig, n_steps: int, *,
     ``donate_argnums=(2,)`` so the cache buffers are updated in place across
     the whole generation.
 
-    ``temperature > 0`` enables temperature/top-k sampling: the returned
+    ``temperature > 0`` enables temperature/top-k/top-p sampling: the returned
     function then takes a PRNG key as its 5th argument, split once per step
     inside the carry (one key in, n_steps independent draws out — no host
     round-trips). ``temperature <= 0`` keeps the greedy 4-argument signature.
@@ -135,7 +151,7 @@ def make_fused_decode(cfg: ModelConfig, n_steps: int, *,
             ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(logits)))
             if sampled:
                 k, sub = jax.random.split(k)
-                nxt = sample_logits(logits, sub, temperature, top_k)
+                nxt = sample_logits(logits, sub, temperature, top_k, top_p)
             else:
                 nxt = sample_logits(logits, None)
             nxt, done = apply_eos(nxt, done, eos_id)

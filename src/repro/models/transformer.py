@@ -256,9 +256,14 @@ def _init_layer_state(cfg: ModelConfig, kind: str, batch: int, max_len: int):
         return init_gqa_cache(_cache_cfg(cfg, kind), batch, max_len,
                               cfg.n_kv_heads, cfg.d_head)
     if kind == "mla":
-        init = init_paged_mla_cache if cfg.kv_paged else init_mla_cache
-        return init(_cache_cfg(cfg, kind), batch, max_len,
-                    cfg.mla.d_c, cfg.mla.d_rope)
+        if cfg.kv_paged:
+            # kv_pool_pages > 0 switches to the shared multi-tenant pool
+            # (empty tables; the serving engine's allocator owns the rows)
+            return init_paged_mla_cache(_cache_cfg(cfg, kind), batch, max_len,
+                                        cfg.mla.d_c, cfg.mla.d_rope,
+                                        n_pages=cfg.kv_pool_pages)
+        return init_mla_cache(_cache_cfg(cfg, kind), batch, max_len,
+                              cfg.mla.d_c, cfg.mla.d_rope)
     if kind == "cross":
         return init_gqa_cache(_cache_cfg(cfg, "attn"), batch,
                               max(cfg.n_aux_tokens, 1), cfg.n_kv_heads, cfg.d_head)

@@ -1,0 +1,12 @@
+"""Continuous-batching serving engine (ISSUE 4 tentpole).
+
+``PageAllocator`` (free-list + refcounted prefix sharing over the shared
+``PagedMLAPool``), ``Scheduler`` (FCFS request lifecycle over fixed decode
+slots), and ``ServingEngine`` (admit → batched prefill → slot-based jitted
+decode → retire; the decode step is compiled once for the slot array, never
+recompiled as the request population changes).
+"""
+from repro.serving.allocator import AllocStats, PageAllocator  # noqa: F401
+from repro.serving.engine import (EngineConfig, RequestResult,  # noqa: F401
+                                  ServingEngine)
+from repro.serving.scheduler import Request, Scheduler, Status  # noqa: F401

@@ -1,0 +1,225 @@
+"""Free-list page allocator over the shared ``PagedMLAPool``.
+
+The pool (``kvcache.init_paged_mla_cache(..., n_pages=N)``) is a flat array
+of physical pages; this allocator is the host-side owner of those pages for
+the continuous-batching engine:
+
+  * **free list** — LIFO stack of physical page ids; ``alloc_prompt`` /
+    ``grow`` pop, ``free`` pushes back once a page's refcount hits zero.
+  * **refcounted prefix sharing** — prompts are chunked into full pages and
+    each full-page prefix is keyed by a hash of its *token content*; a new
+    request whose prompt starts with an already-resident prefix maps the
+    same physical pages (refcount bumped) and only allocates private pages
+    from the first divergent page onward. The page a shared prefix ends in
+    (a partially-filled page) is never shared — it is copied by re-prefilling
+    its tokens into a private page (copy-on-write at the boundary page),
+    which keeps decode appends strictly out of shared pages.
+  * **metrics** — utilization, fragmentation (slack inside the page runs
+    requests reference), cumulative pages saved by sharing, high-water mark.
+
+Physical page 0 is reserved as the scratch page: idle batch slots park their
+page-table rows on it (the jitted decode step appends unconditionally for
+every slot; scratch writes are never read back because masked by seq_lens),
+so it is never handed out. ``capacity`` is therefore ``n_pages - 1``.
+
+Everything here is plain Python/NumPy — no traced code. The engine pushes
+the resulting page tables into the jitted decode state via
+``kvcache.pool_with_tables``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+
+def _prefix_key(prompt: np.ndarray, n_tokens: int) -> bytes:
+    """Content hash of the first ``n_tokens`` prompt tokens (page-aligned
+    chunk boundary). Token-content keyed, so textual prefix equality —
+    not request identity — is what shares pages."""
+    return hashlib.sha256(
+        np.ascontiguousarray(prompt[:n_tokens], dtype=np.int64).tobytes()
+    ).digest()
+
+
+@dataclasses.dataclass
+class AllocStats:
+    n_pages: int                 # physical pages incl. the scratch page
+    capacity: int                # allocatable pages (n_pages - 1)
+    free: int                    # pages currently on the free list
+    in_use: int                  # pages with refcount >= 1
+    shared: int                  # pages with refcount >= 2
+    peak_in_use: int             # high-water mark of in_use
+    total_allocs: int            # cumulative fresh-page allocations
+    pages_saved_by_sharing: int  # cumulative prefix hits (alloc avoided)
+    utilization: float           # in_use / capacity
+    # slack inside the page runs requests actually reference: 1 -
+    # live_tokens / (page_references * page). The denominator counts a
+    # shared page once PER REFERENCING REQUEST (sum of refcounts), matching
+    # live_tokens' per-request accounting — with sharing, physical in_use
+    # alone would undercount and drive this negative.
+    fragmentation: float
+
+
+class PageAllocator:
+    """Multi-tenant free-list allocator with refcounted prefix sharing."""
+
+    SCRATCH_PAGE = 0
+
+    def __init__(self, n_pages: int, page_size: int,
+                 prefix_sharing: bool = True):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the scratch page)")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.prefix_sharing = bool(prefix_sharing)
+        # LIFO free list over pages [1, n_pages); page 0 is scratch
+        self._free: list[int] = list(range(self.n_pages - 1, 0, -1))
+        self._refs: dict[int, int] = {}          # page id -> refcount
+        self._prefix: dict[bytes, int] = {}      # chunk key -> page id
+        self._page_key: dict[int, bytes] = {}    # page id -> chunk key
+        self.total_allocs = 0
+        self.pages_saved_by_sharing = 0
+        self.peak_in_use = 0
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return len(self._refs)
+
+    def stats(self, live_tokens: int = 0) -> AllocStats:
+        in_use = self.num_in_use
+        refs = sum(self._refs.values())
+        return AllocStats(
+            n_pages=self.n_pages, capacity=self.capacity, free=self.num_free,
+            in_use=in_use,
+            shared=sum(1 for r in self._refs.values() if r >= 2),
+            peak_in_use=self.peak_in_use, total_allocs=self.total_allocs,
+            pages_saved_by_sharing=self.pages_saved_by_sharing,
+            utilization=in_use / max(self.capacity, 1),
+            fragmentation=(1.0 - live_tokens / (refs * self.page_size)
+                           if refs else 0.0),
+        )
+
+    def check_invariants(self) -> None:
+        """Partition invariant: every non-scratch page is exactly one of
+        {free, referenced}; refcounts positive; shared pages are registered
+        prefixes. Raises AssertionError (used by the property tests)."""
+        free = set(self._free)
+        used = set(self._refs)
+        assert len(free) == len(self._free), "duplicate page on free list"
+        assert not (free & used), f"pages both free and in use: {free & used}"
+        assert free | used == set(range(1, self.n_pages)), \
+            "leaked/unknown pages"
+        assert self.SCRATCH_PAGE not in free | used, "scratch page escaped"
+        assert all(r >= 1 for r in self._refs.values()), "refcount < 1"
+        for key, pid in self._prefix.items():
+            assert self._refs.get(pid, 0) >= 1, "registered prefix page free"
+            assert self._page_key.get(pid) == key, "prefix registry skew"
+
+    # -- allocation ---------------------------------------------------------
+
+    def _pop_free(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for pid in pages:
+            self._refs[pid] = 1
+        self.total_allocs += n
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+        return pages
+
+    def _match_prefix(self, prompt: np.ndarray) -> list[int]:
+        """Resident pages covering the longest full-page prefix of
+        ``prompt`` — THE sharing-match rule, shared by ``alloc_prompt`` and
+        ``can_admit`` so the dry-run gate can never disagree with the real
+        admission path. Read-only."""
+        pages: list[int] = []
+        if not self.prefix_sharing:
+            return pages
+        for i in range(len(prompt) // self.page_size):
+            pid = self._prefix.get(
+                _prefix_key(prompt, (i + 1) * self.page_size))
+            if pid is None:
+                break
+            pages.append(pid)
+        return pages
+
+    def can_admit(self, prompt: np.ndarray) -> bool:
+        """Would ``alloc_prompt`` succeed right now? (FCFS admission gate —
+        does not mutate.)"""
+        n_total = -(-len(prompt) // self.page_size)
+        return n_total - len(self._match_prefix(prompt)) <= len(self._free)
+
+    def alloc_prompt(self, prompt: np.ndarray) -> list[int] | None:
+        """Allocate the page run covering ``prompt``. Returns the physical
+        page ids (logical page i of the sequence -> pages[i]) or None if the
+        free list cannot cover the non-shared remainder (admission gate).
+
+        Full pages of the prompt that hash-match an already-resident prefix
+        are mapped (refcount++) instead of allocated; the remainder —
+        including the partial tail page, which is the copy-on-write boundary
+        — is allocated fresh. Fresh *full* prompt pages are registered so
+        later requests can share them.
+        """
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        page = self.page_size
+        n_total = -(-len(prompt) // page)
+        n_full = len(prompt) // page
+
+        shared = self._match_prefix(prompt)
+        fresh = self._pop_free(n_total - len(shared))
+        if fresh is None:
+            return None
+        for pid in shared:
+            self._refs[pid] += 1
+        self.pages_saved_by_sharing += len(shared)
+
+        pages = shared + fresh
+        if self.prefix_sharing:
+            # register this prompt's remaining FULL pages for future sharing
+            # (the partial tail page stays private: decode appends land there)
+            for i in range(len(shared), n_full):
+                key = _prefix_key(prompt, (i + 1) * page)
+                if key not in self._prefix:
+                    self._prefix[key] = pages[i]
+                    self._page_key[pages[i]] = key
+        return pages
+
+    def grow(self, n: int = 1) -> list[int] | None:
+        """On-demand growth during decode: ``n`` fresh private pages, or
+        None when the pool is exhausted (the engine then evicts)."""
+        return self._pop_free(n)
+
+    # -- release ------------------------------------------------------------
+
+    def free(self, pages: list[int]) -> None:
+        """Release one reference on each page of a retired request. A page
+        returns to the free list only when its refcount reaches zero; shared
+        prefix pages survive until their last referencing request retires
+        (their registry entry is purged on the way out)."""
+        for pid in pages:
+            if pid == self.SCRATCH_PAGE:
+                raise ValueError("scratch page cannot be freed")
+            refs = self._refs.get(pid)
+            if refs is None:
+                raise ValueError(f"double free of page {pid}")
+            if refs > 1:
+                self._refs[pid] = refs - 1
+                continue
+            del self._refs[pid]
+            key = self._page_key.pop(pid, None)
+            if key is not None:
+                del self._prefix[key]
+            self._free.append(pid)

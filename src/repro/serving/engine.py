@@ -1,0 +1,372 @@
+"""Continuous-batching serving engine over the shared FP8 paged pool.
+
+The engine drives the EXISTING jitted steps (``steps.make_prefill_step`` /
+``steps.make_decode_step`` — the same ``transformer.decode_step`` the
+static-batch ``serve.generate`` paths run, dispatching attention through the
+decode-backend registry) over a *dynamic* request population:
+
+  * the decode step is compiled ONCE for a fixed ``max_batch`` slot array and
+    a fixed shared pool; requests flow through slots with no *decode*
+    recompiles — idle slots are parked on the allocator's scratch page and
+    masked by ``seq_lens`` (the same pinning idea the fused scan uses for
+    EOS rows). Prefill still retraces per distinct (group, prompt-length)
+    shape; bucketing that is a ROADMAP follow-on;
+  * admission/retirement and the page tables are host-side bookkeeping
+    (``allocator.PageAllocator`` free list + refcounted prefix sharing,
+    ``scheduler.Scheduler`` FCFS lifecycle); each step the engine pushes its
+    slot→pages mapping into the jitted state via ``kvcache.pool_with_tables``;
+  * prefill is batched per admission group (same prompt length → one bulk
+    RoPE-aware quantized write into the allocated pages). Shared prefix pages
+    are rewritten with bit-identical values (same tokens, same positions,
+    deterministic quantization), which is what makes prefix sharing exact:
+    the savings are pool pages, not changed numerics.
+
+Greedy engine output is token-identical to the static-batch ``generate``
+oracle for the same prompts/gen lengths (pinned by tests/test_serving.py);
+MLA decode is memory-bound, so keeping many concurrent requests on one
+weight pass is where the paper's pipeline pays off at serving time.
+
+Virtual time = engine steps (arrival times are given in steps; no wall-clock
+in traced code — wall-clock is only sampled host-side for throughput/TTFT
+reporting), so a seeded workload schedules identically run-to-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.kvcache import (PagedMLAPool, page_aligned_capacity,
+                                pool_with_tables)
+from repro.launch import steps as ST
+from repro.models import transformer as T
+from repro.serving.allocator import PageAllocator
+from repro.serving.scheduler import Request, Scheduler, Status
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Host-side engine knobs (the model itself comes from ModelConfig)."""
+
+    max_batch: int = 4             # decode slot count (static jit batch)
+    n_pages: int = 0               # physical pool pages (0 = auto-size:
+    #                                max_batch sequences at full span + scratch)
+    max_pages_per_seq: int = 8     # page-table width (max context in pages)
+    prefix_sharing: bool = True
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 0.0
+    eos_id: int | None = None
+    seed: int = 0
+
+    def resolved_n_pages(self) -> int:
+        if self.n_pages:
+            return self.n_pages
+        return self.max_batch * self.max_pages_per_seq + 1   # + scratch page
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    status: str
+    tokens: list[int]
+    prompt_len: int
+    ttft_steps: int                # first token step - arrival (virtual)
+    latency_steps: int             # finish step - arrival (virtual)
+    ttft_s: float                  # wall-clock first-token latency
+    latency_s: float               # wall-clock total latency
+
+
+class ServingEngine:
+    """Admit → prefill → decode → retire over one shared paged pool."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        bad = [k for k in cfg.layer_pattern if k != "mla"]
+        if bad or cfg.n_aux_tokens:
+            raise ValueError(
+                "the serving engine drives the paged MLA decode path; "
+                f"layer pattern {cfg.layer_pattern} / aux tokens "
+                f"{cfg.n_aux_tokens} are not pure-MLA")
+        self.ecfg = ecfg
+        self.page = cfg.page_size
+        self.span_pages = ecfg.max_pages_per_seq
+        self.n_pages = ecfg.resolved_n_pages()
+        self.cfg = dataclasses.replace(cfg, kv_paged=True,
+                                       kv_pool_pages=self.n_pages)
+        self.params = params
+        span_tokens = self.span_pages * self.page
+        self.state = T.init_decode_state(self.cfg, ecfg.max_batch, span_tokens)
+        self._prefill_fn = jax.jit(ST.make_prefill_step(self.cfg))
+        self._decode_fn = jax.jit(ST.make_decode_step(self.cfg))
+
+        self.allocator = PageAllocator(self.n_pages, self.page,
+                                       prefix_sharing=ecfg.prefix_sharing)
+        self.scheduler = Scheduler(ecfg.max_batch)
+        self.table = np.zeros((ecfg.max_batch, self.span_pages), np.int32)
+        self.last_tok = np.zeros((ecfg.max_batch,), np.int32)
+        self.key = jax.random.PRNGKey(ecfg.seed)
+
+        # warm the decode jit cache on the all-idle state (every slot parked
+        # on the scratch page) so the first REAL decode step — and the
+        # decode_tok_per_s window — never pays trace/compile; the returned
+        # state is discarded, so the warm-up's scratch writes never land
+        self._decode_fn(
+            self.params, jnp.zeros((ecfg.max_batch,), jnp.int32),
+            self._state_with_tables(self.table,
+                                    np.zeros((ecfg.max_batch,), np.int32)),
+            jnp.zeros((ecfg.max_batch,), jnp.int32))[0].block_until_ready()
+
+        self.step_idx = 0
+        self.decode_tokens = 0          # tokens produced by decode steps
+        self.decode_seconds = 0.0
+        self.evictions = 0
+        self.util_series: list[float] = []
+        self._wall: dict[int, dict[str, float]] = {}   # rid -> wall marks
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+
+    def required_pages(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case private pages a request can hold: every resident token
+        (prompt + all appended generations; the final sampled token is never
+        appended) page-aligned — through the ONE sizing rule
+        (``kvcache.page_aligned_capacity``) serve and the cache initializers
+        share."""
+        return page_aligned_capacity(prompt_len + max_new - 1,
+                                     self.page) // self.page
+
+    def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        need = self.required_pages(req.prompt_len, req.max_new)
+        if need > self.span_pages:
+            raise ValueError(
+                f"request {req.rid}: {need} pages exceed the page-table "
+                f"width {self.span_pages} (prompt {req.prompt_len} + "
+                f"{req.max_new} new tokens)")
+        if need > self.allocator.capacity:
+            raise ValueError(
+                f"request {req.rid}: {need} pages exceed pool capacity "
+                f"{self.allocator.capacity}")
+        self._wall[req.rid] = {"arrival": time.time()}
+        self.scheduler.submit(req)
+
+    # ------------------------------------------------------------------
+    # state plumbing (host tables -> jitted pytree)
+    # ------------------------------------------------------------------
+
+    def _map_pools(self, fn, *trees):
+        return jax.tree.map(
+            lambda leaf, *rest: fn(leaf, *rest)
+            if isinstance(leaf, PagedMLAPool) else leaf,
+            *trees, is_leaf=lambda x: isinstance(x, PagedMLAPool))
+
+    def _state_with_tables(self, table: np.ndarray, seq_lens: np.ndarray):
+        return self._map_pools(
+            lambda pool: pool_with_tables(pool, table, seq_lens), self.state)
+
+    def _adopt_pool_data(self, new_state) -> None:
+        """Take the (functionally updated) pool page data from a prefill
+        call back into the engine state; tables/seq_lens stay host-owned."""
+        self.state = self._map_pools(
+            lambda old, new: old._replace(content=new.content, rope=new.rope,
+                                          scale=new.scale),
+            self.state, new_state)
+
+    def _seq_lens(self) -> np.ndarray:
+        lens = np.zeros((self.ecfg.max_batch,), np.int32)
+        for r in self.scheduler.active:
+            lens[r.slot] = r.seq_len
+        return lens
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+
+    def _pick_tokens(self, rows: jax.Array, reqs: list[Request]) -> np.ndarray:
+        """Next token for each request (``rows`` [len(reqs), V] aligned with
+        ``reqs``), ONE dispatch + host transfer for the whole set. Sampled
+        draws use per-request keys folded by token index, so a request's
+        continuation is independent of what it happens to be co-batched
+        with — reproducible run-to-run for a fixed seed regardless of
+        arrival interleaving."""
+        e = self.ecfg
+        if e.temperature <= 0.0:
+            return np.asarray(jnp.argmax(rows, -1))
+        keys = jnp.stack([
+            jax.random.fold_in(jax.random.fold_in(self.key, r.rid),
+                               len(r.out_tokens)) for r in reqs])
+        draw = jax.vmap(lambda row, k: ST.sample_logits(
+            row[None], k, e.temperature, e.top_k, e.top_p)[0])
+        return np.asarray(draw(rows, keys))
+
+    def _emit(self, req: Request, tok: int) -> None:
+        req.out_tokens.append(tok)
+        self.last_tok[req.slot] = tok
+        if len(req.out_tokens) == 1:
+            req.first_token_step = self.step_idx
+            self._wall[req.rid]["first"] = time.time()
+        eos_hit = self.ecfg.eos_id is not None and tok == self.ecfg.eos_id
+        if len(req.out_tokens) >= req.max_new or eos_hit:
+            self._retire(req, Status.DONE)
+
+    def _retire(self, req: Request, status: Status) -> None:
+        slot = req.slot
+        self.scheduler.retire(req, status, self.allocator, self.step_idx)
+        self._wall[req.rid]["finish"] = time.time()
+        if slot >= 0:
+            self.table[slot] = 0          # park the slot on the scratch page
+            self.last_tok[slot] = 0
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+
+    def _prefill_group(self, group: list[Request]) -> None:
+        """Batched prefill of same-length admitted requests: one bulk
+        quantized write through each request's freshly-written table row."""
+        for r in group:
+            row = np.zeros((self.span_pages,), np.int32)
+            row[:len(r.pages)] = r.pages
+            self.table[r.slot] = row
+        rows = np.stack([self.table[r.slot] for r in group])
+        prompts = jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32)
+        view = self._map_pools(
+            lambda pool: pool_with_tables(
+                pool, rows, np.zeros((len(group),), np.int32)), self.state)
+        logits, new_state = self._prefill_fn(self.params, prompts, view)
+        finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        if not finite.all():
+            raise FloatingPointError(
+                f"non-finite prefill logits for request(s) "
+                f"{[r.rid for r, ok in zip(group, finite) if not ok]}")
+        self._adopt_pool_data(new_state)
+        toks = self._pick_tokens(logits, group)
+        for r, tok in zip(group, toks):
+            r.status = Status.DECODE
+            self._emit(r, int(tok))
+
+    def _admit_and_prefill(self) -> None:
+        admitted = self.scheduler.admit(self.allocator, self.step_idx)
+        by_len: dict[int, list[Request]] = {}
+        for r in admitted:
+            by_len.setdefault(r.prompt_len, []).append(r)
+        for group in by_len.values():
+            self._prefill_group(group)
+
+    # ------------------------------------------------------------------
+    # growth / eviction
+    # ------------------------------------------------------------------
+
+    def _ensure_capacity(self) -> None:
+        """Before a decode step, every active request must have a page slot
+        for the token the step will append (position ``seq_len``). Grow by
+        one page on demand; when the pool is exhausted, evict the youngest
+        active request (FCFS fairness) and retry."""
+        for req in list(self.scheduler.active):
+            if req.done:
+                continue
+            while req.seq_len >= len(req.pages) * self.page:
+                assert len(req.pages) < self.span_pages, \
+                    "submit() validation bounds the page run"
+                grown = self.allocator.grow(1)
+                if grown is not None:
+                    req.pages.extend(grown)
+                    self.table[req.slot, len(req.pages) - 1] = grown[0]
+                    continue
+                victim = self.scheduler.eviction_victim()
+                self.evictions += 1
+                self._retire(victim, Status.EVICTED)
+                if victim is req:
+                    break
+
+    # ------------------------------------------------------------------
+    # the step loop
+    # ------------------------------------------------------------------
+
+    def step(self) -> None:
+        """One engine iteration: admit + prefill, grow, one decode step for
+        every active slot, retire finished requests. Advances virtual time
+        even when idle (so future arrivals are reached)."""
+        self._admit_and_prefill()
+        self._ensure_capacity()
+        active = [r for r in self.scheduler.active
+                  if r.status == Status.DECODE]
+        if active:
+            seq_lens = self._seq_lens()
+            state = self._state_with_tables(self.table, seq_lens)
+            t0 = time.time()
+            logits, self.state = self._decode_fn(
+                self.params, jnp.asarray(self.last_tok), state,
+                jnp.asarray(seq_lens))
+            logits.block_until_ready()
+            self.decode_seconds += time.time() - t0
+            finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+            bad = [r.rid for r in active if not finite[r.slot]]
+            if bad:
+                raise FloatingPointError(
+                    f"non-finite decode logits at step {self.step_idx} for "
+                    f"request(s) {bad}")
+            slots = np.array([r.slot for r in active], np.int32)
+            toks = self._pick_tokens(logits[slots], active)
+            for r, tok in zip(active, toks):
+                self.decode_tokens += 1
+                self._emit(r, int(tok))
+        live = sum(r.seq_len for r in self.scheduler.active)
+        self.util_series.append(self.allocator.stats(live).utilization)
+        self.step_idx += 1
+
+    def run(self, requests: list[Request]) -> list[RequestResult]:
+        """Run a workload to drain. ``requests`` carry virtual arrival times
+        (in engine steps); a request is enqueued once the engine clock
+        reaches it — deterministic for a fixed workload + seed."""
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        i = 0
+        while i < len(pending) or not self.scheduler.drained:
+            while i < len(pending) and pending[i].arrival <= self.step_idx:
+                self.submit(pending[i])
+                i += 1
+            self.step()
+        out = []
+        for r in sorted(self.scheduler.finished, key=lambda r: r.rid):
+            w = self._wall[r.rid]
+            out.append(RequestResult(
+                rid=r.rid, status=r.status.value,
+                tokens=[int(t) for t in r.out_tokens],
+                prompt_len=r.prompt_len,
+                ttft_steps=(r.first_token_step - int(r.arrival)
+                            if r.first_token_step >= 0 else -1),
+                latency_steps=r.finish_step - int(r.arrival),
+                ttft_s=w.get("first", w["finish"]) - w["arrival"],
+                latency_s=w["finish"] - w["arrival"]))
+        return out
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def metrics(self) -> dict[str, Any]:
+        stats = self.allocator.stats()
+        tps = self.decode_tokens / self.decode_seconds \
+            if self.decode_seconds else 0.0
+        return {
+            "steps": self.step_idx,
+            "decode_tokens": self.decode_tokens,
+            "decode_tok_per_s": tps,
+            "evictions": self.evictions,
+            "pages": {
+                "capacity": stats.capacity,
+                "free": stats.free,
+                "in_use": stats.in_use,
+                "peak_in_use": stats.peak_in_use,
+                "total_allocs": stats.total_allocs,
+                "saved_by_sharing": stats.pages_saved_by_sharing,
+            },
+            "utilization_series": self.util_series,
+        }

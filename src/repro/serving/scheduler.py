@@ -1,0 +1,144 @@
+"""Request lifecycle + FCFS slot scheduler for the continuous-batching engine.
+
+Lifecycle::
+
+    QUEUED --admit--> PREFILL --first token--> DECODE --EOS/max_new--> DONE
+                                                  \\--pool exhausted--> EVICTED
+
+Admission is strict FCFS: the head of the queue is admitted as soon as (a) a
+batch slot is free and (b) the allocator can cover its prompt's non-shared
+pages; if the head cannot be admitted nothing behind it is considered (no
+head-of-line skipping — later requests never starve an earlier one of pages).
+
+Slots are positions in the fixed ``max_batch`` the jitted decode step was
+compiled for; finished slots are recycled in place (the engine zeroes the
+slot's page-table row onto the scratch page), so the decode step always sees
+static shapes and the active set is carried as a mask — the same pinning
+idea the fused scan uses for EOS-finished rows.
+
+Host-side bookkeeping only; nothing here is traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+
+import numpy as np
+
+
+class Status(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+    EVICTED = "evicted"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+
+    rid: int
+    prompt: np.ndarray             # [S] int32 prompt tokens
+    max_new: int                   # tokens to generate (incl. the prefill one)
+    arrival: float = 0.0           # virtual arrival time (engine steps)
+
+    status: Status = Status.QUEUED
+    slot: int = -1                 # batch slot while PREFILL/DECODE
+    pages: list[int] = dataclasses.field(default_factory=list)
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    # timing (virtual steps; the engine also records wall-clock spans)
+    admit_step: int = -1
+    first_token_step: int = -1     # TTFT = first_token_step - arrival
+    finish_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def seq_len(self) -> int:
+        """Tokens resident in the cache: prompt + generated-and-appended.
+        The latest sampled token is appended by the NEXT decode step, so it
+        is not counted until then."""
+        return self.prompt_len + max(len(self.out_tokens) - 1, 0)
+
+    @property
+    def done(self) -> bool:
+        return self.status in (Status.DONE, Status.EVICTED)
+
+
+class Scheduler:
+    """FCFS admission into a fixed slot array."""
+
+    def __init__(self, max_batch: int):
+        self.max_batch = int(max_batch)
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * self.max_batch
+        self.finished: list[Request] = []
+
+    # -- queue --------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.status = Status.QUEUED
+        self.queue.append(req)
+
+    @property
+    def num_active(self) -> int:
+        return sum(1 for r in self.slots if r is not None)
+
+    @property
+    def active(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def drained(self) -> bool:
+        return not self.queue and self.num_active == 0
+
+    def _free_slot(self) -> int:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return -1
+
+    # -- admission / retirement --------------------------------------------
+
+    def admit(self, allocator, step: int) -> list[Request]:
+        """Admit queue-head requests while a slot is free and the allocator
+        covers their prompts. Admitted requests get a slot + page run and
+        move to PREFILL; the engine then runs their prefill."""
+        admitted: list[Request] = []
+        while self.queue:
+            slot = self._free_slot()
+            if slot < 0:
+                break
+            head = self.queue[0]
+            pages = allocator.alloc_prompt(head.prompt)
+            if pages is None:
+                break                      # strict FCFS: no skipping past head
+            self.queue.popleft()
+            head.status = Status.PREFILL
+            head.slot, head.pages, head.admit_step = slot, pages, step
+            self.slots[slot] = head
+            admitted.append(head)
+        return admitted
+
+    def retire(self, req: Request, status: Status, allocator, step: int) -> None:
+        """DONE or EVICTED: release pages, recycle the slot in place."""
+        assert status in (Status.DONE, Status.EVICTED)
+        allocator.free(req.pages)
+        req.pages = []
+        req.status, req.finish_step = status, step
+        if req.slot >= 0:
+            self.slots[req.slot] = None
+            req.slot = -1
+        self.finished.append(req)
+
+    def eviction_victim(self) -> Request | None:
+        """Youngest active request (latest admission) — evicting it frees
+        pages for older requests, preserving FCFS fairness."""
+        active = self.active
+        if not active:
+            return None
+        return max(active, key=lambda r: (r.admit_step, r.rid))

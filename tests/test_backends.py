@@ -237,6 +237,44 @@ def test_sample_logits_top_k_stays_in_support():
     assert cold == 1
 
 
+def test_sample_logits_top_p_stays_in_nucleus():
+    """Every nucleus draw lands inside the smallest token set whose
+    cumulative probability reaches top_p (the most-probable token is always
+    kept), and top_p composes after top_k."""
+    # softmax of [5, 4, 3, ...] puts ~0.66 on idx 1, ~0.24 on idx 2: the 0.8
+    # nucleus is exactly {1, 2}
+    logits = jnp.array([[0.0, 5.0, 4.0, -1.0, 3.0, 2.0, 1.0, -2.0]])
+    for i in range(64):
+        tok = int(ST.sample_logits(logits, jax.random.PRNGKey(i),
+                                   temperature=1.0, top_p=0.8)[0])
+        assert tok in {1, 2}
+    # a tiny top_p keeps only the argmax
+    for i in range(16):
+        tok = int(ST.sample_logits(logits, jax.random.PRNGKey(i),
+                                   temperature=1.0, top_p=1e-6)[0])
+        assert tok == 1
+    # top_k=3 -> {1, 2, 4}; the 0.8 nucleus of the renormalized trio
+    # (0.66 + 0.25 + 0.09) drops idx 4
+    for i in range(64):
+        tok = int(ST.sample_logits(logits, jax.random.PRNGKey(i),
+                                   temperature=1.0, top_k=3, top_p=0.8)[0])
+        assert tok in {1, 2}
+
+
+def test_sample_logits_top_p_disabled_matches_plain():
+    """top_p = 0 and top_p >= 1 are no-ops: identical draws to the plain
+    temperature path, and greedy ignores top_p entirely."""
+    logits = jax.random.normal(jax.random.PRNGKey(3), (4, 33))
+    key = jax.random.PRNGKey(4)
+    plain = ST.sample_logits(logits, key, temperature=0.7)
+    for p in (0.0, 1.0, 2.0):
+        got = ST.sample_logits(logits, key, temperature=0.7, top_p=p)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(plain))
+    np.testing.assert_array_equal(
+        np.asarray(ST.sample_logits(logits, None, top_p=0.5)),
+        np.asarray(jnp.argmax(logits, -1)))
+
+
 def test_fused_sampling_deterministic_per_seed():
     """temperature>0 threads ONE key through the scan carry: same seed ->
     identical tokens, and every token is a valid vocab id."""
@@ -244,12 +282,16 @@ def test_fused_sampling_deterministic_per_seed():
     key = jax.random.PRNGKey(2)
     params = T.init_model(key, cfg)
     prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size, jnp.int32)
-    kw = dict(temperature=0.8, top_k=8, seed=7)
+    kw = dict(temperature=0.8, top_k=8, top_p=0.9, seed=7)
     a, _ = generate_fused(cfg, params, prompts, 6, **kw)
     b, _ = generate_fused(cfg, params, prompts, 6, **kw)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert a.shape == (2, 6)
     assert (np.asarray(a) >= 0).all() and (np.asarray(a) < cfg.vocab_size).all()
+    # the step loop samples through the same sample_logits (incl. top_p)
+    c, _ = generate(cfg, params, prompts, 6, **kw)
+    d, _ = generate(cfg, params, prompts, 6, **kw)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(d))
 
 
 @pytest.mark.parametrize("fused", [False, True], ids=["step-loop", "fused"])
