@@ -18,18 +18,40 @@ Emitted series per cell (the ``BENCH_serving.json`` schema — see README
     latency         p50/p99 request latency and TTFT, in virtual steps
     pages           peak/capacity, utilization series, saved_by_sharing,
                     unshared_peak (same workload, sharing off), evictions
+
+Two further sections compare this PR's perf levers against their twins on
+identical workloads:
+
+  * ``chunked_prefill`` — a mixed long+short arrival workload run through
+    the engine TWICE (``prefill_chunk`` on vs monolithic admission).
+    Latency is compared in deterministic WORK UNITS (tokens of prefill +
+    decode compute processed between a request's submission and its first
+    token — wall clock on a shared CI runner is noise, work units are not):
+    p50/p99 TTFT overall and per class (short = interactive requests, the
+    ones a monolithic long prefill makes wait), plus decode-stall tokens
+    (prefill work done in steps with decodes in flight — the ITL-spike
+    metric) per step max/p99/total. The ``delta`` block is the headline:
+    chunked admission must cut the per-step decode stall and the short-class
+    p99 TTFT.
+  * ``fused_eos_gating`` — ``make_fused_decode(gate_finished=...)`` twins
+    on an EOS-heavy batch: identical tokens, and the gated run's frozen
+    ``seq_lens`` quantify the cache appends + KV blocks the split-KV early
+    exit no longer touches for finished rows.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.kvcache import page_aligned_capacity
+from repro.launch import steps as ST
 from repro.models import transformer as T
 from repro.serving import EngineConfig, Request, ServingEngine
 
@@ -84,7 +106,7 @@ def run_cell(cfg, params, seed: int, n_requests: int, rate: float,
         "prefix_sharing": prefix_sharing,
         "n_requests": n_requests,
         "completed": len(done),
-        "evicted": sum(1 for r in results if r.status == "evicted"),
+        "evicted": m["requeues"],       # evictions are requeues now (no loss)
         "steps": m["steps"],
         "throughput": {
             "decode_tok_per_s": m["decode_tok_per_s"],
@@ -100,6 +122,153 @@ def run_cell(cfg, params, seed: int, n_requests: int, rate: float,
             "utilization_series": [round(u, 4)
                                    for u in m["utilization_series"]],
         },
+    }
+
+
+def _mixed_workload(seed: int, page: int, chunk: int, vocab: int,
+                    n_short: int = 6) -> list[Request]:
+    """Mixed long+short arrivals: two long prompts (several chunks each)
+    with short interactive requests arriving at and just after them — the
+    regime where a monolithic prefill stalls every in-flight decode."""
+    rng = np.random.default_rng(seed)
+    long_len, short_len = 6 * chunk, page
+    reqs = []
+    rid = 0
+    for arrival, length in (
+            [(0.0, long_len)]
+            + [(float(i % 3), short_len) for i in range(n_short // 2)]
+            + [(4.0, long_len)]
+            + [(4.0 + i % 3, short_len) for i in range(n_short - n_short // 2)]):
+        reqs.append(Request(
+            rid=rid, prompt=rng.integers(0, vocab, size=length,
+                                         dtype=np.int32),
+            max_new=page // 2, arrival=arrival))
+        rid += 1
+    return reqs
+
+
+def _ttft_stats(results, short_cutoff: int) -> dict:
+    def pcts(xs):
+        return {"p50": _pct(xs, 50), "p99": _pct(xs, 99)}
+    works = [r.ttft_work for r in results if r.ttft_work >= 0]
+    shorts = [r.ttft_work for r in results
+              if r.ttft_work >= 0 and r.prompt_len <= short_cutoff]
+    longs = [r.ttft_work for r in results
+             if r.ttft_work >= 0 and r.prompt_len > short_cutoff]
+    return {"all": pcts(works), "short": pcts(shorts), "long": pcts(longs)}
+
+
+def run_chunked_twin(cfg, params, seed: int, chunk: int, budget: int,
+                     max_batch: int = 4) -> dict:
+    """The SAME mixed long+short workload through the engine twice:
+    chunked admission vs the monolithic twin. Returns the comparison the
+    ISSUE's acceptance criterion reads — work-unit TTFT + decode-stall
+    deltas."""
+    import dataclasses as _dc
+    page = cfg.page_size
+    n_requests = len(_mixed_workload(seed, page, chunk, cfg.vocab_size))
+    span = page_aligned_capacity(6 * chunk + page // 2, page) // page
+    runs = {}
+    for mode, pchunk in (("monolithic", 0), ("chunked", chunk)):
+        engine = ServingEngine(
+            _dc.replace(cfg, prefill_chunk=pchunk), params,
+            EngineConfig(max_batch=max_batch, max_pages_per_seq=span,
+                         prefill_budget=budget if pchunk else 0, seed=seed))
+        # requests carry mutable run state — each twin gets a fresh workload
+        # (same seed -> identical prompts/arrivals)
+        results = engine.run(_mixed_workload(seed, page, chunk,
+                                             cfg.vocab_size))
+        m = engine.metrics()
+        stalls = m["work"]["stall_tokens_series"]
+        runs[mode] = {
+            "completed": len(results),
+            "steps": m["steps"],
+            "prefill_traces": m["prefill"]["traces"],
+            "ttft_work": _ttft_stats(results, short_cutoff=2 * chunk),
+            "ttft_steps_p99": _pct([r.ttft_steps for r in results
+                                    if r.ttft_steps >= 0], 99),
+            "stall": {
+                "tokens_total": int(sum(stalls)),
+                "tokens_per_step_max": int(max(stalls, default=0)),
+                "tokens_per_step_p99": _pct([s for s in stalls], 99),
+                "seconds": m["work"]["stall_seconds"],
+            },
+            "wall": {
+                "ttft_s_p99": _pct([r.ttft_s for r in results], 99),
+                "decode_tok_per_s": m["decode_tok_per_s"],
+            },
+            "tokens": {r.rid: r.tokens for r in results},
+        }
+    mono, chk = runs["monolithic"], runs["chunked"]
+    tokens_equal = mono.pop("tokens") == chk.pop("tokens")
+    return {
+        "prefill_chunk": chunk,
+        "prefill_budget": budget,
+        "n_requests": n_requests,
+        "tokens_equal": tokens_equal,
+        "monolithic": mono,
+        "chunked": chk,
+        # the acceptance headline: positive = chunked is better
+        "delta": {
+            "stall_tokens_per_step_max":
+                mono["stall"]["tokens_per_step_max"]
+                - chk["stall"]["tokens_per_step_max"],
+            "stall_tokens_per_step_p99":
+                mono["stall"]["tokens_per_step_p99"]
+                - chk["stall"]["tokens_per_step_p99"],
+            "ttft_work_p99_short":
+                mono["ttft_work"]["short"]["p99"]
+                - chk["ttft_work"]["short"]["p99"],
+            "ttft_s_p99": mono["wall"]["ttft_s_p99"]
+                - chk["wall"]["ttft_s_p99"],
+        },
+    }
+
+
+def run_fused_gating_twin(cfg, params, seed: int, gen: int = 12) -> dict:
+    """``make_fused_decode`` finished-row gating vs the always-append twin
+    on an EOS-heavy batch: tokens must be identical; the gated run's frozen
+    ``seq_lens`` measure the appends (and early-exit KV blocks) saved."""
+    B, S = 4, 2 * cfg.page_size
+    key = jax.random.PRNGKey(seed)
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    max_len = page_aligned_capacity(S + gen, cfg.page_size)
+    prefill = jax.jit(ST.make_prefill_step(cfg))
+    state0 = T.init_decode_state(cfg, B, max_len)
+    logits, _ = prefill(params, prompts, state0)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    eos = int(np.asarray(first)[0])      # row 0 finishes immediately
+    out = {}
+    for gate in (True, False):
+        state = T.init_decode_state(cfg, B, max_len)
+        _, state = prefill(params, prompts, state)
+        fused = jax.jit(ST.make_fused_decode(cfg, gen - 1, eos_id=eos,
+                                             gate_finished=gate),
+                        donate_argnums=(2,))
+        args = (params, first, state, jnp.full((B,), S, jnp.int32))
+        compiled = fused.lower(*args).compile()
+        t0 = time.time()
+        toks, state_out, ok = compiled(*args)
+        jax.block_until_ready(toks)
+        dt = time.time() - t0
+        lens = np.asarray(state_out["scanned"][0].seq_lens).reshape(-1, B)[0] \
+            if state_out.get("scanned") is not None \
+            else np.asarray(state_out["tail"][0].seq_lens)
+        out[gate] = {"tokens": np.asarray(toks).tolist(),
+                     "seconds": dt,
+                     "final_seq_lens": [int(x) for x in lens],
+                     "finite": bool(ok)}
+    gated, ungated = out[True], out[False]
+    return {
+        "eos_id": eos,
+        "gen_steps": gen,
+        "tokens_equal": gated["tokens"] == ungated["tokens"],
+        "gated": {k: v for k, v in gated.items() if k != "tokens"},
+        "ungated": {k: v for k, v in ungated.items() if k != "tokens"},
+        # appends (== split-KV blocks the early exit keeps streaming)
+        # skipped for finished rows by the gate:
+        "appends_saved": int(sum(ungated["final_seq_lens"])
+                             - sum(gated["final_seq_lens"])),
     }
 
 
@@ -143,6 +312,12 @@ def write_bench_serving(path: str = "BENCH_serving.json", *, seed: int = 0,
         "prompt_lens": list(prompt_lens),
         "gen_lens": list(gen_lens),
         "cells": cells,
+        # budget = 3 chunks/step: the long request plus two interactive
+        # requests advance every step, which is what moves BOTH headline
+        # deltas (per-step decode stall AND short-class p99 TTFT) positive
+        "chunked_prefill": run_chunked_twin(cfg, params, seed,
+                                            chunk=page, budget=3 * page),
+        "fused_eos_gating": run_fused_gating_twin(cfg, params, seed),
     }
     pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")
     return payload
@@ -169,6 +344,17 @@ def main():
               f"peak_pages={c['pages']['peak_in_use']}"
               f"/{c['pages']['unshared_peak_in_use']} (shared/unshared) "
               f"saved={saved} evicted={c['evicted']}")
+    cp = payload["chunked_prefill"]
+    print(f"[serving_sim] chunked twin: stall/step max "
+          f"{cp['monolithic']['stall']['tokens_per_step_max']} -> "
+          f"{cp['chunked']['stall']['tokens_per_step_max']} tokens, "
+          f"short-class p99 TTFT "
+          f"{cp['monolithic']['ttft_work']['short']['p99']:.0f} -> "
+          f"{cp['chunked']['ttft_work']['short']['p99']:.0f} work units, "
+          f"tokens_equal={cp['tokens_equal']}")
+    fg = payload["fused_eos_gating"]
+    print(f"[serving_sim] fused EOS gating: appends saved "
+          f"{fg['appends_saved']}, tokens_equal={fg['tokens_equal']}")
     print(f"[serving_sim] wrote {args.out} ({len(payload['cells'])} cells)")
 
 

@@ -14,7 +14,13 @@
 #     arrivals over fewer slots than requests, prefix sharing on — the
 #     driver exits non-zero on token divergence from the static-batch
 #     generate oracle or on leaked pool pages after drain
-#   * the serving simulator (synthetic-arrival sweep -> BENCH_serving.json,
+#   * CHUNKED prefill admission (--prefill-chunk): a mixed long+short
+#     prompt workload (--prompt-lens) with a per-step token budget —
+#     parity-gated per prompt-length group against the generate oracle,
+#     and the driver additionally fails if the engine compiled more
+#     prefill variants than the power-of-two bucket count
+#   * the serving simulator (synthetic-arrival sweep + chunked-vs-
+#     monolithic and fused-EOS-gating twin runs -> BENCH_serving.json,
 #     uploaded as a CI artifact)
 # The serve driver exits non-zero on non-finite logits (serve._check_finite),
 # so a NaN anywhere in the quantized pipeline fails this script loudly.
@@ -42,6 +48,16 @@ python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 2 \
     --arrival-gap 2 --seed 1
 python -m repro.launch.serve --smoke --gen 4 --engine --backend kernel \
     --seed 1
+
+# chunked prefill: mixed long+short prompts admitted chunk-by-chunk under a
+# per-step token budget, alongside in-flight decodes — parity-gated per
+# prompt-length group, prefill compiles bounded by the bucket count
+python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 3 \
+    --batch 6 --prompt-lens 48,16,24 --prefill-chunk 16 \
+    --prefill-budget 32 --arrival-gap 1 --seed 1
+python -m repro.launch.serve --smoke --gen 4 --engine --backend kernel \
+    --prefill-chunk 16 --prompt-lens 40,16 --batch 4 --max-batch 2 \
+    --seed 2
 
 # synthetic-arrival serving sweep (rate x prefix-share) -> BENCH_serving.json
 python benchmarks/serving_sim.py --requests 8 --seed 0 \

@@ -69,6 +69,15 @@ class ModelConfig:
     # allocator (serving.allocator.PageAllocator) hands pages out of. 0 keeps
     # the batch-owned layout (each slot owns a private strided run of pages).
     kv_pool_pages: int = 0
+    # >0: the serving engine splits prompt admission into fixed-size chunks of
+    # this many tokens and runs at most a token-budgeted amount of prefill
+    # work per engine step alongside the ongoing slot-batched decode (later
+    # chunks attend to earlier chunks' already-quantized FP8 pages through the
+    # fused fetch-dequant path — no bf16 re-materialization of the prefix).
+    # Chunk shapes are bucketed to powers of two up to this value so the
+    # engine compiles O(log chunk) prefill variants instead of one per prompt
+    # length. 0 keeps the monolithic one-shot prefill.
+    prefill_chunk: int = 0
     # run the Pallas decode kernels inside the jitted model decode (interpret
     # mode on CPU, compiled on TPU) instead of the pure-jnp einsum twins;
     # consulted by decode_backend == "auto"

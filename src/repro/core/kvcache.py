@@ -101,11 +101,16 @@ def mla_quantize_entry(cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Array):
     return raq.q_content, raq.rope_scaled, raq.scale[..., 0]
 
 
-def mla_append(cache: MLACache, cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Array) -> MLACache:
+def mla_append(cache: MLACache, cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Array,
+               active: jax.Array | None = None) -> MLACache:
     """Append one token per sequence (instant per-token quantization).
 
     c_kv [B, d_c], k_r [B, d_r]. Pure-jnp reference for the Fused-K-Append
-    kernel (kernels/quantize).
+    kernel (kernels/quantize). ``active`` [B] bool gates the append per row:
+    inactive rows rewrite their current slot with its old value and do NOT
+    advance ``seq_lens`` — the fused scan uses this to stop growing the live
+    region of EOS-finished rows (the split-KV early exit then skips their
+    blocks). ``active=None`` is the ungated path, bit-identical to before.
     """
     content, rope, scale = mla_quantize_entry(cfg, c_kv, k_r)
 
@@ -113,11 +118,25 @@ def mla_append(cache: MLACache, cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Arra
         return jax.lax.dynamic_update_slice(cache_b, val_b[None], (idx,) + (0,) * (cache_b.ndim - 1))
 
     idx = cache.seq_lens
+    if active is not None:
+        def keep_old(cache_b, val_b, idx_b, act_b):
+            old_b = jax.lax.dynamic_slice(
+                cache_b, (idx_b,) + (0,) * (cache_b.ndim - 1),
+                (1,) + cache_b.shape[1:])[0]
+            return jnp.where(act_b, val_b, old_b)
+
+        content = jax.vmap(keep_old)(cache.content,
+                                     content.astype(cache.content.dtype),
+                                     idx, active)
+        rope = jax.vmap(keep_old)(cache.rope, rope.astype(jnp.bfloat16),
+                                  idx, active)
+        scale = jax.vmap(keep_old)(cache.scale, scale, idx, active)
     return MLACache(
         content=jax.vmap(upd)(cache.content, content.astype(cache.content.dtype), idx),
         rope=jax.vmap(upd)(cache.rope, rope.astype(jnp.bfloat16), idx),
         scale=jax.vmap(upd)(cache.scale, scale, idx),
-        seq_lens=cache.seq_lens + 1,
+        seq_lens=cache.seq_lens + (1 if active is None
+                                   else active.astype(cache.seq_lens.dtype)),
     )
 
 
@@ -173,8 +192,10 @@ def gqa_quantize_entry(cfg: CacheConfig, k: jax.Array, v: jax.Array):
     return qk.q, qv.q, qk.scale[..., 0], qv.scale[..., 0]
 
 
-def gqa_append(cache: GQACache, cfg: CacheConfig, k: jax.Array, v: jax.Array) -> GQACache:
-    """Append one token per sequence. k, v [B, Hkv, dh] (RoPE already applied)."""
+def gqa_append(cache: GQACache, cfg: CacheConfig, k: jax.Array, v: jax.Array,
+               active: jax.Array | None = None) -> GQACache:
+    """Append one token per sequence. k, v [B, Hkv, dh] (RoPE already applied).
+    ``active`` [B] bool gates the append per row (see ``mla_append``)."""
     kq, vq, ks, vs = gqa_quantize_entry(cfg, k, v)
     pos = cache.seq_lens                       # absolute position of the new token
     slot = pos % cache.capacity if cfg.window else pos
@@ -182,13 +203,28 @@ def gqa_append(cache: GQACache, cfg: CacheConfig, k: jax.Array, v: jax.Array) ->
     def upd(cache_b, val_b, idx):
         return jax.lax.dynamic_update_slice(cache_b, val_b[None], (idx,) + (0,) * (cache_b.ndim - 1))
 
+    sp = pos.astype(jnp.int32)
+    if active is not None:
+        def keep_old(cache_b, val_b, idx_b, act_b):
+            old_b = jax.lax.dynamic_slice(
+                cache_b, (idx_b,) + (0,) * (cache_b.ndim - 1),
+                (1,) + cache_b.shape[1:])[0]
+            return jnp.where(act_b, val_b, old_b)
+
+        kq = jax.vmap(keep_old)(cache.k, kq.astype(cache.k.dtype), slot, active)
+        vq = jax.vmap(keep_old)(cache.v, vq.astype(cache.v.dtype), slot, active)
+        ks = jax.vmap(keep_old)(cache.k_scale, ks, slot, active)
+        vs = jax.vmap(keep_old)(cache.v_scale, vs, slot, active)
+        sp = jax.vmap(keep_old)(cache.slot_pos, sp, slot, active)
+
     return GQACache(
         k=jax.vmap(upd)(cache.k, kq.astype(cache.k.dtype), slot),
         v=jax.vmap(upd)(cache.v, vq.astype(cache.v.dtype), slot),
         k_scale=jax.vmap(upd)(cache.k_scale, ks, slot),
         v_scale=jax.vmap(upd)(cache.v_scale, vs, slot),
-        slot_pos=jax.vmap(upd)(cache.slot_pos, pos.astype(jnp.int32), slot),
-        seq_lens=cache.seq_lens + 1,
+        slot_pos=jax.vmap(upd)(cache.slot_pos, sp, slot),
+        seq_lens=cache.seq_lens + (1 if active is None
+                                   else active.astype(cache.seq_lens.dtype)),
     )
 
 
@@ -335,7 +371,8 @@ def paged_mla_prefill(pool: PagedMLAPool, cfg: CacheConfig,
 
 
 def paged_mla_append(pool: PagedMLAPool, cfg: CacheConfig,
-                     c_kv: jax.Array, k_r: jax.Array) -> PagedMLAPool:
+                     c_kv: jax.Array, k_r: jax.Array,
+                     active: jax.Array | None = None) -> PagedMLAPool:
     """Append one token per sequence into its current page (instant per-token
     quantization — the paged twin of ``mla_append``).
 
@@ -343,17 +380,57 @@ def paged_mla_append(pool: PagedMLAPool, cfg: CacheConfig,
     contiguous ``mla_append``'s degradation, where JAX clamps the update
     index to N-1): without the clamp, ``t // page`` would fall off the page
     table and JAX's scatter clamping would silently corrupt the *first* slot
-    of the last page — a live mid-sequence entry."""
+    of the last page — a live mid-sequence entry.
+
+    ``active`` [B] bool gates the append per row: inactive rows rewrite
+    their current slot with its old value and keep ``seq_lens`` frozen, so
+    the paged split-KV early exit stops paying for EOS-finished rows."""
     B = c_kv.shape[0]
     page = pool.page_size
     content, rope, scale = mla_quantize_entry(cfg, c_kv, k_r)
     t = jnp.minimum(pool.seq_lens, pool.capacity - 1)
     pid = pool.page_table[jnp.arange(B), t // page]           # [B]
     off = t % page
+    if active is not None:
+        content = jnp.where(active[:, None], content, pool.content[pid, off])
+        rope = jnp.where(active[:, None], rope, pool.rope[pid, off])
+        scale = jnp.where(active, scale, pool.scale[pid, off])
     return pool._replace(
         content=pool.content.at[pid, off].set(
             content.astype(pool.content.dtype)),
         rope=pool.rope.at[pid, off].set(rope.astype(jnp.bfloat16)),
         scale=pool.scale.at[pid, off].set(scale),
-        seq_lens=pool.seq_lens + 1,
+        seq_lens=pool.seq_lens + (1 if active is None
+                                  else active.astype(pool.seq_lens.dtype)),
+    )
+
+
+def paged_mla_prefill_at(pool: PagedMLAPool, cfg: CacheConfig,
+                         c_kv: jax.Array, k_r: jax.Array,
+                         start: jax.Array, valid: jax.Array) -> PagedMLAPool:
+    """Partial-length paged prefill append: bulk-write a CHUNK of the prompt
+    through the page table at positions ``start + t`` (chunked prefill).
+
+    c_kv [B, C, d_c], k_r [B, C, d_r]; ``start`` [B] int32 is the chunk's
+    first absolute position (traced — one compiled program serves every
+    chunk of a given width); ``valid`` [B, C] bool masks the padded tail of
+    a bucketed final chunk — masked positions are routed to physical page 0
+    (the engine's scratch page, never read back) so bucket padding can never
+    clobber live entries or run off the page table. ``seq_lens`` advances to
+    ``start + (number of valid chunk tokens)``."""
+    B, C = c_kv.shape[:2]
+    page = pool.page_size
+    content, rope, scale = mla_quantize_entry(cfg, c_kv, k_r)
+    t = start[:, None] + jnp.arange(C)[None, :]               # [B, C] absolute
+    P = pool.page_table.shape[-1]
+    logical = jnp.clip(t // page, 0, P - 1)
+    pids = jnp.take_along_axis(pool.page_table, logical, axis=1)   # [B, C]
+    pids = jnp.where(valid, pids, 0)                # padded tail -> scratch
+    offs = t % page
+    return pool._replace(
+        content=pool.content.at[pids, offs].set(
+            content.astype(pool.content.dtype)),
+        rope=pool.rope.at[pids, offs].set(rope.astype(jnp.bfloat16)),
+        scale=pool.scale.at[pids, offs].set(scale),
+        seq_lens=start + jnp.sum(valid, axis=1).astype(pool.seq_lens.dtype),
     )

@@ -21,8 +21,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.kvcache import MLACache
+from repro.core.kvcache import MLACache, PagedMLAPool
 
 
 def _fetch_dequant_kernel(content_ref, rope_ref, scale_ref, out_ref, *, d_c):
@@ -31,6 +32,14 @@ def _fetch_dequant_kernel(content_ref, rope_ref, scale_ref, out_ref, *, d_c):
     s = scale_ref[0].astype(jnp.float32)[:, None]       # [page, 1]
     out_ref[0, :, :d_c] = (c * s).astype(out_ref.dtype)
     out_ref[0, :, d_c:] = (r * s).astype(out_ref.dtype)  # undo Eq.-6 prescale
+
+
+def _paged_fetch_dequant_body(pt_ref, content_ref, rope_ref, scale_ref,
+                              out_ref, *, d_c):
+    """The paged body IS the contiguous body: the page table only feeds the
+    BlockSpec index maps (where the DMA comes from), never the arithmetic."""
+    del pt_ref  # only used by the index maps
+    _fetch_dequant_kernel(content_ref, rope_ref, scale_ref, out_ref, d_c=d_c)
 
 
 def fetch_dequant_pallas(cache: MLACache, *, page: int = 128,
@@ -59,6 +68,104 @@ def fetch_dequant_ref(cache: MLACache, out_dtype=jnp.bfloat16):
     c = cache.content.astype(jnp.float32) * cache.scale[..., None]
     r = cache.rope.astype(jnp.float32) * cache.scale[..., None]
     return jnp.concatenate([c, r], axis=-1).astype(out_dtype)
+
+
+def paged_fetch_dequant_pallas(pool: PagedMLAPool, *,
+                               out_dtype=jnp.bfloat16,
+                               interpret: bool = True):
+    """Paged Fused-Fetch-Dequant: the page table is scalar-prefetched and
+    drives the DMA source of each (batch, logical-page) grid cell — the same
+    TPU-native PagedAttention addressing the paged decode kernels use, so
+    chunked prefill reads the FP8 pool pages directly (no host gather, HBM
+    fetch traffic stays quantized-width).
+
+    Returns dequantized keys [B, P*page, d_c + d_r] (content|rope) laid out
+    in each sequence's LOGICAL order (row b of the page table flattened)."""
+    n_pages, page, d_c = pool.content.shape
+    d_r = pool.rope.shape[-1]
+    B, P = pool.page_table.shape
+    kernel = functools.partial(_paged_fetch_dequant_body, d_c=d_c)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,      # page_table
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, page, d_c), lambda b, j, pt: (pt[b, j], 0, 0)),
+            pl.BlockSpec((1, page, d_r), lambda b, j, pt: (pt[b, j], 0, 0)),
+            pl.BlockSpec((1, page), lambda b, j, pt: (pt[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page, d_c + d_r), lambda b, j, pt: (b, j, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, P * page, d_c + d_r), out_dtype),
+        interpret=interpret,
+    )(pool.page_table, pool.content, pool.rope, pool.scale)
+
+
+def paged_fetch_dequant_ref(pool: PagedMLAPool, out_dtype=jnp.bfloat16):
+    """Pure-jnp oracle for the paged fetch: gather rows through the page
+    table, dequantize, lay out logically [B, P*page, d_c + d_r]."""
+    c = pool.content[pool.page_table].astype(jnp.float32)   # [B, P, page, d_c]
+    r = pool.rope[pool.page_table].astype(jnp.float32)
+    s = pool.scale[pool.page_table].astype(jnp.float32)[..., None]
+    B, P, page, d_c = c.shape
+    kv = jnp.concatenate([c * s, r * s], axis=-1)
+    return kv.reshape(B, P * page, -1).astype(out_dtype)
+
+
+def paged_chunked_prefill_attention(
+    q_lat: jax.Array,        # [B, C, H, d_c] absorbed queries for the chunk
+    q_rope: jax.Array,       # [B, C, H, d_r]
+    pool: PagedMLAPool,      # quantized prefix pages (page table = per-row run)
+    chunk_c_kv: jax.Array,   # [B, C, d_c] this chunk's latents (full precision)
+    chunk_k_r: jax.Array,    # [B, C, d_r] this chunk's rope keys (RoPE'd)
+    chunk_start: jax.Array,  # [B] first absolute position of the chunk
+    valid: jax.Array,        # [B, C] False on the padded tail of a bucket
+    *,
+    softmax_scale: float,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Attend a prompt chunk against [quantized paged prefix] + [itself].
+
+    The engine's chunked-prefill attention: earlier chunks are read back
+    from their already-quantized FP8 pool pages through the (paged)
+    Fused-Fetch-Dequant path — no bf16 re-materialization of the prefix —
+    while the chunk's OWN keys participate at full precision (they are
+    resident in VREGs from the projection that just produced them; the
+    quantized copy is only what lands in the pool for later chunks/decode).
+    Scores from both sources share ONE softmax (mathematically the
+    flash-style LSE combine, assembled directly), so for a first chunk the
+    result is the plain full-precision causal attention.
+
+    ``chunk_start`` is traced: one compiled program serves every chunk of a
+    given (bucketed) width. Returns o_latent [B, C, H, d_c] (f32).
+    """
+    B, C, H, d_c = q_lat.shape
+    kv = (paged_fetch_dequant_pallas(pool, interpret=interpret)
+          if use_kernel else paged_fetch_dequant_ref(pool)).astype(jnp.float32)
+    q = jnp.concatenate([q_lat, q_rope], axis=-1).astype(jnp.float32)
+    # prefix scores: every pool position strictly before the chunk is live
+    n = kv.shape[1]
+    s_pre = jnp.einsum("bchd,bnd->bchn", q, kv) * softmax_scale
+    pre_ok = jnp.arange(n)[None, :] < chunk_start[:, None]          # [B, n]
+    s_pre = jnp.where(pre_ok[:, None, None, :], s_pre, -jnp.inf)
+    # in-chunk scores: full precision, causal within the chunk, padded tail
+    # keys masked (padded QUERIES still see their causal prefix, so no row is
+    # ever fully masked — their outputs are garbage and are never read)
+    k_chunk = jnp.concatenate([chunk_c_kv, chunk_k_r],
+                              axis=-1).astype(jnp.float32)
+    s_chk = jnp.einsum("bchd,bkd->bchk", q, k_chunk) * softmax_scale
+    causal = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]       # [C, C]
+    chk_ok = causal[None] & valid[:, None, :]                       # [B, C, C]
+    s_chk = jnp.where(chk_ok[:, :, None, :], s_chk, -jnp.inf)
+    # one softmax across [prefix | chunk] — the LSE combine, assembled flat
+    p = jax.nn.softmax(jnp.concatenate([s_pre, s_chk], axis=-1), axis=-1)
+    o = jnp.einsum("bchn,bnd->bchd", p[..., :n], kv[..., :d_c])
+    o = o + jnp.einsum("bchk,bkd->bchd", p[..., n:],
+                       chunk_c_kv.astype(jnp.float32))
+    return o
 
 
 def chunked_prefill_attention(

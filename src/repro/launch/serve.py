@@ -169,49 +169,88 @@ def generate_fused(cfg, params, prompts: jax.Array, gen_steps: int, mesh=None,
     return jnp.concatenate([tok[:, None], toks], axis=1), toks_per_s
 
 
-def run_engine(cfg, params, prompts, args) -> None:
+def _engine_prompts(cfg, key, args) -> list[np.ndarray]:
+    """Per-request prompts for ``serve --engine``: ``--prompt-lens`` (comma
+    list, cycled over ``--batch`` requests) yields a MIXED long+short
+    workload — the regime chunked prefill exists for; otherwise every
+    request gets a ``--prompt-len`` prompt."""
+    if args.prompt_lens:
+        lens = [int(s) for s in args.prompt_lens.split(",")]
+        lens = [lens[i % len(lens)] for i in range(args.batch)]
+    else:
+        lens = [args.prompt_len] * args.batch
+    return [np.asarray(jax.random.randint(
+        jax.random.fold_in(key, i), (n,), 0, cfg.vocab_size, jnp.int32))
+        for i, n in enumerate(lens)]
+
+
+def run_engine(cfg, params, args) -> None:
     """``serve --engine``: the continuous-batching engine over the shared
     paged pool, with the static-batch ``generate`` path as the greedy parity
-    oracle. Arrivals are staggered every ``--arrival-gap`` engine steps so
-    the run exercises admission/retirement churn; exits non-zero on token
-    mismatch (greedy) or leaked pages, so CI can gate on it."""
+    oracle (per prompt-length group when ``--prompt-lens`` mixes lengths).
+    Arrivals are staggered every ``--arrival-gap`` engine steps so the run
+    exercises admission/retirement churn; ``--prefill-chunk`` switches
+    admission to budgeted chunked prefill. Exits non-zero on token mismatch
+    (greedy) or leaked pages, so CI can gate on it."""
     from repro.serving import EngineConfig, Request, ServingEngine
 
-    B, S = prompts.shape
-    span_pages = page_aligned_capacity(S + args.gen, cfg.page_size) \
+    key = jax.random.PRNGKey(args.seed)
+    prompts = _engine_prompts(cfg, key, args)
+    span_pages = page_aligned_capacity(
+        max(len(p) for p in prompts) + args.gen, cfg.page_size) \
         // cfg.page_size
+    cfg = dataclasses.replace(cfg, prefill_chunk=args.prefill_chunk)
     ecfg = EngineConfig(
-        max_batch=args.max_batch or B, max_pages_per_seq=span_pages,
+        max_batch=args.max_batch or len(prompts),
+        max_pages_per_seq=span_pages,
         n_pages=args.pool_pages,
         prefix_sharing=not args.no_prefix_share,
+        prefill_budget=args.prefill_budget,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         eos_id=args.eos_id, seed=args.seed)
     engine = ServingEngine(cfg, params, ecfg)
-    pnp = np.asarray(prompts)
-    reqs = [Request(rid=i, prompt=pnp[i], max_new=args.gen,
-                    arrival=float(i * args.arrival_gap)) for i in range(B)]
+    reqs = [Request(rid=i, prompt=p, max_new=args.gen,
+                    arrival=float(i * args.arrival_gap))
+            for i, p in enumerate(prompts)]
     results = engine.run(reqs)
     m = engine.metrics()
     print(f"[serve] engine: {len(results)} requests over "
           f"{ecfg.max_batch} slots, {m['steps']} steps, "
           f"{m['decode_tok_per_s']:.1f} tok/s (decode), "
+          f"prefill {m['prefill']['mode']} "
+          f"(chunk={m['prefill']['chunk']}, "
+          f"traces={m['prefill']['traces']}), "
           f"pages peak {m['pages']['peak_in_use']}/{m['pages']['capacity']} "
           f"(saved by sharing: {m['pages']['saved_by_sharing']}), "
-          f"evictions: {m['evictions']}")
+          f"evictions: {m['evictions']} "
+          f"(requeued: {m['requeues']})")
     if m["pages"]["free"] != m["pages"]["capacity"]:
         raise SystemExit("[serve] FATAL: engine drained but pages leaked "
                          f"({m['pages']['free']} free != "
                          f"{m['pages']['capacity']} capacity)")
-    if args.temperature <= 0 and not any(r.status == "evicted"
-                                         for r in results):
+    if args.prefill_chunk > 0:
+        n_buckets = len(ST.chunk_buckets(args.prefill_chunk))
+        if m["prefill"]["traces"] > n_buckets:
+            raise SystemExit(
+                "[serve] FATAL: chunked prefill compiled "
+                f"{m['prefill']['traces']} variants > {n_buckets} buckets")
+    if args.temperature <= 0 and m["requeues"] == 0:
         # greedy parity oracle: the engine must be token-identical to the
-        # static-batch generate path for the same prompts/gen lengths
-        toks_ref, _ = generate(cfg, params, prompts, args.gen,
-                               eos_id=args.eos_id, seed=args.seed)
-        ref = np.asarray(toks_ref)
+        # static-batch generate path for the same prompts/gen lengths —
+        # run per prompt-length group so mixed-length workloads are covered
+        by_len: dict[int, list[int]] = {}
+        for i, p in enumerate(prompts):
+            by_len.setdefault(len(p), []).append(i)
+        ref: dict[int, list[int]] = {}
+        for rids in by_len.values():
+            batch = jnp.asarray(np.stack([prompts[i] for i in rids]))
+            toks_ref, _ = generate(cfg, params, batch, args.gen,
+                                   eos_id=args.eos_id, seed=args.seed)
+            for row, rid in zip(np.asarray(toks_ref), rids):
+                ref[rid] = list(row)
         # EOS-stopped requests are a prefix of the (eos-padded) oracle row
         bad = [r.rid for r in results
-               if r.tokens != list(ref[r.rid])[:len(r.tokens)]]
+               if r.tokens != ref[r.rid][:len(r.tokens)]]
         if bad:
             raise SystemExit("[serve] FATAL: engine tokens diverge from the "
                              f"static-batch generate oracle for {bad}")
@@ -274,6 +313,25 @@ def main():
                          "against the static-batch generate oracle")
     ap.add_argument("--max-batch", type=int, default=0,
                     help="engine decode slots (0 = one per request)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="engine chunked prefill: split prompt admission "
+                         "into chunks of this many tokens, run alongside "
+                         "the slot-batched decode each engine step (later "
+                         "chunks attend the FP8-quantized prefix pages "
+                         "through the fused fetch-dequant path); chunk "
+                         "shapes are bucketed to powers of two so compiles "
+                         "stay O(log chunk). 0 = monolithic one-shot "
+                         "prefill")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prefill tokens per engine step under "
+                         "--prefill-chunk (granted one chunk per PREFILLING "
+                         "request per FCFS round-robin pass; the head "
+                         "always gets one chunk). 0 = one chunk per "
+                         "prefilling request per step")
+    ap.add_argument("--prompt-lens", default="",
+                    help="engine-only: comma list of prompt lengths cycled "
+                         "across --batch requests (mixed long+short "
+                         "workload), overriding --prompt-len")
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="engine pool size in physical pages (0 = auto: "
                          "max_batch full-span sequences + the scratch page)")
@@ -299,17 +357,18 @@ def main():
                        "use_shard_map": True}
     key = jax.random.PRNGKey(args.seed)
     params = T.init_model(key, cfg)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size, jnp.int32)
-    aux = (jax.random.normal(key, (args.batch, cfg.n_aux_tokens, cfg.d_model))
-           if cfg.n_aux_tokens else None)
 
     if args.engine:
         if args.fused:
             ap.error("--engine has no fused mode (it steps the decode loop "
                      "per engine tick); drop --fused or --engine")
-        run_engine(cfg, params, prompts, args)
+        run_engine(cfg, params, args)
         return
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    aux = (jax.random.normal(key, (args.batch, cfg.n_aux_tokens, cfg.d_model))
+           if cfg.n_aux_tokens else None)
 
     gen_fn = generate_fused if args.fused else generate
     sample_kw = dict(temperature=args.temperature, top_k=args.top_k,

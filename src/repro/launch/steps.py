@@ -71,6 +71,45 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
+def make_chunked_prefill_step(cfg: ModelConfig):
+    """Chunked-prefill step: one (bucketed) prompt chunk through the stack.
+
+    chunk_prefill_step(params, tokens [B, C], state, chunk_start [B],
+    last_idx [B]) -> (logits [B, V] at the last real token, updated state).
+    ``chunk_start``/``last_idx`` are traced, so compiles are per chunk WIDTH
+    (one per bucket), never per prompt length or cursor position."""
+    def chunk_prefill_step(params, tokens, state, chunk_start, last_idx):
+        return T.chunked_prefill(params, cfg, tokens, state, chunk_start,
+                                 last_idx)
+
+    return chunk_prefill_step
+
+
+def chunk_buckets(prefill_chunk: int) -> list[int]:
+    """Chunk-shape buckets: powers of two up to ``prefill_chunk`` (plus
+    ``prefill_chunk`` itself when it is not a power of two). The engine pads
+    every chunk up to its bucket, so it compiles at most ``len(buckets)``
+    prefill variants across ANY mix of prompt lengths."""
+    if prefill_chunk < 1:
+        raise ValueError("prefill_chunk must be >= 1 to bucket")
+    buckets = []
+    b = 1
+    while b < prefill_chunk:
+        buckets.append(b)
+        b *= 2
+    buckets.append(prefill_chunk)
+    return buckets
+
+
+def bucket_for(n_tokens: int, prefill_chunk: int) -> int:
+    """Smallest bucket covering ``n_tokens`` (the padded chunk width)."""
+    for b in chunk_buckets(prefill_chunk):
+        if b >= n_tokens:
+            return b
+    raise ValueError(f"{n_tokens} tokens exceed prefill_chunk "
+                     f"{prefill_chunk}")
+
+
 def sample_logits(logits: jax.Array, key, temperature: float = 0.0,
                   top_k: int = 0, top_p: float = 0.0) -> jax.Array:
     """Next-token selection from [B, V] logits (shared by the step loop, the
@@ -113,7 +152,8 @@ def apply_eos(tok: jax.Array, done: jax.Array, eos_id: int | None):
 
 def make_fused_decode(cfg: ModelConfig, n_steps: int, *,
                       temperature: float = 0.0, top_k: int = 0,
-                      top_p: float = 0.0, eos_id: int | None = None):
+                      top_p: float = 0.0, eos_id: int | None = None,
+                      gate_finished: bool = True):
     """Multi-token decode as ONE dispatch: a lax.scan over decode steps.
 
     Replaces the per-step Python loop (one jit dispatch + host round-trip per
@@ -138,8 +178,19 @@ def make_fused_decode(cfg: ModelConfig, n_steps: int, *,
     logits, folded into the scan carry — one boolean rides along so callers
     (serve, CI smoke) can gate on a NaN at any step, not just the last,
     without a second dispatch or materializing [n_steps, B, V] logits.
+
+    ``gate_finished`` (with an ``eos_id``): rows that already emitted EOS
+    run the per-layer bodies gated on ``~done`` — zero-width work is not
+    possible under jit, so their queries are masked to zero and every cache
+    append / recurrent update is skipped (``decode_step``'s ``active``
+    mask). Their ``seq_lens`` freeze, which is what lets the split-KV
+    early-exit kernels stop streaming KV blocks for finished rows. Output
+    tokens are unchanged (finished rows are pinned to ``eos_id`` either
+    way); ``gate_finished=False`` keeps the old always-append behavior for
+    the benchmark twin.
     """
     sampled = temperature > 0.0
+    gated = gate_finished and eos_id is not None
 
     def fused_decode(params, token, state, start_pos, key=None):
         if sampled and key is None:
@@ -147,7 +198,8 @@ def make_fused_decode(cfg: ModelConfig, n_steps: int, *,
 
         def body(carry, i):
             tok, st, ok, k, done = carry
-            logits, st = T.decode_step(params, cfg, tok, st, start_pos + i)
+            logits, st = T.decode_step(params, cfg, tok, st, start_pos + i,
+                                       active=~done if gated else None)
             ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(logits)))
             if sampled:
                 k, sub = jax.random.split(k)

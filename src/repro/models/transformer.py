@@ -29,7 +29,8 @@ from repro.core import mla as mla_lib
 from repro.core.kvcache import (CacheConfig, GQACache, MLACache, gqa_append,
                                 gqa_prefill, init_gqa_cache, init_mla_cache,
                                 init_paged_mla_cache, mla_append, mla_prefill,
-                                paged_mla_append, paged_mla_prefill)
+                                paged_mla_append, paged_mla_prefill,
+                                paged_mla_prefill_at)
 from repro.core.attention import gqa_decode_dequant_ref, mla_decode_dequant_ref
 from repro.kernels.gqa_decode import ref as gqa_ref
 from repro.kernels.mla_decode import backends as BK
@@ -328,12 +329,18 @@ def _wsc(x, *spec):
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, PartitionSpec(*parts)))
 
-def _attn_decode(p, cfg: ModelConfig, kind: str, x_t, cache: GQACache, pos):
-    """One-token GQA/SWA decode against a quantized cache."""
+def _attn_decode(p, cfg: ModelConfig, kind: str, x_t, cache: GQACache, pos,
+                 active=None):
+    """One-token GQA/SWA decode against a quantized cache. ``active`` [B]
+    bool gates the cache append per row (finished-row skipping in the fused
+    scan); inactive rows keep a frozen cache and produce garbage (finite,
+    never-read) outputs."""
     acfg = _attn_cfg(cfg, kind)
     ccfg = _cache_cfg(cfg, kind)
     q, k, v = L.project_qkv(p, acfg, x_t[:, None, :], pos[:, None])
-    cache = gqa_append(cache, ccfg, k[:, 0], v[:, 0])
+    if active is not None:
+        q = jnp.where(active[:, None, None, None], q, 0.0)
+    cache = gqa_append(cache, ccfg, k[:, 0], v[:, 0], active=active)
     window = cfg.window if kind == "swa" else 0
     qd = _wsc(q[:, 0].astype(jnp.float32), "dp", "model", None)
     o = gqa_ref.gqa_decode_parallel_ref(
@@ -359,7 +366,7 @@ def _cross_decode(p, cfg: ModelConfig, x_t, cache: GQACache):
     return jnp.einsum("bhk,hkd->bd", o.astype(x_t.dtype), p.wo)
 
 
-def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos):
+def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos, active=None):
     """SnapMLA decode: Fused-Q-Quant + Fused-K-Append + backend attention.
 
     The attention itself is dispatched through the decode-attention backend
@@ -385,14 +392,25 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos):
         prefer_shard_map=bool(ctx and ctx.get("use_shard_map")))
     c_kv, k_r = mla_lib.project_kv(p, mcfg, x_t[:, None, :], pos[:, None])
     if paged:
-        cache = paged_mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0])
+        cache = paged_mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0],
+                                 active=active)
     elif backend.name == "shard_map":
+        # NOTE: the shard_map append is ungated — finished rows keep
+        # appending (and their seq_lens keep growing) on this backend, so
+        # the finished-row gating's early-exit saving does not apply here;
+        # outputs are unaffected (finished rows are pinned to EOS upstream)
         from repro.core.distributed_decode import mla_append_shard_map
         cache = mla_append_shard_map(ctx["mesh"], ctx["dp"], cache, ccfg,
                                      c_kv[:, 0], k_r[:, 0])
     else:
-        cache = mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0])
+        cache = mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0], active=active)
     q_c, q_r = mla_lib.project_q(p, mcfg, x_t[:, None, :], pos[:, None])
+    if active is not None:
+        # finished rows: zero the query (quantize_per_token's EPS floor keeps
+        # the scale finite, so the masked row's attention is a uniform — and
+        # finite — average over its frozen live region, never read again)
+        q_c = jnp.where(active[:, None, None, None], q_c, 0.0)
+        q_r = jnp.where(active[:, None, None, None], q_r, 0.0)
     q_lat = _wsc(mla_lib.absorb_q(p, q_c[:, 0]), "dp", "model", None)
     fmt = ccfg.fmt if ccfg.quantized else "none"
     q_c8, q_r_s, sigma_q = mla_kref.prepare_q(q_lat, q_r[:, 0], fmt)
@@ -407,38 +425,65 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos):
     return mla_lib.output_proj(p, o_lat.astype(x_t.dtype)), cache
 
 
-def _apply_block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos):
+def _freeze_inactive(active, new_state, old_state):
+    """Per-row recurrent-state freeze: keep old rows where ``active`` is
+    False (leaves are [B, ...], tiny next to KV caches)."""
+    def sel(new, old):
+        mask = active.reshape(active.shape + (1,) * (new.ndim - 1))
+        return jnp.where(mask, new, old)
+    return jax.tree.map(sel, new_state, old_state)
+
+
+def _apply_block_decode(p, cfg: ModelConfig, kind: str, x_t, state, pos,
+                        active=None):
     h = L.rms_norm(x_t, p["ln1"])
     if kind in ("attn", "swa"):
-        y, state = _attn_decode(p["mixer"], cfg, kind, h, state, pos)
+        y, state = _attn_decode(p["mixer"], cfg, kind, h, state, pos, active)
         x_t = x_t + y
     elif kind == "mla":
-        y, state = _mla_decode(p["mixer"], cfg, h, state, pos)
+        y, state = _mla_decode(p["mixer"], cfg, h, state, pos, active)
         x_t = x_t + y
     elif kind == "cross":
         g = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x_t.dtype)
         x_t = x_t + g * _cross_decode(p["mixer"], cfg, h, state)
     elif kind == "dec":
-        y, self_c = _attn_decode(p["mixer"], cfg, "attn", h, state["self"], pos)
+        y, self_c = _attn_decode(p["mixer"], cfg, "attn", h, state["self"],
+                                 pos, active)
         x_t = x_t + y
         hc = L.rms_norm(x_t, p["ln_cross"])
         x_t = x_t + _cross_decode(p["cross"], cfg, hc, state["cross"])
         state = {"self": self_c, "cross": state["cross"]}
     elif kind == "rglru":
+        old = state
         y, state = rglru_lib.rglru_step(p["mixer"], h, state)
+        if active is not None:
+            state = _freeze_inactive(active, state, old)
         x_t = x_t + y
     elif kind == "mlstm":
+        old = state
         y, state = xlstm_lib.mlstm_step(p["mixer"], h, state)
+        if active is not None:
+            state = _freeze_inactive(active, state, old)
         return x_t + y, state
     elif kind == "slstm":
+        old = state
         y, state = xlstm_lib.slstm_step(p["mixer"], h, state)
+        if active is not None:
+            state = _freeze_inactive(active, state, old)
         return x_t + y, state
     x_t, _ = _apply_mlp(p, cfg, x_t)
     return x_t, state
 
 
-def decode_step(params, cfg: ModelConfig, token: jax.Array, state, pos: jax.Array):
-    """token [B] int32, pos [B] int32 -> (logits [B, V], new state)."""
+def decode_step(params, cfg: ModelConfig, token: jax.Array, state,
+                pos: jax.Array, active: jax.Array | None = None):
+    """token [B] int32, pos [B] int32 -> (logits [B, V], new state).
+
+    ``active`` [B] bool (optional) marks rows still generating: inactive
+    (EOS-finished) rows skip every cache append / recurrent-state update
+    (their ``seq_lens`` freeze, so length-driven early exits stop paying for
+    them) and run with zeroed queries. ``active=None`` is bit-identical to
+    the ungated step."""
     x_t = L.embed(params["embed"], token)
     aux = state.get("aux")
 
@@ -449,7 +494,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state, pos: jax.Arra
             new_states = []
             for i, kind in enumerate(cfg.layer_pattern):
                 x_t, s = _apply_block_decode(block_params[i], cfg, kind, x_t,
-                                             block_state[i], pos)
+                                             block_state[i], pos, active)
                 new_states.append(s)
             return x_t, new_states
 
@@ -468,7 +513,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, state, pos: jax.Arra
             new_state["scanned"] = scanned_states
     tail_states = []
     for p, kind, s in zip(params["tail"], cfg.remainder_kinds, state["tail"]):
-        x_t, s = _apply_block_decode(p, cfg, kind, x_t, s, pos)
+        x_t, s = _apply_block_decode(p, cfg, kind, x_t, s, pos, active)
         tail_states.append(s)
     new_state["tail"] = tail_states
 
@@ -573,6 +618,101 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, state,
     new_state["tail"] = tail_states
 
     x_last = L.rms_norm(x[:, -1], params["ln_f"])
+    table = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", x_last.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (one bucketed prompt chunk -> paged cache writes + logits)
+# ---------------------------------------------------------------------------
+
+def _chunked_prefill_mla_layer(p, cfg: ModelConfig, x, pool, chunk_start,
+                               valid):
+    """One MLA layer over one prompt chunk: project the chunk's KV, land it
+    in the FP8 pool pages at ``chunk_start + t``, then attend the chunk's
+    queries against [quantized prefix pages] + [the chunk itself] (causal)
+    through the fused fetch-dequant path."""
+    from repro.kernels.quantize import fetch_dequant as FD
+    mcfg = _mla_cfg(cfg)
+    ccfg = _cache_cfg(cfg, "mla")
+    C = x.shape[1]
+    positions = chunk_start[:, None] + jnp.arange(C)[None, :]
+    h = L.rms_norm(x, p["ln1"])
+    c_kv, k_r = mla_lib.project_kv(p["mixer"], mcfg, h, positions)
+    pool = paged_mla_prefill_at(pool, ccfg, c_kv, k_r, chunk_start, valid)
+    q_c, q_r = mla_lib.project_q(p["mixer"], mcfg, h, positions)
+    q_lat = mla_lib.absorb_q(p["mixer"], q_c)          # [B, C, H, d_c]
+    o_lat = FD.paged_chunked_prefill_attention(
+        q_lat, q_r, pool, c_kv, k_r, chunk_start, valid,
+        softmax_scale=mcfg.softmax_scale, use_kernel=cfg.use_kernels,
+        interpret=jax.default_backend() != "tpu")
+    x = x + mla_lib.output_proj(p["mixer"], o_lat.astype(x.dtype))
+    x, _ = _apply_mlp(p, cfg, x)
+    return x, pool
+
+
+def chunked_prefill(params, cfg: ModelConfig, tokens: jax.Array, state,
+                    chunk_start: jax.Array, last_idx: jax.Array):
+    """One prompt CHUNK through the stack: tokens [B, C] at absolute
+    positions ``chunk_start + t`` -> (logits [B, V] for the chunk's last real
+    token, state with the chunk's quantized entries landed in the pool).
+
+    The serving engine's chunked-prefill step: called once per (bucketed)
+    chunk, with ``chunk_start`` / ``last_idx`` traced so ONE compiled
+    program serves every chunk of a given width — prefill compiles are
+    bounded by the bucket count, not the number of distinct prompt lengths.
+    ``last_idx`` [B] is the index of the chunk's last REAL token (positions
+    past it are bucket padding: their cache writes are routed to the scratch
+    page and their keys masked out of the attention). Only the final chunk's
+    logits are meaningful (the engine samples the first token from them).
+
+    Pure-MLA + paged caches only — the same constraint as the engine."""
+    bad = [k for k in cfg.layer_pattern if k != "mla"]
+    if bad or not cfg.kv_paged:
+        raise ValueError(
+            "chunked_prefill drives the paged MLA pipeline; layer pattern "
+            f"{cfg.layer_pattern} (kv_paged={cfg.kv_paged}) is unsupported")
+    B, C = tokens.shape
+    valid = jnp.arange(C)[None, :] <= last_idx[:, None]          # [B, C]
+    x = L.embed(params["embed"], tokens)
+    new_state = dict(state)
+
+    if cfg.n_superblocks > 0:
+        def step(x, inputs):
+            block_params, block_state = inputs
+            new_states = []
+            for i in range(cfg.pattern_len):
+                x, s = _chunked_prefill_mla_layer(
+                    block_params[i], cfg, x, block_state[i], chunk_start,
+                    valid)
+                new_states.append(s)
+            return x, new_states
+
+        if cfg.cost_exact:
+            outs = []
+            for i in range(cfg.n_superblocks):
+                bp = jax.tree.map(lambda a: a[i], params["scanned"])
+                bs = jax.tree.map(lambda a: a[i], state["scanned"])
+                x, ns = step(x, (bp, bs))
+                outs.append(ns)
+            new_state["scanned"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, scanned_states = jax.lax.scan(
+                step, x, (params["scanned"], state["scanned"]))
+            new_state["scanned"] = scanned_states
+    tail_states = []
+    for p, s in zip(params["tail"], state["tail"]):
+        x, s = _chunked_prefill_mla_layer(p, cfg, x, s, chunk_start, valid)
+        tail_states.append(s)
+    new_state["tail"] = tail_states
+
+    x_last = jnp.take_along_axis(
+        x, last_idx[:, None, None].astype(jnp.int32),
+        axis=1)[:, 0]                                             # [B, d]
+    x_last = L.rms_norm(x_last, params["ln_f"])
     table = params.get("unembed", params["embed"])
     logits = jnp.einsum("bd,vd->bv", x_last.astype(jnp.float32),
                         table.astype(jnp.float32))

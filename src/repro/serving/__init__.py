@@ -1,10 +1,12 @@
-"""Continuous-batching serving engine (ISSUE 4 tentpole).
+"""Continuous-batching serving engine.
 
 ``PageAllocator`` (free-list + refcounted prefix sharing over the shared
 ``PagedMLAPool``), ``Scheduler`` (FCFS request lifecycle over fixed decode
-slots), and ``ServingEngine`` (admit → batched prefill → slot-based jitted
-decode → retire; the decode step is compiled once for the slot array, never
-recompiled as the request population changes).
+slots, with evict-to-requeue instead of terminal eviction), and
+``ServingEngine`` (admit → chunked or monolithic prefill → slot-based jitted
+decode with donated state buffers → retire; the decode step is compiled once
+for the slot array, chunked prefill compiles are bounded by the power-of-two
+bucket count, never one per prompt length).
 """
 from repro.serving.allocator import AllocStats, PageAllocator  # noqa: F401
 from repro.serving.engine import (EngineConfig, RequestResult,  # noqa: F401

@@ -1,34 +1,50 @@
 """Continuous-batching serving engine over the shared FP8 paged pool.
 
 The engine drives the EXISTING jitted steps (``steps.make_prefill_step`` /
-``steps.make_decode_step`` — the same ``transformer.decode_step`` the
-static-batch ``serve.generate`` paths run, dispatching attention through the
-decode-backend registry) over a *dynamic* request population:
+``steps.make_chunked_prefill_step`` / ``steps.make_decode_step`` — the same
+``transformer`` code paths the static-batch ``serve.generate`` runs,
+dispatching attention through the decode-backend registry) over a *dynamic*
+request population:
 
   * the decode step is compiled ONCE for a fixed ``max_batch`` slot array and
-    a fixed shared pool; requests flow through slots with no *decode*
-    recompiles — idle slots are parked on the allocator's scratch page and
-    masked by ``seq_lens`` (the same pinning idea the fused scan uses for
-    EOS rows). Prefill still retraces per distinct (group, prompt-length)
-    shape; bucketing that is a ROADMAP follow-on;
+    a fixed shared pool, with the decode-state buffers DONATED through the
+    jit boundary so XLA updates the pool pages in place each iteration (no
+    per-step pool copy); requests flow through slots with no *decode*
+    recompiles — idle and still-prefilling slots are parked on the
+    allocator's scratch page and masked by ``seq_lens``;
+  * prompt admission is CHUNKED (``ModelConfig.prefill_chunk > 0``): each
+    engine step runs at most a token-budgeted amount of prefill work —
+    granted one bucketed chunk per PREFILLING request per FCFS round-robin
+    pass — alongside the ongoing slot-batched decode, so a long-context
+    arrival never stalls in-flight decodes for a whole monolithic prefill.
+    Later chunks attend to earlier chunks' already-quantized FP8 pages
+    through the fused fetch-dequant path (no bf16 re-materialization of the
+    prefix), and chunk shapes are bucketed to powers of two up to
+    ``prefill_chunk`` so the engine compiles O(log chunk) prefill variants
+    total instead of one per prompt length. ``prefill_chunk == 0`` keeps the
+    monolithic arrival-grouped prefill (the benchmark twin);
   * admission/retirement and the page tables are host-side bookkeeping
     (``allocator.PageAllocator`` free list + refcounted prefix sharing,
     ``scheduler.Scheduler`` FCFS lifecycle); each step the engine pushes its
     slot→pages mapping into the jitted state via ``kvcache.pool_with_tables``;
-  * prefill is batched per admission group (same prompt length → one bulk
-    RoPE-aware quantized write into the allocated pages). Shared prefix pages
-    are rewritten with bit-identical values (same tokens, same positions,
-    deterministic quantization), which is what makes prefix sharing exact:
-    the savings are pool pages, not changed numerics.
+  * eviction under pool pressure is requeue, not loss: the victim's pages
+    are freed but its generated tokens are kept, and its next admission
+    replay-prefills prompt + generated tokens before resuming decode;
+  * every step makes ONE host transfer: sampled/argmax tokens and the
+    per-row finite flags come back together from a single jitted
+    postprocess call (``jax.device_get`` of the pair), instead of separate
+    per-purpose pulls.
 
 Greedy engine output is token-identical to the static-batch ``generate``
 oracle for the same prompts/gen lengths (pinned by tests/test_serving.py);
-MLA decode is memory-bound, so keeping many concurrent requests on one
-weight pass is where the paper's pipeline pays off at serving time.
+MLA decode is memory-bound while prefill is compute-bound, which is exactly
+why piggybacking bounded prefill chunks onto decode steps recovers
+throughput (see PAPERS.md, "Hardware-Centric Analysis of DeepSeek's MLA").
 
-Virtual time = engine steps (arrival times are given in steps; no wall-clock
-in traced code — wall-clock is only sampled host-side for throughput/TTFT
-reporting), so a seeded workload schedules identically run-to-run.
+Virtual time = engine steps; the engine additionally accounts WORK UNITS
+(tokens of prefill/decode compute) per step, which is what the serving
+simulator's decode-stall / TTFT twins compare — deterministic, unlike wall
+clock (which is also sampled host-side for throughput reporting).
 """
 from __future__ import annotations
 
@@ -58,6 +74,12 @@ class EngineConfig:
     #                                max_batch sequences at full span + scratch)
     max_pages_per_seq: int = 8     # page-table width (max context in pages)
     prefix_sharing: bool = True
+    # chunked-prefill token budget per engine step (only with
+    # ModelConfig.prefill_chunk > 0): each step grants bucketed chunks to
+    # PREFILLING requests in FCFS round-robin passes until the budget is
+    # spent. 0 = exactly one chunk per PREFILLING request per step. The FCFS
+    # head always gets at least one chunk per step (progress guarantee).
+    prefill_budget: int = 0
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 0.0
@@ -78,12 +100,14 @@ class RequestResult:
     prompt_len: int
     ttft_steps: int                # first token step - arrival (virtual)
     latency_steps: int             # finish step - arrival (virtual)
+    ttft_work: int                 # work units (tokens) arrival -> first token
+    requeues: int                  # evict-to-requeue round trips
     ttft_s: float                  # wall-clock first-token latency
     latency_s: float               # wall-clock total latency
 
 
 class ServingEngine:
-    """Admit → prefill → decode → retire over one shared paged pool."""
+    """Admit → (chunked) prefill → decode → retire over one shared pool."""
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
         bad = [k for k in cfg.layer_pattern if k != "mla"]
@@ -92,8 +116,11 @@ class ServingEngine:
                 "the serving engine drives the paged MLA decode path; "
                 f"layer pattern {cfg.layer_pattern} / aux tokens "
                 f"{cfg.n_aux_tokens} are not pure-MLA")
+        if cfg.prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0")
         self.ecfg = ecfg
         self.page = cfg.page_size
+        self.chunk = cfg.prefill_chunk           # 0 = monolithic prefill
         self.span_pages = ecfg.max_pages_per_seq
         self.n_pages = ecfg.resolved_n_pages()
         self.cfg = dataclasses.replace(cfg, kv_paged=True,
@@ -101,30 +128,60 @@ class ServingEngine:
         self.params = params
         span_tokens = self.span_pages * self.page
         self.state = T.init_decode_state(self.cfg, ecfg.max_batch, span_tokens)
-        self._prefill_fn = jax.jit(ST.make_prefill_step(self.cfg))
-        self._decode_fn = jax.jit(ST.make_decode_step(self.cfg))
+
+        # prefill trace counter: the wrapped python body runs at TRACE time
+        # only, so this counts compiles — the recompile-bound test asserts it
+        # stays <= the bucket count across any mix of prompt lengths
+        self.prefill_traces = 0
+
+        def _counted(fn):
+            def wrapper(*args):
+                self.prefill_traces += 1
+                return fn(*args)
+            return wrapper
+
+        # the state argument is DONATED on every jitted step: the pool's
+        # page buffers are updated in place instead of copied per call (the
+        # engine re-adopts the returned buffers immediately, so the
+        # invalidated inputs are never read again)
+        self._prefill_fn = jax.jit(_counted(ST.make_prefill_step(self.cfg)),
+                                   donate_argnums=(2,))
+        self._chunk_fn = jax.jit(
+            _counted(ST.make_chunked_prefill_step(self.cfg)),
+            donate_argnums=(2,))
+        self._decode_fn = jax.jit(ST.make_decode_step(self.cfg),
+                                  donate_argnums=(2,))
+        self._post_fn = jax.jit(self._make_postprocess())
 
         self.allocator = PageAllocator(self.n_pages, self.page,
                                        prefix_sharing=ecfg.prefix_sharing)
         self.scheduler = Scheduler(ecfg.max_batch)
         self.table = np.zeros((ecfg.max_batch, self.span_pages), np.int32)
         self.last_tok = np.zeros((ecfg.max_batch,), np.int32)
-        self.key = jax.random.PRNGKey(ecfg.seed)
 
         # warm the decode jit cache on the all-idle state (every slot parked
-        # on the scratch page) so the first REAL decode step — and the
-        # decode_tok_per_s window — never pays trace/compile; the returned
-        # state is discarded, so the warm-up's scratch writes never land
-        self._decode_fn(
+        # on the scratch page); the input buffers are donated, so the warmed
+        # state's pool pages are adopted back (its writes land on the
+        # scratch page only, which is never read)
+        _, warm = self._decode_fn(
             self.params, jnp.zeros((ecfg.max_batch,), jnp.int32),
             self._state_with_tables(self.table,
                                     np.zeros((ecfg.max_batch,), np.int32)),
-            jnp.zeros((ecfg.max_batch,), jnp.int32))[0].block_until_ready()
+            jnp.zeros((ecfg.max_batch,), jnp.int32))
+        jax.block_until_ready(warm)
+        self.state = warm
 
         self.step_idx = 0
         self.decode_tokens = 0          # tokens produced by decode steps
         self.decode_seconds = 0.0
+        self.prefill_tokens = 0         # padded chunk/prompt tokens processed
+        self.prefill_seconds = 0.0
         self.evictions = 0
+        self.work_done = 0              # total work units (tokens) processed
+        self.prefill_tokens_series: list[int] = []  # prefill work per step
+        self.stall_tokens_series: list[int] = []   # prefill work per step
+        #                                            while decodes in flight
+        self.stall_seconds = 0.0
         self.util_series: list[float] = []
         self._wall: dict[int, dict[str, float]] = {}   # rid -> wall marks
 
@@ -155,6 +212,7 @@ class ServingEngine:
                 f"request {req.rid}: {need} pages exceed pool capacity "
                 f"{self.allocator.capacity}")
         self._wall[req.rid] = {"arrival": time.time()}
+        req.arrival_work = self.work_done
         self.scheduler.submit(req)
 
     # ------------------------------------------------------------------
@@ -172,105 +230,201 @@ class ServingEngine:
             lambda pool: pool_with_tables(pool, table, seq_lens), self.state)
 
     def _adopt_pool_data(self, new_state) -> None:
-        """Take the (functionally updated) pool page data from a prefill
-        call back into the engine state; tables/seq_lens stay host-owned."""
+        """Take the (in-place-updated, donated) pool page data from a
+        prefill call back into the engine state; tables/seq_lens stay
+        host-owned."""
         self.state = self._map_pools(
             lambda old, new: old._replace(content=new.content, rope=new.rope,
                                           scale=new.scale),
             self.state, new_state)
 
-    def _seq_lens(self) -> np.ndarray:
-        lens = np.zeros((self.ecfg.max_batch,), np.int32)
-        for r in self.scheduler.active:
-            lens[r.slot] = r.seq_len
-        return lens
-
     # ------------------------------------------------------------------
-    # sampling
+    # sampling + host sync (ONE device_get per call)
     # ------------------------------------------------------------------
 
-    def _pick_tokens(self, rows: jax.Array, reqs: list[Request]) -> np.ndarray:
-        """Next token for each request (``rows`` [len(reqs), V] aligned with
-        ``reqs``), ONE dispatch + host transfer for the whole set. Sampled
-        draws use per-request keys folded by token index, so a request's
-        continuation is independent of what it happens to be co-batched
-        with — reproducible run-to-run for a fixed seed regardless of
-        arrival interleaving."""
+    def _make_postprocess(self):
+        """Jitted next-token + finiteness postprocess over [B, V] logits:
+        tokens and per-row finite flags come back in a single transfer.
+        Sampled draws use per-request keys folded by token index, so a
+        request's continuation is independent of what it happens to be
+        co-batched with — reproducible run-to-run for a fixed seed
+        regardless of arrival interleaving."""
         e = self.ecfg
-        if e.temperature <= 0.0:
-            return np.asarray(jnp.argmax(rows, -1))
-        keys = jnp.stack([
-            jax.random.fold_in(jax.random.fold_in(self.key, r.rid),
-                               len(r.out_tokens)) for r in reqs])
-        draw = jax.vmap(lambda row, k: ST.sample_logits(
-            row[None], k, e.temperature, e.top_k, e.top_p)[0])
-        return np.asarray(draw(rows, keys))
+        base_key = jax.random.PRNGKey(e.seed)
+
+        def post(rows, rids, counts):
+            finite = jnp.all(jnp.isfinite(rows), axis=-1)
+            if e.temperature <= 0.0:
+                toks = jnp.argmax(rows, -1).astype(jnp.int32)
+            else:
+                keys = jax.vmap(lambda r, c: jax.random.fold_in(
+                    jax.random.fold_in(base_key, r), c))(rids, counts)
+                toks = jax.vmap(lambda row, k: ST.sample_logits(
+                    row[None], k, e.temperature, e.top_k, e.top_p)[0])(
+                        rows, keys)
+            return toks, finite
+
+        return post
+
+    def _postprocess(self, rows: jax.Array, reqs: list[Request]):
+        """``rows`` [len(reqs), V] aligned with ``reqs`` -> (tokens [n] np,
+        finite [n] np) — one dispatch + ONE host transfer for the whole
+        batch (tokens and NaN flags ride together)."""
+        rids = jnp.asarray([r.rid for r in reqs], jnp.int32)
+        counts = jnp.asarray([len(r.out_tokens) for r in reqs], jnp.int32)
+        toks, finite = jax.device_get(self._post_fn(rows, rids, counts))
+        return toks, finite
 
     def _emit(self, req: Request, tok: int) -> None:
         req.out_tokens.append(tok)
         self.last_tok[req.slot] = tok
         if len(req.out_tokens) == 1:
             req.first_token_step = self.step_idx
+            req.first_token_work = self.work_done
             self._wall[req.rid]["first"] = time.time()
         eos_hit = self.ecfg.eos_id is not None and tok == self.ecfg.eos_id
         if len(req.out_tokens) >= req.max_new or eos_hit:
-            self._retire(req, Status.DONE)
+            self._retire(req)
 
-    def _retire(self, req: Request, status: Status) -> None:
+    def _retire(self, req: Request) -> None:
         slot = req.slot
-        self.scheduler.retire(req, status, self.allocator, self.step_idx)
+        self.scheduler.retire(req, self.step_idx, self.allocator)
         self._wall[req.rid]["finish"] = time.time()
         if slot >= 0:
             self.table[slot] = 0          # park the slot on the scratch page
             self.last_tok[slot] = 0
 
+    def _requeue(self, req: Request) -> None:
+        """Evict-to-requeue: pages freed, generated tokens kept; the request
+        replays prompt + generated tokens at its next admission."""
+        slot = req.slot
+        self.scheduler.requeue(req, self.allocator)
+        if slot >= 0:
+            self.table[slot] = 0
+            self.last_tok[slot] = 0
+
     # ------------------------------------------------------------------
-    # prefill
+    # admission + prefill (monolithic OR chunked)
     # ------------------------------------------------------------------
 
-    def _prefill_group(self, group: list[Request]) -> None:
-        """Batched prefill of same-length admitted requests: one bulk
-        quantized write through each request's freshly-written table row."""
-        for r in group:
+    def _admit(self) -> list[Request]:
+        admitted = self.scheduler.admit(self.allocator, self.step_idx)
+        for r in admitted:
             row = np.zeros((self.span_pages,), np.int32)
             row[:len(r.pages)] = r.pages
             self.table[r.slot] = row
-        rows = np.stack([self.table[r.slot] for r in group])
-        prompts = jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32)
+        return admitted
+
+    def _finish_prefill(self, req: Request, logits_row) -> None:
+        """A request's prefill is complete: replayed requests resume from
+        their pending last token (NO re-sampling — the token they sampled
+        before eviction stands), fresh requests sample their first token
+        from the final chunk's logits."""
+        req.status = Status.DECODE
+        if req.out_tokens:                        # replay after requeue
+            self.last_tok[req.slot] = req.out_tokens[-1]
+            return
+        toks, finite = self._postprocess(logits_row, [req])
+        if not finite[0]:
+            raise FloatingPointError(
+                f"non-finite prefill logits for request {req.rid}")
+        self._emit(req, int(toks[0]))
+
+    def _run_chunk(self, req: Request) -> int:
+        """One bucketed chunk of ``req``'s (effective) prompt through the
+        jitted chunk step. Returns the work units spent (padded width)."""
+        eff = req.effective_prompt
+        remaining = len(eff) - req.prefill_pos
+        width = min(self.chunk, remaining)
+        bucket = ST.bucket_for(width, self.chunk)
+        tok = np.zeros((1, bucket), np.int32)
+        tok[0, :width] = eff[req.prefill_pos:req.prefill_pos + width]
         view = self._map_pools(
             lambda pool: pool_with_tables(
-                pool, rows, np.zeros((len(group),), np.int32)), self.state)
-        logits, new_state = self._prefill_fn(self.params, prompts, view)
-        finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
-        if not finite.all():
-            raise FloatingPointError(
-                f"non-finite prefill logits for request(s) "
-                f"{[r.rid for r, ok in zip(group, finite) if not ok]}")
+                pool, self.table[req.slot][None],
+                np.asarray([req.prefill_pos], np.int32)), self.state)
+        t0 = time.time()
+        logits, new_state = self._chunk_fn(
+            self.params, jnp.asarray(tok), view,
+            jnp.asarray([req.prefill_pos], jnp.int32),
+            jnp.asarray([width - 1], jnp.int32))
+        logits.block_until_ready()
+        self.prefill_seconds += time.time() - t0
         self._adopt_pool_data(new_state)
-        toks = self._pick_tokens(logits, group)
-        for r, tok in zip(group, toks):
-            r.status = Status.DECODE
-            self._emit(r, int(tok))
+        req.prefill_pos += width
+        if req.prefill_pos == len(eff):
+            self._finish_prefill(req, logits)
+        return bucket
 
-    def _admit_and_prefill(self) -> None:
-        admitted = self.scheduler.admit(self.allocator, self.step_idx)
+    def _prefill_chunked(self) -> int:
+        """Budgeted chunk scheduling: FCFS round-robin passes over the
+        PREFILLING requests, one bucketed chunk each, until the per-step
+        token budget is spent (0 = exactly one pass). The FCFS head always
+        gets at least one chunk, so prefill can never starve."""
+        budget = self.ecfg.prefill_budget
+        spent = 0
+        while True:
+            reqs = self.scheduler.prefilling
+            if not reqs:
+                break
+            for req in reqs:
+                if budget > 0 and spent and spent >= budget:
+                    return spent
+                spent += self._run_chunk(req)
+            if budget <= 0:
+                break                       # exactly one round-robin pass
+        return spent
+
+    def _prefill_monolithic(self, admitted: list[Request]) -> int:
+        """PR-4 style one-shot prefill of this step's admissions, batched by
+        (effective) prompt length — the chunked path's benchmark twin."""
         by_len: dict[int, list[Request]] = {}
         for r in admitted:
-            by_len.setdefault(r.prompt_len, []).append(r)
-        for group in by_len.values():
-            self._prefill_group(group)
+            by_len.setdefault(len(r.effective_prompt), []).append(r)
+        spent = 0
+        for length, group in by_len.items():
+            rows = np.stack([self.table[r.slot] for r in group])
+            prompts = jnp.asarray(
+                np.stack([r.effective_prompt for r in group]), jnp.int32)
+            view = self._map_pools(
+                lambda pool: pool_with_tables(
+                    pool, rows, np.zeros((len(group),), np.int32)),
+                self.state)
+            t0 = time.time()
+            logits, new_state = self._prefill_fn(self.params, prompts, view)
+            logits.block_until_ready()
+            self.prefill_seconds += time.time() - t0
+            self._adopt_pool_data(new_state)
+            fresh = [r for r in group if not r.out_tokens]
+            replay = [r for r in group if r.out_tokens]
+            for r in replay:
+                r.status = Status.DECODE
+                self.last_tok[r.slot] = r.out_tokens[-1]
+            if fresh:
+                idx = [group.index(r) for r in fresh]
+                toks, finite = self._postprocess(logits[np.asarray(idx)],
+                                                 fresh)
+                bad = [r.rid for r, ok in zip(fresh, finite) if not ok]
+                if bad:
+                    raise FloatingPointError(
+                        f"non-finite prefill logits for request(s) {bad}")
+                for r, tok in zip(fresh, toks):
+                    r.status = Status.DECODE
+                    self._emit(r, int(tok))
+            spent += length * len(group)
+        return spent
 
     # ------------------------------------------------------------------
     # growth / eviction
     # ------------------------------------------------------------------
 
     def _ensure_capacity(self) -> None:
-        """Before a decode step, every active request must have a page slot
-        for the token the step will append (position ``seq_len``). Grow by
-        one page on demand; when the pool is exhausted, evict the youngest
-        active request (FCFS fairness) and retry."""
+        """Before a decode step, every decoding request must have a page
+        slot for the token the step will append (position ``seq_len``).
+        Grow by one page on demand; when the pool is exhausted, requeue the
+        youngest active request (FCFS fairness) and retry."""
         for req in list(self.scheduler.active):
-            if req.done:
+            if req.status is not Status.DECODE:
                 continue
             while req.seq_len >= len(req.pages) * self.page:
                 assert len(req.pages) < self.span_pages, \
@@ -282,7 +436,7 @@ class ServingEngine:
                     continue
                 victim = self.scheduler.eviction_victim()
                 self.evictions += 1
-                self._retire(victim, Status.EVICTED)
+                self._requeue(victim)
                 if victim is req:
                     break
 
@@ -291,34 +445,55 @@ class ServingEngine:
     # ------------------------------------------------------------------
 
     def step(self) -> None:
-        """One engine iteration: admit + prefill, grow, one decode step for
-        every active slot, retire finished requests. Advances virtual time
-        even when idle (so future arrivals are reached)."""
-        self._admit_and_prefill()
+        """One engine iteration: admit, run (budgeted) prefill work, grow,
+        one decode step for every decoding slot, retire finished requests.
+        Advances virtual time even when idle (so future arrivals are
+        reached)."""
+        decode_in_flight = any(r.status is Status.DECODE
+                               for r in self.scheduler.active)
+        admitted = self._admit()
+        t_pre = time.time()
+        if self.chunk > 0:
+            spent = self._prefill_chunked()
+        else:
+            spent = self._prefill_monolithic(admitted)
+        self.prefill_tokens += spent
+        self.work_done += spent
+        self.prefill_tokens_series.append(spent)
+        # decode-stall accounting: prefill work that ran while decodes were
+        # in flight is exactly the work that would have stalled them
+        self.stall_tokens_series.append(spent if decode_in_flight else 0)
+        if decode_in_flight:
+            self.stall_seconds += time.time() - t_pre
+
         self._ensure_capacity()
         active = [r for r in self.scheduler.active
-                  if r.status == Status.DECODE]
+                  if r.status is Status.DECODE]
         if active:
-            seq_lens = self._seq_lens()
-            state = self._state_with_tables(self.table, seq_lens)
+            seq_lens = np.zeros((self.ecfg.max_batch,), np.int32)
+            table_view = np.zeros_like(self.table)
+            for r in active:
+                seq_lens[r.slot] = r.seq_len
+                table_view[r.slot] = self.table[r.slot]
+            state = self._state_with_tables(table_view, seq_lens)
             t0 = time.time()
             logits, self.state = self._decode_fn(
                 self.params, jnp.asarray(self.last_tok), state,
                 jnp.asarray(seq_lens))
-            logits.block_until_ready()
+            slots = np.array([r.slot for r in active], np.int32)
+            toks, finite = self._postprocess(logits[slots], active)
             self.decode_seconds += time.time() - t0
-            finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
-            bad = [r.rid for r in active if not finite[r.slot]]
+            bad = [r.rid for r, ok in zip(active, finite) if not ok]
             if bad:
                 raise FloatingPointError(
                     f"non-finite decode logits at step {self.step_idx} for "
                     f"request(s) {bad}")
-            slots = np.array([r.slot for r in active], np.int32)
-            toks = self._pick_tokens(logits[slots], active)
+            self.decode_tokens += len(active)
+            self.work_done += len(active)
             for r, tok in zip(active, toks):
-                self.decode_tokens += 1
                 self._emit(r, int(tok))
-        live = sum(r.seq_len for r in self.scheduler.active)
+        live = sum(r.seq_len if r.status is Status.DECODE else r.prefill_pos
+                   for r in self.scheduler.active)
         self.util_series.append(self.allocator.stats(live).utilization)
         self.step_idx += 1
 
@@ -343,6 +518,9 @@ class ServingEngine:
                 ttft_steps=(r.first_token_step - int(r.arrival)
                             if r.first_token_step >= 0 else -1),
                 latency_steps=r.finish_step - int(r.arrival),
+                ttft_work=(r.first_token_work - r.arrival_work
+                           if r.first_token_work >= 0 else -1),
+                requeues=r.requeues,
                 ttft_s=w.get("first", w["finish"]) - w["arrival"],
                 latency_s=w["finish"] - w["arrival"]))
         return out
@@ -360,6 +538,22 @@ class ServingEngine:
             "decode_tokens": self.decode_tokens,
             "decode_tok_per_s": tps,
             "evictions": self.evictions,
+            "requeues": self.scheduler.requeues,
+            "prefill": {
+                "mode": "chunked" if self.chunk else "monolithic",
+                "chunk": self.chunk,
+                "budget": self.ecfg.prefill_budget,
+                "traces": self.prefill_traces,
+                "tokens": self.prefill_tokens,
+                "tokens_series": self.prefill_tokens_series,
+                "seconds": self.prefill_seconds,
+            },
+            "work": {
+                "total": self.work_done,
+                "stall_tokens_total": int(sum(self.stall_tokens_series)),
+                "stall_tokens_series": self.stall_tokens_series,
+                "stall_seconds": self.stall_seconds,
+            },
             "pages": {
                 "capacity": stats.capacity,
                 "free": stats.free,

@@ -2,19 +2,30 @@
 
 Lifecycle::
 
-    QUEUED --admit--> PREFILL --first token--> DECODE --EOS/max_new--> DONE
-                                                  \\--pool exhausted--> EVICTED
+    QUEUED --admit--> PREFILLING --chunks--> DECODE --EOS/max_new--> DONE
+       ^                                        |
+       +------------- evict-to-requeue ---------+
+          (pages freed; generated tokens kept for replay-prefill)
 
 Admission is strict FCFS: the head of the queue is admitted as soon as (a) a
 batch slot is free and (b) the allocator can cover its prompt's non-shared
 pages; if the head cannot be admitted nothing behind it is considered (no
 head-of-line skipping — later requests never starve an earlier one of pages).
+A request evicted under pool pressure is NOT terminal: its pages are freed
+and it re-enters the queue (at the back, so it cannot immediately re-trigger
+the eviction that displaced it) with its generated-so-far tokens kept; on
+readmission it replay-prefills ``effective_prompt`` (prompt + generated
+tokens already landed in the cache) and resumes decoding from its pending
+last token.
 
 Slots are positions in the fixed ``max_batch`` the jitted decode step was
 compiled for; finished slots are recycled in place (the engine zeroes the
 slot's page-table row onto the scratch page), so the decode step always sees
 static shapes and the active set is carried as a mask — the same pinning
-idea the fused scan uses for EOS-finished rows.
+idea the fused scan uses for EOS-finished rows. A PREFILLING request holds
+its slot while its chunk cursor (``prefill_pos``) walks the prompt, but the
+decode step sees that slot parked on the scratch page until the cursor
+reaches the end.
 
 Host-side bookkeeping only; nothing here is traced.
 """
@@ -29,10 +40,9 @@ import numpy as np
 
 class Status(enum.Enum):
     QUEUED = "queued"
-    PREFILL = "prefill"
+    PREFILLING = "prefilling"      # chunk cursor mid-prompt (holds a slot)
     DECODE = "decode"
     DONE = "done"
-    EVICTED = "evicted"
 
 
 @dataclasses.dataclass
@@ -45,17 +55,32 @@ class Request:
     arrival: float = 0.0           # virtual arrival time (engine steps)
 
     status: Status = Status.QUEUED
-    slot: int = -1                 # batch slot while PREFILL/DECODE
+    slot: int = -1                 # batch slot while PREFILLING/DECODE
     pages: list[int] = dataclasses.field(default_factory=list)
     out_tokens: list[int] = dataclasses.field(default_factory=list)
+    prefill_pos: int = 0           # chunk cursor into effective_prompt
+    requeues: int = 0              # evict-to-requeue round trips
     # timing (virtual steps; the engine also records wall-clock spans)
     admit_step: int = -1
     first_token_step: int = -1     # TTFT = first_token_step - arrival
     finish_step: int = -1
+    arrival_work: int = 0          # engine work units (tokens) at submit
+    first_token_work: int = -1     # engine work units at first token
 
     @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
+
+    @property
+    def effective_prompt(self) -> np.ndarray:
+        """What (re)admission must land in the cache: the prompt plus every
+        generated token that had been appended before eviction. The LAST
+        sampled token is never appended (the next decode step feeds it), so
+        it stays pending in the engine's ``last_tok`` slot instead."""
+        if not self.out_tokens:
+            return self.prompt
+        return np.concatenate([
+            self.prompt, np.asarray(self.out_tokens[:-1], np.int32)])
 
     @property
     def seq_len(self) -> int:
@@ -66,7 +91,7 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.status in (Status.DONE, Status.EVICTED)
+        return self.status is Status.DONE
 
 
 class Scheduler:
@@ -77,6 +102,7 @@ class Scheduler:
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * self.max_batch
         self.finished: list[Request] = []
+        self.requeues = 0              # cumulative evict-to-requeue count
 
     # -- queue --------------------------------------------------------------
 
@@ -93,6 +119,14 @@ class Scheduler:
         return [r for r in self.slots if r is not None]
 
     @property
+    def prefilling(self) -> list[Request]:
+        """PREFILLING requests in admission order (the chunk scheduler's
+        FCFS round-robin order)."""
+        return sorted((r for r in self.slots
+                       if r is not None and r.status is Status.PREFILLING),
+                      key=lambda r: (r.admit_step, r.rid))
+
+    @property
     def drained(self) -> bool:
         return not self.queue and self.num_active == 0
 
@@ -106,34 +140,50 @@ class Scheduler:
 
     def admit(self, allocator, step: int) -> list[Request]:
         """Admit queue-head requests while a slot is free and the allocator
-        covers their prompts. Admitted requests get a slot + page run and
-        move to PREFILL; the engine then runs their prefill."""
+        covers their (effective) prompts. Admitted requests get a slot +
+        page run, a reset chunk cursor, and move to PREFILLING; the engine
+        then runs their prefill (monolithically or chunk by chunk)."""
         admitted: list[Request] = []
         while self.queue:
             slot = self._free_slot()
             if slot < 0:
                 break
             head = self.queue[0]
-            pages = allocator.alloc_prompt(head.prompt)
+            pages = allocator.alloc_prompt(head.effective_prompt)
             if pages is None:
                 break                      # strict FCFS: no skipping past head
             self.queue.popleft()
-            head.status = Status.PREFILL
+            head.status = Status.PREFILLING
             head.slot, head.pages, head.admit_step = slot, pages, step
+            head.prefill_pos = 0
             self.slots[slot] = head
             admitted.append(head)
         return admitted
 
-    def retire(self, req: Request, status: Status, allocator, step: int) -> None:
-        """DONE or EVICTED: release pages, recycle the slot in place."""
-        assert status in (Status.DONE, Status.EVICTED)
+    def retire(self, req: Request, step: int, allocator) -> None:
+        """DONE: release pages, recycle the slot in place."""
         allocator.free(req.pages)
         req.pages = []
-        req.status, req.finish_step = status, step
+        req.status, req.finish_step = Status.DONE, step
         if req.slot >= 0:
             self.slots[req.slot] = None
             req.slot = -1
         self.finished.append(req)
+
+    def requeue(self, req: Request, allocator) -> None:
+        """Evict-to-requeue: free the pages, keep the generated tokens, and
+        send the request to the BACK of the queue (so it cannot instantly
+        re-trigger the eviction that displaced it). Its next admission
+        replay-prefills ``effective_prompt``."""
+        allocator.free(req.pages)
+        req.pages = []
+        req.prefill_pos = 0
+        req.requeues += 1
+        self.requeues += 1
+        if req.slot >= 0:
+            self.slots[req.slot] = None
+            req.slot = -1
+        self.submit(req)
 
     def eviction_victim(self) -> Request | None:
         """Youngest active request (latest admission) — evicting it frees

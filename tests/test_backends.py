@@ -317,6 +317,60 @@ def test_eos_pins_every_token_after_first_hit(fused):
     assert (toks[0, 2:] == eos).all()
 
 
+@pytest.mark.parametrize("paged", [False, True], ids=["contiguous", "paged"])
+def test_fused_gate_finished_token_identical_and_freezes_lens(paged):
+    """Finished-row gating in the fused scan: identical tokens with the gate
+    on or off, but a row that hit EOS stops appending — its cache seq_lens
+    freeze while unfinished rows keep growing (that frozen length is what
+    lets the split-KV early exit stop streaming the row's KV blocks)."""
+    cfg = dataclasses.replace(get_smoke_config("mla-7b"), kv_paged=paged)
+    key = jax.random.PRNGKey(4)
+    params = T.init_model(key, cfg)
+    B, S, gen = 3, 16, 8
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    free, _ = generate(cfg, params, prompts, gen)
+    eos = int(np.asarray(free)[0, 2])     # row 0 finishes at step 2
+    max_len = _decode_capacity(cfg, S, gen)
+    runs = {}
+    for gate in (True, False):
+        state = T.init_decode_state(cfg, B, max_len)
+        logits, state = jax.jit(ST.make_prefill_step(cfg))(params, prompts,
+                                                           state)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        fused = jax.jit(ST.make_fused_decode(cfg, gen - 1, eos_id=eos,
+                                             gate_finished=gate),
+                        donate_argnums=(2,))
+        toks, state_out, ok = fused(params, tok, state,
+                                    jnp.full((B,), S, jnp.int32))
+        assert bool(ok), "gated finished rows must stay finite"
+        lens = np.asarray(state_out["scanned"][0].seq_lens)[0]
+        runs[gate] = (np.asarray(toks), lens)
+    np.testing.assert_array_equal(runs[True][0], runs[False][0])
+    gated, ungated = runs[True][1], runs[False][1]
+    # ungated: every row appended every step; gated: row 0 froze after EOS
+    assert (ungated == S + gen - 1).all()
+    assert gated[0] < S + gen - 1
+    # appends stop once the done mask is set (the step AFTER the first EOS):
+    # resident tokens = prompt + out tokens up to and including the EOS slot
+    out0 = np.concatenate([[int(np.asarray(free)[0, 0])], runs[True][0][0]])
+    hit = int(np.flatnonzero(out0 == eos)[0])
+    assert gated[0] == S + hit
+    assert (gated[1:] == S + gen - 1).all()
+
+
+def test_fused_gate_without_eos_is_bit_identical():
+    """gate_finished with no eos_id is a no-op: the gated program must be
+    BIT-identical to the ungated one (active mask all-true threads through
+    every append unchanged)."""
+    cfg = get_smoke_config("mla-7b")
+    key = jax.random.PRNGKey(5)
+    params = T.init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size, jnp.int32)
+    a, _ = generate_fused(cfg, params, prompts, 5)
+    b, _ = generate(cfg, params, prompts, 5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ---------------------------------------------------------------------------
 # exact page-aligned cache sizing (shared helper)
 # ---------------------------------------------------------------------------
