@@ -53,7 +53,8 @@ from repro.configs import get_smoke_config
 from repro.core.kvcache import page_aligned_capacity
 from repro.launch import steps as ST
 from repro.models import transformer as T
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (EngineConfig, FaultEvent, FaultPlan, Request,
+                           ServingEngine)
 
 
 def make_workload(seed: int, n_requests: int, rate: float, share_ratio: float,
@@ -272,6 +273,79 @@ def run_fused_gating_twin(cfg, params, seed: int, gen: int = 12) -> dict:
     }
 
 
+def run_fault_sweep(cfg, params, seed: int, n_requests: int = 8,
+                    max_batch: int = 4) -> dict:
+    """Survival metrics under deterministic fault injection: the SAME
+    seeded workload run fault-free and then under each FaultPlan scenario.
+    Per scenario: completed / failed-by-reason / rejected counts, recovery
+    metrics (quarantines recovered via the jnp_ref retry, backend-fault
+    fallback steps), whether every page drained, and — the isolation
+    headline — whether every surviving request's tokens are identical to
+    its fault-free twin."""
+    page = cfg.page_size
+    prompt_lens = (2 * page, 3 * page)
+    gen_lens = (page // 2, page)
+    span = page_aligned_capacity(max(prompt_lens) + max(gen_lens), page) \
+        // page
+    pool_pages = max_batch * span + 1
+
+    def run_with(plan, max_queue=0, deadline=None):
+        reqs = make_workload(seed, n_requests, 1.0, 0.5, prompt_lens,
+                             gen_lens, page, cfg.vocab_size)
+        if deadline is not None:
+            for r in reqs:
+                r.ttft_deadline = deadline
+        engine = ServingEngine(cfg, params, EngineConfig(
+            max_batch=max_batch, max_pages_per_seq=span, n_pages=pool_pages,
+            max_queue=max_queue, seed=seed), fault_plan=plan)
+        results = engine.run(reqs)
+        return results, engine.metrics()
+
+    clean, _ = run_with(None)
+    clean_toks = {r.rid: r.tokens for r in clean}
+    scenarios = {
+        "nan_recovered": FaultPlan([FaultEvent("nan_logits", 4, slot=1)]),
+        "nan_sticky": FaultPlan([FaultEvent("nan_logits", 4, slot=1,
+                                            sticky=True)]),
+        "backend_raise": FaultPlan([FaultEvent("backend_raise", 3)]),
+        "alloc_storm": FaultPlan([FaultEvent("alloc_fail", 2, count=3)]),
+        "random_storm": FaultPlan.random(seed, n_steps=16, n_faults=4,
+                                         max_batch=max_batch,
+                                         sticky_ratio=0.5),
+    }
+    out = {"n_requests": n_requests,
+           "clean_completed": sum(r.status == "done" for r in clean)}
+    for name, plan in scenarios.items():
+        kw = {"max_queue": 2, "deadline": 64} if name == "random_storm" \
+            else {}
+        results, m = run_with(plan, **kw)
+        f = m["faults"]
+        done = [r for r in results if r.status == "done"]
+        # survivors must be untouched by the injected faults (and a
+        # recovered quarantine reproduces its fault-free token, because the
+        # jnp_ref retry recomputes the same position on the same cache)
+        survivors_identical = all(r.tokens == clean_toks[r.rid]
+                                  for r in done)
+        by_reason: dict[str, int] = {}
+        for r in results:
+            if r.status != "done":
+                by_reason[r.fail_reason] = by_reason.get(r.fail_reason, 0) + 1
+        out[name] = {
+            "injected": len(f["injected"]),
+            "completed": len(done),
+            "failed_by_reason": by_reason,
+            "rejected": f["rejected"],
+            "quarantined": f["nonfinite_rows"],
+            "recovered_ref": f["recovered_ref"],
+            "backend_fallback_steps": f["ref_fallback_steps"],
+            "deadline_cancelled": f["deadline_cancelled"],
+            "requeues": m["requeues"],
+            "pages_drained": m["pages"]["free"] == m["pages"]["capacity"],
+            "survivors_token_identical": survivors_identical,
+        }
+    return out
+
+
 def write_bench_serving(path: str = "BENCH_serving.json", *, seed: int = 0,
                         arch: str = "mla-7b", n_requests: int = 8,
                         max_batch: int = 4,
@@ -318,6 +392,9 @@ def write_bench_serving(path: str = "BENCH_serving.json", *, seed: int = 0,
         "chunked_prefill": run_chunked_twin(cfg, params, seed,
                                             chunk=page, budget=3 * page),
         "fused_eos_gating": run_fused_gating_twin(cfg, params, seed),
+        "fault_sweep": run_fault_sweep(cfg, params, seed,
+                                       n_requests=n_requests,
+                                       max_batch=max_batch),
     }
     pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")
     return payload
@@ -355,6 +432,16 @@ def main():
     fg = payload["fused_eos_gating"]
     print(f"[serving_sim] fused EOS gating: appends saved "
           f"{fg['appends_saved']}, tokens_equal={fg['tokens_equal']}")
+    fs = payload["fault_sweep"]
+    for name in ("nan_recovered", "nan_sticky", "backend_raise",
+                 "alloc_storm", "random_storm"):
+        s = fs[name]
+        print(f"[serving_sim] fault {name:<14} completed="
+              f"{s['completed']}/{fs['n_requests']} "
+              f"recovered={s['recovered_ref']} "
+              f"failed={s['failed_by_reason']} rejected={s['rejected']} "
+              f"drained={s['pages_drained']} "
+              f"survivors_identical={s['survivors_token_identical']}")
     print(f"[serving_sim] wrote {args.out} ({len(payload['cells'])} cells)")
 
 

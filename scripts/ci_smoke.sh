@@ -19,6 +19,9 @@
 #     parity-gated per prompt-length group against the generate oracle,
 #     and the driver additionally fails if the engine compiled more
 #     prefill variants than the power-of-two bucket count
+#   * fault drills (--inject): NaN-poisoned slot recovered via the jnp_ref
+#     retry, and an injected preemption under --restartable restored from
+#     an engine checkpoint — both parity-gated against the generate oracle
 #   * the serving simulator (synthetic-arrival sweep + chunked-vs-
 #     monolithic and fused-EOS-gating twin runs -> BENCH_serving.json,
 #     uploaded as a CI artifact)
@@ -58,6 +61,19 @@ python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 3 \
 python -m repro.launch.serve --smoke --gen 4 --engine --backend kernel \
     --prefill-chunk 16 --prompt-lens 40,16 --batch 4 --max-batch 2 \
     --seed 2
+
+# fault drills: (1) a NaN injected into one slot's logits mid-decode —
+# the poisoned request must recover via the one-shot jnp_ref retry while
+# every other request stays token-identical to the static-batch oracle;
+# (2) an injected preemption under --restartable — the engine snapshots,
+# run_with_restarts restores from the checkpoint, and the drained run
+# must still be token-identical.  The driver exits non-zero on parity
+# divergence, leaked pool pages, or zero completed requests.
+python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 2 \
+    --arrival-gap 2 --seed 1 --inject nan_logits:4:1
+python -m repro.launch.serve --smoke --gen 8 --engine --max-batch 2 \
+    --arrival-gap 2 --seed 1 --restartable --inject preempt:5 \
+    --ckpt-every 3
 
 # synthetic-arrival serving sweep (rate x prefix-share) -> BENCH_serving.json
 python benchmarks/serving_sim.py --requests 8 --seed 0 \

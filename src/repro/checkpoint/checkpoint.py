@@ -37,7 +37,14 @@ def _flatten_with_names(tree):
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
-                    extra_manifest: dict | None = None) -> str:
+                    extra_manifest: dict | None = None,
+                    keep: int | None = None) -> str:
+    """Write ``<directory>/step_<step>`` atomically. ``keep`` (when set)
+    prunes the directory down to the newest ``keep`` published checkpoints
+    AFTER the new one lands — bounded disk for periodic snapshotting (the
+    serving engine's ``ckpt_every``) without ever deleting the checkpoint
+    a concurrent restore would pick (``latest_checkpoint`` order is the
+    same lexicographic step order pruning uses)."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -62,6 +69,12 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)       # atomic publish
+    if keep is not None and keep >= 1:
+        published = sorted(d for d in os.listdir(directory)
+                           if d.startswith("step_")
+                           and not d.endswith(".tmp"))
+        for stale in published[:-keep]:
+            shutil.rmtree(os.path.join(directory, stale))
     return final
 
 

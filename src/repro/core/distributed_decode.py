@@ -92,7 +92,8 @@ def mla_decode_shard_map(
 
 
 def mla_append_shard_map(mesh, dp_axes, cache: MLACache, cache_cfg,
-                         c_kv: jax.Array, k_r: jax.Array) -> MLACache:
+                         c_kv: jax.Array, k_r: jax.Array,
+                         active: jax.Array | None = None) -> MLACache:
     """Collective-free quantized cache append.
 
     The pjit-level append (vmap'd dynamic_update_slice with per-sequence
@@ -101,6 +102,12 @@ def mla_append_shard_map(mesh, dp_axes, cache: MLACache, cache_cfg,
     cache-sized collective identified in EXPERIMENTS §Perf (it scales with
     cache byte-width, explaining the fp8/int8/bf16 collective ratios).
     Under shard_map each chip scatters into its own batch shard locally.
+
+    ``active`` [B] bool gates the append per row exactly like the pjit
+    ``kvcache.mla_append``: it is a batch-dim mask, so it shards over dp
+    with the cache — finished rows rewrite their slot with its old value
+    and freeze their ``seq_lens`` inside the mapped region, with no
+    collectives introduced.
     """
     from repro.core.kvcache import mla_append
 
@@ -108,11 +115,21 @@ def mla_append_shard_map(mesh, dp_axes, cache: MLACache, cache_cfg,
     cache_specs = MLACache(P(dpa, None, None), P(dpa, None, None),
                            P(dpa, None), P(dpa))
 
-    def local_append(cache, c_kv, k_r):
-        return mla_append(cache, cache_cfg, c_kv, k_r)
+    if active is None:
+        def local_append(cache, c_kv, k_r):
+            return mla_append(cache, cache_cfg, c_kv, k_r)
+
+        f = _shard_map(
+            local_append, mesh=mesh,
+            in_specs=(cache_specs, P(dpa, None), P(dpa, None)),
+            out_specs=cache_specs)
+        return f(cache, c_kv, k_r)
+
+    def local_append_gated(cache, c_kv, k_r, act):
+        return mla_append(cache, cache_cfg, c_kv, k_r, active=act)
 
     f = _shard_map(
-        local_append, mesh=mesh,
-        in_specs=(cache_specs, P(dpa, None), P(dpa, None)),
+        local_append_gated, mesh=mesh,
+        in_specs=(cache_specs, P(dpa, None), P(dpa, None), P(dpa)),
         out_specs=cache_specs)
-    return f(cache, c_kv, k_r)
+    return f(cache, c_kv, k_r, active)

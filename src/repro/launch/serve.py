@@ -191,8 +191,22 @@ def run_engine(cfg, params, args) -> None:
     Arrivals are staggered every ``--arrival-gap`` engine steps so the run
     exercises admission/retirement churn; ``--prefill-chunk`` switches
     admission to budgeted chunked prefill. Exits non-zero on token mismatch
-    (greedy) or leaked pages, so CI can gate on it."""
-    from repro.serving import EngineConfig, Request, ServingEngine
+    (greedy) or leaked pages, so CI can gate on it.
+
+    Fault drills: ``--inject kind:step[:slot][:sticky]`` threads a
+    deterministic ``FaultPlan`` through the engine (NaN quarantine + jnp_ref
+    retry, forced pool exhaustion, backend raise, preemption);
+    ``--restartable`` wraps the run in ``run_with_restarts`` + a
+    ``PreemptionHandler`` with periodic snapshots to ``--ckpt-dir``, so an
+    (injected or real SIGTERM) preemption restarts and restores from the
+    latest checkpoint — CI gates that the survivors complete, match the
+    greedy oracle, and drain every page."""
+    from repro.checkpoint import checkpoint as CK
+    from repro.runtime.fault_tolerance import (PreemptionHandler,
+                                               RestartPolicy,
+                                               run_with_restarts)
+    from repro.serving import (EngineConfig, FaultPlan, Request,
+                               ServingEngine)
 
     key = jax.random.PRNGKey(args.seed)
     prompts = _engine_prompts(cfg, key, args)
@@ -206,14 +220,49 @@ def run_engine(cfg, params, args) -> None:
         n_pages=args.pool_pages,
         prefix_sharing=not args.no_prefix_share,
         prefill_budget=args.prefill_budget,
+        max_queue=args.max_queue,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         eos_id=args.eos_id, seed=args.seed)
-    engine = ServingEngine(cfg, params, ecfg)
+    plan = FaultPlan.parse(args.inject) if args.inject else None
     reqs = [Request(rid=i, prompt=p, max_new=args.gen,
-                    arrival=float(i * args.arrival_gap))
+                    arrival=float(i * args.arrival_gap),
+                    ttft_deadline=args.ttft_deadline or None,
+                    deadline=args.deadline or None)
             for i, p in enumerate(prompts)]
-    results = engine.run(reqs)
+
+    if args.restartable:
+        import tempfile
+        ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="serve_ckpt_")
+        handler = PreemptionHandler(install=not args.inject)
+        out: dict = {}
+
+        def attempt() -> str:
+            # every attempt starts from the LATEST snapshot (none on the
+            # first): the engine skips requests it has already seen, so
+            # resubmitting the whole workload is idempotent
+            handler.reset()
+            engine = ServingEngine(cfg, params, ecfg, fault_plan=plan,
+                                   preemption=handler)
+            latest = CK.latest_checkpoint(ckpt_dir)
+            if latest:
+                engine.restore(latest)
+            out["engine"] = engine
+            out["results"] = engine.run(reqs, ckpt_dir=ckpt_dir,
+                                        ckpt_every=args.ckpt_every)
+            return "done"
+
+        run_with_restarts(
+            attempt, RestartPolicy(max_restarts=3),
+            on_restart=lambda n: print(f"[serve] engine restart #{n} "
+                                       f"(restoring from {ckpt_dir})"))
+        handler.restore()
+        engine, results = out["engine"], out["results"]
+    else:
+        engine = ServingEngine(cfg, params, ecfg, fault_plan=plan,
+                               preemption=None)
+        results = engine.run(reqs)
     m = engine.metrics()
+    n_done = sum(1 for r in results if r.status == "done")
     print(f"[serve] engine: {len(results)} requests over "
           f"{ecfg.max_batch} slots, {m['steps']} steps, "
           f"{m['decode_tok_per_s']:.1f} tok/s (decode), "
@@ -224,10 +273,25 @@ def run_engine(cfg, params, args) -> None:
           f"(saved by sharing: {m['pages']['saved_by_sharing']}), "
           f"evictions: {m['evictions']} "
           f"(requeued: {m['requeues']})")
+    f = m["faults"]
+    if plan or args.restartable or f["rejected"] or f["deadline_cancelled"]:
+        print(f"[serve] faults: injected={len(f['injected'])} "
+              f"quarantined={f['nonfinite_rows']} "
+              f"(recovered via jnp_ref: {f['recovered_ref']}, "
+              f"failed: {f['failed_nonfinite']}), "
+              f"backend faults={f['backend_faults']}, "
+              f"deadline cancels={f['deadline_cancelled']}, "
+              f"rejected={f['rejected']}, "
+              f"preemptions={f['preemptions']}, "
+              f"restores={f['restores']} -> "
+              f"{n_done}/{len(results)} completed")
     if m["pages"]["free"] != m["pages"]["capacity"]:
         raise SystemExit("[serve] FATAL: engine drained but pages leaked "
                          f"({m['pages']['free']} free != "
                          f"{m['pages']['capacity']} capacity)")
+    if (plan or args.restartable) and n_done == 0:
+        raise SystemExit("[serve] FATAL: fault drill left zero completed "
+                         "requests")
     if args.prefill_chunk > 0:
         n_buckets = len(ST.chunk_buckets(args.prefill_chunk))
         if m["prefill"]["traces"] > n_buckets:
@@ -235,9 +299,13 @@ def run_engine(cfg, params, args) -> None:
                 "[serve] FATAL: chunked prefill compiled "
                 f"{m['prefill']['traces']} variants > {n_buckets} buckets")
     if args.temperature <= 0 and m["requeues"] == 0:
-        # greedy parity oracle: the engine must be token-identical to the
-        # static-batch generate path for the same prompts/gen lengths —
-        # run per prompt-length group so mixed-length workloads are covered
+        # greedy parity oracle: completed requests must be token-identical
+        # to the static-batch generate path for the same prompts/gen
+        # lengths — run per prompt-length group so mixed-length workloads
+        # are covered. FAILED/REJECTED results are excluded (a recovered
+        # quarantine still matches: the jnp_ref retry is the oracle's own
+        # numerics), so this doubles as the isolation gate: survivors of a
+        # fault drill must be unaffected by the poisoned slot.
         by_len: dict[int, list[int]] = {}
         for i, p in enumerate(prompts):
             by_len.setdefault(len(p), []).append(i)
@@ -249,12 +317,13 @@ def run_engine(cfg, params, args) -> None:
             for row, rid in zip(np.asarray(toks_ref), rids):
                 ref[rid] = list(row)
         # EOS-stopped requests are a prefix of the (eos-padded) oracle row
-        bad = [r.rid for r in results
-               if r.tokens != ref[r.rid][:len(r.tokens)]]
+        bad = [r.rid for r in results if r.status == "done"
+               and r.tokens != ref[r.rid][:len(r.tokens)]]
         if bad:
             raise SystemExit("[serve] FATAL: engine tokens diverge from the "
                              f"static-batch generate oracle for {bad}")
-        print("[serve] engine parity vs static-batch generate: exact")
+        print(f"[serve] engine parity vs static-batch generate: exact "
+              f"({n_done} completed requests)")
 
 
 def main():
@@ -339,6 +408,42 @@ def main():
                     help="engine virtual steps between request arrivals")
     ap.add_argument("--no-prefix-share", action="store_true",
                     help="disable the engine's refcounted prefix sharing")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="engine admission-queue bound: a submit that finds "
+                         "this many requests already queued is load-shed "
+                         "with a typed REJECTED result (0 = unbounded)")
+    ap.add_argument("--ttft-deadline", type=int, default=0,
+                    help="engine TTFT deadline in virtual steps from "
+                         "arrival: requests still waiting for their first "
+                         "token past it are cancelled FAILED('deadline') "
+                         "(0 = none)")
+    ap.add_argument("--deadline", type=int, default=0,
+                    help="engine total-latency deadline in virtual steps "
+                         "from arrival; blown requests become the preferred "
+                         "eviction victim and are cancelled, freeing pages "
+                         "mid-decode (0 = none)")
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="KIND:STEP[:SLOT][:sticky]",
+                    help="engine fault injection (repeatable): "
+                         "nan_logits:step:slot[:sticky] poisons a slot's "
+                         "decode logits (sticky also poisons the jnp_ref "
+                         "retry), alloc_fail:step[:count] forces pool "
+                         "exhaustion, backend_raise:step raises from the "
+                         "decode dispatch, preempt:step triggers the "
+                         "preemption handler (needs --restartable)")
+    ap.add_argument("--restartable", action="store_true",
+                    help="engine checkpoint/restart drill: run under "
+                         "run_with_restarts + PreemptionHandler with "
+                         "periodic snapshots to --ckpt-dir; a preemption "
+                         "(SIGTERM/SIGINT or --inject preempt:k) snapshots, "
+                         "exits the attempt, and the restart restores from "
+                         "the latest checkpoint token-identically")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="engine snapshot directory for --restartable "
+                         "(default: a fresh temp dir)")
+    ap.add_argument("--ckpt-every", type=int, default=4,
+                    help="snapshot cadence in engine steps under "
+                         "--restartable (a preemption always snapshots)")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed for params, prompts, and sampling — "
                          "smokes, the engine, and the serving sim are "

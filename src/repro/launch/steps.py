@@ -6,6 +6,7 @@ builds allocation-free stand-ins for every (architecture x input-shape) cell.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -69,6 +70,21 @@ def make_decode_step(cfg: ModelConfig):
         return T.decode_step(params, cfg, token, state, pos)
 
     return decode_step
+
+
+def make_ref_decode_step(cfg: ModelConfig):
+    """Decode step pinned to the jnp reference attention backend (the pjit
+    twin; paged configs resolve to ``jnp_paged_ref``). The serving engine's
+    graceful-degradation twin: quarantined rows are retried on it and a
+    raising primary dispatch falls back to it, so a kernel fault degrades to
+    reference numerics instead of killing the process."""
+    ref_cfg = dataclasses.replace(cfg, decode_backend="ref",
+                                  use_kernels=False)
+
+    def ref_decode_step(params, token, state, pos):
+        return T.decode_step(params, ref_cfg, token, state, pos)
+
+    return ref_decode_step
 
 
 def make_chunked_prefill_step(cfg: ModelConfig):

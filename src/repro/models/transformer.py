@@ -395,13 +395,13 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos, active=None):
         cache = paged_mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0],
                                  active=active)
     elif backend.name == "shard_map":
-        # NOTE: the shard_map append is ungated — finished rows keep
-        # appending (and their seq_lens keep growing) on this backend, so
-        # the finished-row gating's early-exit saving does not apply here;
-        # outputs are unaffected (finished rows are pinned to EOS upstream)
+        # gated like the pjit append: ``active`` is a batch-dim mask, so it
+        # shards over dp into the collective-free region — finished rows
+        # freeze their seq_lens here too, and the split-KV early exit's
+        # saving applies on every backend
         from repro.core.distributed_decode import mla_append_shard_map
         cache = mla_append_shard_map(ctx["mesh"], ctx["dp"], cache, ccfg,
-                                     c_kv[:, 0], k_r[:, 0])
+                                     c_kv[:, 0], k_r[:, 0], active=active)
     else:
         cache = mla_append(cache, ccfg, c_kv[:, 0], k_r[:, 0], active=active)
     q_c, q_r = mla_lib.project_q(p, mcfg, x_t[:, None, :], pos[:, None])

@@ -7,8 +7,15 @@ slots, with evict-to-requeue instead of terminal eviction), and
 decode with donated state buffers → retire; the decode step is compiled once
 for the slot array, chunked prefill compiles are bounded by the power-of-two
 bucket count, never one per prompt length).
+
+Fault tolerance rides on top: per-slot quarantine with a one-shot jnp_ref
+retry, deadline/backpressure admission with typed FAILED/REJECTED results,
+engine checkpoint/restore through ``repro.checkpoint``, and the
+deterministic ``FaultPlan`` injection harness (``serving.faults``).
 """
 from repro.serving.allocator import AllocStats, PageAllocator  # noqa: F401
 from repro.serving.engine import (EngineConfig, RequestResult,  # noqa: F401
                                   ServingEngine)
+from repro.serving.faults import (EnginePreempted, FaultEvent,  # noqa: F401
+                                  FaultPlan)
 from repro.serving.scheduler import Request, Scheduler, Status  # noqa: F401

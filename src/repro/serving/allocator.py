@@ -127,6 +127,44 @@ class PageAllocator:
             assert self._refs.get(pid, 0) >= 1, "registered prefix page free"
             assert self._page_key.get(pid) == key, "prefix registry skew"
 
+    # -- checkpoint/restore (JSON-safe host state) --------------------------
+
+    def export_state(self) -> dict:
+        """JSON-serializable snapshot of the allocator's host state (free
+        list ORDER matters — it is LIFO — so it is kept verbatim; prefix
+        keys are hex-encoded). Together with the engine's request records
+        and the device pool pages this is everything checkpoint-restore
+        needs to resume allocation decisions bit-identically."""
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "prefix_sharing": self.prefix_sharing,
+            "free": list(self._free),
+            "refs": {str(pid): r for pid, r in self._refs.items()},
+            "prefix": {key.hex(): pid for key, pid in self._prefix.items()},
+            "total_allocs": self.total_allocs,
+            "pages_saved_by_sharing": self.pages_saved_by_sharing,
+            "peak_in_use": self.peak_in_use,
+        }
+
+    def restore_state(self, state: dict) -> None:
+        if (state["n_pages"] != self.n_pages
+                or state["page_size"] != self.page_size):
+            raise ValueError(
+                f"checkpointed allocator geometry ({state['n_pages']} pages "
+                f"x {state['page_size']}) does not match this engine "
+                f"({self.n_pages} x {self.page_size})")
+        self.prefix_sharing = bool(state["prefix_sharing"])
+        self._free = [int(p) for p in state["free"]]
+        self._refs = {int(pid): int(r) for pid, r in state["refs"].items()}
+        self._prefix = {bytes.fromhex(k): int(pid)
+                        for k, pid in state["prefix"].items()}
+        self._page_key = {pid: key for key, pid in self._prefix.items()}
+        self.total_allocs = int(state["total_allocs"])
+        self.pages_saved_by_sharing = int(state["pages_saved_by_sharing"])
+        self.peak_in_use = int(state["peak_in_use"])
+        self.check_invariants()
+
     # -- allocation ---------------------------------------------------------
 
     def _pop_free(self, n: int) -> list[int] | None:

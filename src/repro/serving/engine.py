@@ -45,6 +45,32 @@ Virtual time = engine steps; the engine additionally accounts WORK UNITS
 (tokens of prefill/decode compute) per step, which is what the serving
 simulator's decode-stall / TTFT twins compare — deterministic, unlike wall
 clock (which is also sampled host-side for throughput reporting).
+
+FAULT TOLERANCE — the engine degrades per request, never per process:
+
+  * a non-finite logits row (the per-row flags already ride the single
+    postprocess transfer) QUARANTINES that slot's request instead of
+    killing the engine: the row is retried once on the ``jnp_ref`` backend
+    (same state, same position — the decode append is deterministic, so the
+    rerun is bit-idempotent on the cache) to distinguish a kernel fault
+    (ref row finite → token recovered, request continues) from genuinely
+    divergent input (still non-finite → terminal FAILED("nonfinite"), pages
+    freed, partial tokens kept in the result); every other slot decodes on
+    undisturbed;
+  * a raise out of the decode dispatch degrades the whole step to the
+    ``jnp_ref`` backend (the donated buffers are only consumed once the
+    primary dispatch starts executing, so a dispatch-time failure leaves
+    them valid) and the engine keeps going;
+  * deadlines (virtual steps) + a bounded admission queue shed load with
+    typed terminal results (REJECTED / FAILED("deadline")) instead of
+    queueing unboundedly or burning pool pages on answers nobody will read;
+    blown-deadline requests are the preferred eviction victims and are
+    cancelled (pages freed mid-decode) rather than requeued;
+  * ``snapshot``/``restore`` round-trip the complete engine through the
+    ``checkpoint`` machinery (host bookkeeping in the manifest, device pool
+    pages in arrays.npz) so a preempted run resumes token-identically;
+  * a ``FaultPlan`` (serving/faults.py) injects NaN/alloc/backend/preempt
+    faults deterministically for chaos tests and the serving_sim sweep.
 """
 from __future__ import annotations
 
@@ -56,13 +82,54 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import checkpoint as CK
 from repro.configs.base import ModelConfig
 from repro.core.kvcache import (PagedMLAPool, page_aligned_capacity,
                                 pool_with_tables)
 from repro.launch import steps as ST
 from repro.models import transformer as T
 from repro.serving.allocator import PageAllocator
+from repro.serving.faults import EnginePreempted, FaultPlan
 from repro.serving.scheduler import Request, Scheduler, Status
+
+
+def _req_to_record(r: Request) -> dict:
+    """JSON-safe snapshot of one request's full lifecycle state."""
+    return {
+        "rid": int(r.rid), "prompt": [int(t) for t in r.prompt],
+        "max_new": int(r.max_new), "arrival": float(r.arrival),
+        "ttft_deadline": r.ttft_deadline, "deadline": r.deadline,
+        "status": r.status.value, "fail_reason": r.fail_reason,
+        "slot": int(r.slot), "pages": [int(p) for p in r.pages],
+        "out_tokens": [int(t) for t in r.out_tokens],
+        "prefill_pos": int(r.prefill_pos), "requeues": int(r.requeues),
+        "admit_step": int(r.admit_step),
+        "first_token_step": int(r.first_token_step),
+        "finish_step": int(r.finish_step),
+        "arrival_work": int(r.arrival_work),
+        "first_token_work": int(r.first_token_work),
+    }
+
+
+def _req_from_record(rec: dict) -> Request:
+    req = Request(
+        rid=int(rec["rid"]),
+        prompt=np.asarray(rec["prompt"], np.int32),
+        max_new=int(rec["max_new"]), arrival=float(rec["arrival"]),
+        ttft_deadline=rec["ttft_deadline"], deadline=rec["deadline"])
+    req.status = Status(rec["status"])
+    req.fail_reason = rec["fail_reason"]
+    req.slot = int(rec["slot"])
+    req.pages = [int(p) for p in rec["pages"]]
+    req.out_tokens = [int(t) for t in rec["out_tokens"]]
+    req.prefill_pos = int(rec["prefill_pos"])
+    req.requeues = int(rec["requeues"])
+    req.admit_step = int(rec["admit_step"])
+    req.first_token_step = int(rec["first_token_step"])
+    req.finish_step = int(rec["finish_step"])
+    req.arrival_work = int(rec["arrival_work"])
+    req.first_token_work = int(rec["first_token_work"])
+    return req
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +147,14 @@ class EngineConfig:
     # spent. 0 = exactly one chunk per PREFILLING request per step. The FCFS
     # head always gets at least one chunk per step (progress guarantee).
     prefill_budget: int = 0
+    # backpressure: bounded admission queue (0 = unbounded). A submit that
+    # finds the queue full is load-shed with a typed REJECTED result
+    # instead of queued; internal evict-to-requeue bypasses the bound.
+    max_queue: int = 0
+    # one-shot graceful degradation: retry a quarantined (non-finite) row
+    # once on the jnp_ref backend before failing the request — records
+    # whether the fault was the kernel's (recovered) or the input's (failed)
+    ref_retry: bool = True
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 0.0
@@ -95,8 +170,8 @@ class EngineConfig:
 @dataclasses.dataclass
 class RequestResult:
     rid: int
-    status: str
-    tokens: list[int]
+    status: str                    # "done" | "failed" | "rejected"
+    tokens: list[int]              # full output, or partial for FAILED
     prompt_len: int
     ttft_steps: int                # first token step - arrival (virtual)
     latency_steps: int             # finish step - arrival (virtual)
@@ -104,12 +179,14 @@ class RequestResult:
     requeues: int                  # evict-to-requeue round trips
     ttft_s: float                  # wall-clock first-token latency
     latency_s: float               # wall-clock total latency
+    fail_reason: str = ""          # typed reason for failed/rejected results
 
 
 class ServingEngine:
     """Admit → (chunked) prefill → decode → retire over one shared pool."""
 
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, *,
+                 fault_plan: FaultPlan | None = None, preemption=None):
         bad = [k for k in cfg.layer_pattern if k != "mla"]
         if bad or cfg.n_aux_tokens:
             raise ValueError(
@@ -152,10 +229,15 @@ class ServingEngine:
         self._decode_fn = jax.jit(ST.make_decode_step(self.cfg),
                                   donate_argnums=(2,))
         self._post_fn = jax.jit(self._make_postprocess())
+        # jnp_ref twin of the decode step, compiled LAZILY on the first
+        # fault (quarantine retry / backend-raise fallback) so the
+        # fault-free path never pays its compile. NOT donated: the retry
+        # discards the returned state, and the fallback adopts it whole.
+        self._ref_fn = None
 
         self.allocator = PageAllocator(self.n_pages, self.page,
                                        prefix_sharing=ecfg.prefix_sharing)
-        self.scheduler = Scheduler(ecfg.max_batch)
+        self.scheduler = Scheduler(ecfg.max_batch, max_queue=ecfg.max_queue)
         self.table = np.zeros((ecfg.max_batch, self.span_pages), np.int32)
         self.last_tok = np.zeros((ecfg.max_batch,), np.int32)
 
@@ -185,6 +267,24 @@ class ServingEngine:
         self.util_series: list[float] = []
         self._wall: dict[int, dict[str, float]] = {}   # rid -> wall marks
 
+        # fault tolerance: injection plan, preemption flag, survival metrics
+        self.fault_plan = fault_plan
+        self.preemption = preemption       # PreemptionHandler-like (.requested)
+        self._seen_rids: set[int] = set()  # submitted at least once (run()
+        #                                    skips these after a restore)
+        self.faults = {
+            "nonfinite_rows": 0,        # quarantined decode rows seen
+            "recovered_ref": 0,         # ..recovered by the jnp_ref retry
+            "failed_nonfinite": 0,      # ..terminal (retry also non-finite)
+            "failed_prefill": 0,        # non-finite prefill logits
+            "backend_faults": 0,        # decode dispatch raised
+            "ref_fallback_steps": 0,    # steps degraded to jnp_ref
+            "deadline_cancelled": 0,    # typed FAILED("deadline")
+            "rejected": 0,              # bounded-queue load shedding
+            "preemptions": 0,           # snapshot-and-raise exits
+            "restores": 0,              # checkpoint restores into this engine
+        }
+
     # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
@@ -213,6 +313,13 @@ class ServingEngine:
                 f"{self.allocator.capacity}")
         self._wall[req.rid] = {"arrival": time.time()}
         req.arrival_work = self.work_done
+        self._seen_rids.add(req.rid)
+        if self.scheduler.queue_full:
+            # backpressure: typed load shedding instead of unbounded queueing
+            self.faults["rejected"] += 1
+            self._wall[req.rid]["finish"] = time.time()
+            self.scheduler.reject(req, self.step_idx, "queue_full")
+            return
         self.scheduler.submit(req)
 
     # ------------------------------------------------------------------
@@ -303,6 +410,85 @@ class ServingEngine:
             self.table[slot] = 0
             self.last_tok[slot] = 0
 
+    def _fail(self, req: Request, reason: str) -> None:
+        """Per-request failure isolation: terminal FAILED with a typed
+        reason; pages freed, slot parked on scratch, partial tokens kept.
+        Every other request is untouched."""
+        slot = req.slot
+        self.scheduler.fail(req, self.step_idx, self.allocator, reason)
+        self._wall.setdefault(req.rid, {"arrival": time.time()})
+        self._wall[req.rid]["finish"] = time.time()
+        if slot >= 0:
+            self.table[slot] = 0
+            self.last_tok[slot] = 0
+
+    def _sweep_deadlines(self) -> None:
+        """Step-boundary deadline enforcement for requests that have not
+        produced their first token: a blown TTFT (or total) deadline while
+        still QUEUED or PREFILLING cancels the request — its answer can no
+        longer arrive in time, so its queue position / pool pages go to
+        requests that can still meet theirs. Requests already DECODING are
+        given grace (see ``Request`` docs) but become the preferred eviction
+        victim, where the cancellation frees their pages mid-decode."""
+        now = self.step_idx
+        stale = [r for r in list(self.scheduler.queue)
+                 + self.scheduler.active
+                 if r.status in (Status.QUEUED, Status.PREFILLING)
+                 and r.any_deadline_blown(now)]
+        for req in stale:
+            self.faults["deadline_cancelled"] += 1
+            self._fail(req, "deadline")
+
+    # ------------------------------------------------------------------
+    # degraded decode paths (jnp_ref twin): quarantine retry + fallback
+    # ------------------------------------------------------------------
+
+    def _ref_decode_fn(self):
+        """The jnp_ref-backend decode twin, jitted without donation (its
+        callers either discard the returned state or adopt it whole)."""
+        if self._ref_fn is None:
+            self._ref_fn = jax.jit(ST.make_ref_decode_step(self.cfg))
+        return self._ref_fn
+
+    def _retry_ref(self, req: Request) -> tuple[bool, int]:
+        """One-shot graceful degradation for a quarantined row: re-run THIS
+        slot's decode step on the ``jnp_ref`` backend against the same
+        pre-step cache view (the primary step's append is deterministic in
+        its inputs, so the rerun rewrites the same cache entries with the
+        same bytes — bit-idempotent) and re-postprocess. Returns
+        (recovered?, token). A finite retry means the primary backend
+        produced the fault (kernel bug / numerics of the fused path): the
+        request continues with the ref token. A non-finite retry means the
+        input itself diverges — the caller fails the request."""
+        slot = req.slot
+        table_view = np.zeros_like(self.table)
+        table_view[slot] = self.table[slot]
+        seq_lens = np.zeros((self.ecfg.max_batch,), np.int32)
+        seq_lens[slot] = req.seq_len
+        view = self._state_with_tables(table_view, seq_lens)
+        logits, _ = self._ref_decode_fn()(
+            self.params, jnp.asarray(self.last_tok), view,
+            jnp.asarray(seq_lens))
+        row = logits[slot][None]
+        if self.fault_plan and self.fault_plan.retry_poisoned(
+                self.step_idx, slot):
+            row = row.at[0, 0].set(jnp.nan)   # sticky fault: input diverges
+        toks, finite = self._postprocess(row, [req])
+        return bool(finite[0]), int(toks[0])
+
+    def _quarantine(self, req: Request) -> None:
+        """A poisoned logits row: retry once on jnp_ref (if enabled), else /
+        on a second failure mark the request terminal FAILED("nonfinite")."""
+        self.faults["nonfinite_rows"] += 1
+        if self.ecfg.ref_retry:
+            recovered, tok = self._retry_ref(req)
+            if recovered:
+                self.faults["recovered_ref"] += 1
+                self._emit(req, tok)
+                return
+        self.faults["failed_nonfinite"] += 1
+        self._fail(req, "nonfinite")
+
     # ------------------------------------------------------------------
     # admission + prefill (monolithic OR chunked)
     # ------------------------------------------------------------------
@@ -326,8 +512,13 @@ class ServingEngine:
             return
         toks, finite = self._postprocess(logits_row, [req])
         if not finite[0]:
-            raise FloatingPointError(
-                f"non-finite prefill logits for request {req.rid}")
+            # per-request isolation (no ref retry for prefill: the chunked
+            # prefix pages are already written, a divergent prompt stays
+            # divergent — quarantine is decode's cheap path, prefill just
+            # fails the one request)
+            self.faults["failed_prefill"] += 1
+            self._fail(req, "nonfinite_prefill")
+            return
         self._emit(req, int(toks[0]))
 
     def _run_chunk(self, req: Request) -> int:
@@ -404,11 +595,11 @@ class ServingEngine:
                 idx = [group.index(r) for r in fresh]
                 toks, finite = self._postprocess(logits[np.asarray(idx)],
                                                  fresh)
-                bad = [r.rid for r, ok in zip(fresh, finite) if not ok]
-                if bad:
-                    raise FloatingPointError(
-                        f"non-finite prefill logits for request(s) {bad}")
-                for r, tok in zip(fresh, toks):
+                for r, tok, ok in zip(fresh, toks, finite):
+                    if not ok:           # isolate the poisoned row only
+                        self.faults["failed_prefill"] += 1
+                        self._fail(r, "nonfinite_prefill")
+                        continue
                     r.status = Status.DECODE
                     self._emit(r, int(tok))
             spent += length * len(group)
@@ -421,34 +612,68 @@ class ServingEngine:
     def _ensure_capacity(self) -> None:
         """Before a decode step, every decoding request must have a page
         slot for the token the step will append (position ``seq_len``).
-        Grow by one page on demand; when the pool is exhausted, requeue the
-        youngest active request (FCFS fairness) and retry."""
+        Grow by one page on demand; when the pool is exhausted (or a
+        FaultPlan forces exhaustion), pick a victim: a blown-deadline
+        request is CANCELLED (pages freed mid-decode — its answer is
+        already worthless), otherwise the youngest active request is
+        requeued (FCFS fairness) and the growth retried."""
+        forced = bool(self.fault_plan
+                      and self.fault_plan.alloc_fail(self.step_idx))
         for req in list(self.scheduler.active):
             if req.status is not Status.DECODE:
                 continue
             while req.seq_len >= len(req.pages) * self.page:
                 assert len(req.pages) < self.span_pages, \
                     "submit() validation bounds the page run"
-                grown = self.allocator.grow(1)
+                grown = None if forced else self.allocator.grow(1)
                 if grown is not None:
                     req.pages.extend(grown)
                     self.table[req.slot, len(req.pages) - 1] = grown[0]
                     continue
-                victim = self.scheduler.eviction_victim()
+                victim = self.scheduler.eviction_victim(self.step_idx)
+                if victim is None:
+                    break
                 self.evictions += 1
-                self._requeue(victim)
+                if victim.any_deadline_blown(self.step_idx):
+                    self.faults["deadline_cancelled"] += 1
+                    self._fail(victim, "deadline")
+                else:
+                    self._requeue(victim)
                 if victim is req:
                     break
+                if forced and victim is not req:
+                    # the injected exhaustion freed real pages; stop forcing
+                    # so the freed pages are actually usable this step
+                    forced = False
 
     # ------------------------------------------------------------------
     # the step loop
     # ------------------------------------------------------------------
 
+    def _dispatch_decode(self, state, seq_lens):
+        """The primary jitted decode dispatch, degraded to the jnp_ref twin
+        when it raises (or a FaultPlan injects a raise) BEFORE the donated
+        buffers are consumed. A failure from inside the compiled program
+        (after donation) is not recoverable here and propagates."""
+        tok = jnp.asarray(self.last_tok)
+        lens = jnp.asarray(seq_lens)
+        try:
+            if self.fault_plan and self.fault_plan.backend_raise(
+                    self.step_idx):
+                raise RuntimeError(
+                    f"injected backend failure at step {self.step_idx}")
+            return self._decode_fn(self.params, tok, state, lens)
+        except Exception:
+            self.faults["backend_faults"] += 1
+            self.faults["ref_fallback_steps"] += 1
+            return self._ref_decode_fn()(self.params, tok, state, lens)
+
     def step(self) -> None:
-        """One engine iteration: admit, run (budgeted) prefill work, grow,
-        one decode step for every decoding slot, retire finished requests.
-        Advances virtual time even when idle (so future arrivals are
-        reached)."""
+        """One engine iteration: sweep deadlines, admit, run (budgeted)
+        prefill work, grow, one decode step for every decoding slot, retire
+        finished requests. Advances virtual time even when idle (so future
+        arrivals are reached)."""
+        self._sweep_deadlines()
         decode_in_flight = any(r.status is Status.DECODE
                                for r in self.scheduler.active)
         admitted = self._admit()
@@ -477,37 +702,161 @@ class ServingEngine:
                 table_view[r.slot] = self.table[r.slot]
             state = self._state_with_tables(table_view, seq_lens)
             t0 = time.time()
-            logits, self.state = self._decode_fn(
-                self.params, jnp.asarray(self.last_tok), state,
-                jnp.asarray(seq_lens))
+            logits, self.state = self._dispatch_decode(state, seq_lens)
+            if self.fault_plan:
+                # injected numerics fault: poison the scheduled slots'
+                # logits rows (models a kernel emitting NaN — the cache
+                # append already ran on clean values, exactly like a real
+                # attention-output fault)
+                live = {r.slot for r in active}
+                for ev in self.fault_plan.nan_slots(self.step_idx):
+                    if ev.slot in live:
+                        self.fault_plan._log(self.step_idx, "nan_logits",
+                                             ev.slot)
+                        logits = logits.at[ev.slot, 0].set(jnp.nan)
             slots = np.array([r.slot for r in active], np.int32)
             toks, finite = self._postprocess(logits[slots], active)
             self.decode_seconds += time.time() - t0
-            bad = [r.rid for r, ok in zip(active, finite) if not ok]
-            if bad:
-                raise FloatingPointError(
-                    f"non-finite decode logits at step {self.step_idx} for "
-                    f"request(s) {bad}")
             self.decode_tokens += len(active)
             self.work_done += len(active)
-            for r, tok in zip(active, toks):
+            for r, tok, ok in zip(active, toks, finite):
+                if not ok:
+                    # per-slot quarantine: THIS request degrades (ref retry
+                    # or typed FAILED); every other slot emits as usual
+                    self._quarantine(r)
+                    continue
                 self._emit(r, int(tok))
         live = sum(r.seq_len if r.status is Status.DECODE else r.prefill_pos
                    for r in self.scheduler.active)
         self.util_series.append(self.allocator.stats(live).utilization)
         self.step_idx += 1
 
-    def run(self, requests: list[Request]) -> list[RequestResult]:
+    # ------------------------------------------------------------------
+    # checkpoint / restore (host bookkeeping + device pool pages)
+    # ------------------------------------------------------------------
+
+    def _host_state(self) -> dict:
+        """Everything host-owned a restore needs: the scheduler's request
+        population (queue order + slot map + finished), the allocator's
+        free list/refcounts/prefix registry, the page tables and pending
+        tokens, counters, and wall-clock marks. JSON-safe (rides in the
+        checkpoint manifest; device pool pages ride in arrays.npz)."""
+        sched = self.scheduler
+        return {
+            "step_idx": self.step_idx,
+            "queue": [_req_to_record(r) for r in sched.queue],
+            "slots": [None if r is None else _req_to_record(r)
+                      for r in sched.slots],
+            "finished": [_req_to_record(r) for r in sched.finished],
+            "sched_requeues": sched.requeues,
+            "allocator": self.allocator.export_state(),
+            "table": self.table.tolist(),
+            "last_tok": self.last_tok.tolist(),
+            "seen_rids": sorted(self._seen_rids),
+            "wall": {str(rid): dict(marks)
+                     for rid, marks in self._wall.items()},
+            "faults": dict(self.faults),
+            "counters": {
+                "decode_tokens": self.decode_tokens,
+                "decode_seconds": self.decode_seconds,
+                "prefill_tokens": self.prefill_tokens,
+                "prefill_seconds": self.prefill_seconds,
+                "evictions": self.evictions,
+                "work_done": self.work_done,
+                "stall_seconds": self.stall_seconds,
+                "prefill_tokens_series": self.prefill_tokens_series,
+                "stall_tokens_series": self.stall_tokens_series,
+                "util_series": self.util_series,
+            },
+        }
+
+    def snapshot(self, directory: str, *, keep: int = 3) -> str:
+        """Atomic engine checkpoint: device pool pages (the jitted state
+        pytree) in arrays.npz, host bookkeeping in the manifest. Returns
+        the published checkpoint path."""
+        return CK.save_checkpoint(directory, self.step_idx, self.state,
+                                  extra_manifest={"engine":
+                                                  self._host_state()},
+                                  keep=keep)
+
+    def restore(self, path: str) -> None:
+        """Adopt a snapshot into THIS engine (same ModelConfig/EngineConfig
+        — the jitted functions and pool geometry are reused; only state is
+        replaced). Resumed decoding is token-identical to the uninterrupted
+        run: page tables, seq_lens, pending last tokens and the FP8 pool
+        pages all round-trip, and sampling keys derive from (rid, token
+        count) so draws continue exactly where they stopped."""
+        tree, manifest = CK.load_checkpoint(path, self.state)
+        self.state = tree
+        host = manifest["engine"]
+        sched = Scheduler(self.ecfg.max_batch, max_queue=self.ecfg.max_queue)
+        by_state = [_req_from_record(rec) for rec in host["queue"]]
+        for req in by_state:
+            sched.queue.append(req)
+        sched.slots = [None if rec is None else _req_from_record(rec)
+                       for rec in host["slots"]]
+        sched.finished = [_req_from_record(rec) for rec in host["finished"]]
+        sched.requeues = int(host["sched_requeues"])
+        self.scheduler = sched
+        self.allocator.restore_state(host["allocator"])
+        self.table = np.asarray(host["table"], np.int32)
+        self.last_tok = np.asarray(host["last_tok"], np.int32)
+        self._seen_rids = set(host["seen_rids"])
+        self._wall = {int(rid): {k: float(v) for k, v in marks.items()}
+                      for rid, marks in host["wall"].items()}
+        restored_faults = dict(host["faults"])
+        restored_faults["restores"] = restored_faults.get("restores", 0) + 1
+        self.faults = restored_faults
+        c = host["counters"]
+        self.decode_tokens = int(c["decode_tokens"])
+        self.decode_seconds = float(c["decode_seconds"])
+        self.prefill_tokens = int(c["prefill_tokens"])
+        self.prefill_seconds = float(c["prefill_seconds"])
+        self.evictions = int(c["evictions"])
+        self.work_done = int(c["work_done"])
+        self.stall_seconds = float(c["stall_seconds"])
+        self.prefill_tokens_series = list(c["prefill_tokens_series"])
+        self.stall_tokens_series = list(c["stall_tokens_series"])
+        self.util_series = list(c["util_series"])
+        self.step_idx = int(host["step_idx"])
+
+    def run(self, requests: list[Request], *, ckpt_dir: str | None = None,
+            ckpt_every: int = 0) -> list[RequestResult]:
         """Run a workload to drain. ``requests`` carry virtual arrival times
         (in engine steps); a request is enqueued once the engine clock
-        reaches it — deterministic for a fixed workload + seed."""
+        reaches it — deterministic for a fixed workload + seed.
+
+        With ``ckpt_dir`` set, the engine snapshots every ``ckpt_every``
+        steps (and at a preemption). A preemption request (from the
+        ``PreemptionHandler`` or an injected ``preempt`` fault) makes the
+        run snapshot and raise ``EnginePreempted`` at the next step
+        boundary; re-running the same workload on an engine restored from
+        the latest checkpoint resumes token-identically — requests already
+        seen before the snapshot are skipped on resubmission."""
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         i = 0
         while i < len(pending) or not self.scheduler.drained:
             while i < len(pending) and pending[i].arrival <= self.step_idx:
-                self.submit(pending[i])
+                req = pending[i]
                 i += 1
+                if req.rid in self._seen_rids:
+                    continue          # restored engine already carries it
+                self.submit(req)
+            if (self.fault_plan and self.preemption is not None
+                    and self.fault_plan.preempt(self.step_idx)):
+                self.preemption.trigger()
             self.step()
+            preempted = (self.preemption is not None
+                         and getattr(self.preemption, "requested", False))
+            if preempted:
+                self.faults["preemptions"] += 1
+            if ckpt_dir and (preempted or (
+                    ckpt_every and self.step_idx % ckpt_every == 0)):
+                self.snapshot(ckpt_dir)
+            if preempted:
+                raise EnginePreempted(
+                    f"preempted at step {self.step_idx} "
+                    f"(snapshot: {ckpt_dir or 'none'})")
         out = []
         for r in sorted(self.scheduler.finished, key=lambda r: r.rid):
             w = self._wall[r.rid]
@@ -522,7 +871,8 @@ class ServingEngine:
                            if r.first_token_work >= 0 else -1),
                 requeues=r.requeues,
                 ttft_s=w.get("first", w["finish"]) - w["arrival"],
-                latency_s=w["finish"] - w["arrival"]))
+                latency_s=w["finish"] - w["arrival"],
+                fail_reason=r.fail_reason))
         return out
 
     # ------------------------------------------------------------------
@@ -563,4 +913,9 @@ class ServingEngine:
                 "saved_by_sharing": stats.pages_saved_by_sharing,
             },
             "utilization_series": self.util_series,
+            "faults": {
+                **self.faults,
+                "injected": (list(self.fault_plan.fired)
+                             if self.fault_plan else []),
+            },
         }

@@ -3,9 +3,10 @@
 Lifecycle::
 
     QUEUED --admit--> PREFILLING --chunks--> DECODE --EOS/max_new--> DONE
-       ^                                        |
-       +------------- evict-to-requeue ---------+
-          (pages freed; generated tokens kept for replay-prefill)
+      |  ^                 |                    |
+      |  +--- evict-to-requeue (pages freed; ---+---> FAILED (quarantine /
+      |       generated tokens kept)                  deadline cancel)
+      +--> REJECTED (bounded-queue load shedding at submit)
 
 Admission is strict FCFS: the head of the queue is admitted as soon as (a) a
 batch slot is free and (b) the allocator can cover its prompt's non-shared
@@ -17,6 +18,16 @@ the eviction that displaced it) with its generated-so-far tokens kept; on
 readmission it replay-prefills ``effective_prompt`` (prompt + generated
 tokens already landed in the cache) and resumes decoding from its pending
 last token.
+
+Failure isolation is per request, never per process: ``fail`` frees the
+victim's pages, records a typed ``fail_reason`` ("nonfinite", "deadline",
+"nonfinite_prefill", ...) and keeps the partial tokens in the terminal
+result; ``reject`` is the bounded-admission-queue load-shedding path (the
+request never held pages). Deadlines are virtual (engine steps, relative to
+``arrival``): a TTFT deadline covers submit → first token, a total deadline
+covers submit → finish. Blown deadlines make a request the PREFERRED
+eviction victim (cancelling it frees pages mid-decode for requests that can
+still meet theirs) before eviction falls back to youngest-first requeue.
 
 Slots are positions in the fixed ``max_batch`` the jitted decode step was
 compiled for; finished slots are recycled in place (the engine zeroes the
@@ -43,6 +54,8 @@ class Status(enum.Enum):
     PREFILLING = "prefilling"      # chunk cursor mid-prompt (holds a slot)
     DECODE = "decode"
     DONE = "done"
+    FAILED = "failed"              # terminal: quarantined / deadline-cancelled
+    REJECTED = "rejected"          # terminal: bounded-queue load shedding
 
 
 @dataclasses.dataclass
@@ -53,8 +66,18 @@ class Request:
     prompt: np.ndarray             # [S] int32 prompt tokens
     max_new: int                   # tokens to generate (incl. the prefill one)
     arrival: float = 0.0           # virtual arrival time (engine steps)
+    # deadlines, in VIRTUAL steps relative to arrival (None = no deadline):
+    # ttft_deadline covers submit -> first token, deadline covers submit ->
+    # finish. Enforcement: blown-TTFT requests still waiting (queued or
+    # prefilling) are cancelled at the step sweep; blown requests mid-decode
+    # become the preferred eviction victim (cancel, not requeue) but are
+    # otherwise allowed to finish late (grace) — killing a request about to
+    # complete wastes more pool time than shipping a late answer.
+    ttft_deadline: int | None = None
+    deadline: int | None = None
 
     status: Status = Status.QUEUED
+    fail_reason: str = ""          # typed reason for FAILED/REJECTED results
     slot: int = -1                 # batch slot while PREFILLING/DECODE
     pages: list[int] = dataclasses.field(default_factory=list)
     out_tokens: list[int] = dataclasses.field(default_factory=list)
@@ -93,12 +116,33 @@ class Request:
     def done(self) -> bool:
         return self.status is Status.DONE
 
+    # -- deadlines (virtual steps) ------------------------------------------
+
+    def ttft_blown(self, step: int) -> bool:
+        """TTFT deadline passed with no first token emitted yet."""
+        return (self.ttft_deadline is not None
+                and self.first_token_step < 0
+                and step - self.arrival > self.ttft_deadline)
+
+    def deadline_blown(self, step: int) -> bool:
+        """Total-latency deadline passed without finishing."""
+        return (self.deadline is not None
+                and step - self.arrival > self.deadline)
+
+    def any_deadline_blown(self, step: int) -> bool:
+        return self.ttft_blown(step) or self.deadline_blown(step)
+
 
 class Scheduler:
-    """FCFS admission into a fixed slot array."""
+    """FCFS admission into a fixed slot array, with a bounded queue."""
 
-    def __init__(self, max_batch: int):
+    def __init__(self, max_batch: int, max_queue: int = 0):
         self.max_batch = int(max_batch)
+        # admission-queue bound (0 = unbounded): load shedding happens at
+        # submit time via ``reject`` instead of queueing without limit.
+        # Internal requeues (evict-to-requeue) bypass the bound — the work
+        # already admitted once is never shed.
+        self.max_queue = int(max_queue)
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * self.max_batch
         self.finished: list[Request] = []
@@ -106,9 +150,20 @@ class Scheduler:
 
     # -- queue --------------------------------------------------------------
 
+    @property
+    def queue_full(self) -> bool:
+        return bool(self.max_queue) and len(self.queue) >= self.max_queue
+
     def submit(self, req: Request) -> None:
         req.status = Status.QUEUED
         self.queue.append(req)
+
+    def reject(self, req: Request, step: int, reason: str) -> None:
+        """Typed load-shedding: the request is terminal REJECTED without
+        ever holding a slot or pages."""
+        req.status, req.fail_reason = Status.REJECTED, reason
+        req.finish_step = step
+        self.finished.append(req)
 
     @property
     def num_active(self) -> int:
@@ -170,6 +225,23 @@ class Scheduler:
             req.slot = -1
         self.finished.append(req)
 
+    def fail(self, req: Request, step: int, allocator, reason: str) -> None:
+        """Terminal per-request failure isolation: pages freed, slot
+        recycled, partial tokens kept on the request, typed ``reason``
+        recorded — every OTHER slot keeps decoding. Handles requests in any
+        pre-terminal state (queued, prefilling, decoding)."""
+        if req.status is Status.QUEUED:
+            self.queue.remove(req)
+        if req.pages:
+            allocator.free(req.pages)
+            req.pages = []
+        req.status, req.fail_reason = Status.FAILED, reason
+        req.finish_step = step
+        if req.slot >= 0:
+            self.slots[req.slot] = None
+            req.slot = -1
+        self.finished.append(req)
+
     def requeue(self, req: Request, allocator) -> None:
         """Evict-to-requeue: free the pages, keep the generated tokens, and
         send the request to the BACK of the queue (so it cannot instantly
@@ -185,10 +257,23 @@ class Scheduler:
             req.slot = -1
         self.submit(req)
 
-    def eviction_victim(self) -> Request | None:
-        """Youngest active request (latest admission) — evicting it frees
-        pages for older requests, preserving FCFS fairness."""
+    def eviction_victim(self, step: int | None = None) -> Request | None:
+        """Victim choice under pool exhaustion. A request that has already
+        blown a deadline is preferred (most-blown first — its pool pages are
+        doing the least good; the engine CANCELS it rather than requeueing,
+        freeing pages mid-decode), falling back to the youngest active
+        request (latest admission — FCFS fairness) when every deadline is
+        still live."""
         active = self.active
         if not active:
             return None
+        if step is not None:
+            blown = [r for r in active if r.any_deadline_blown(step)]
+            if blown:
+                # most overdue relative to its tightest blown deadline
+                def overdue(r):
+                    d = min((x for x in (r.ttft_deadline, r.deadline)
+                             if x is not None), default=0)
+                    return (step - r.arrival - d, r.rid)
+                return max(blown, key=overdue)
         return max(active, key=lambda r: (r.admit_step, r.rid))

@@ -234,7 +234,10 @@ def test_measure_split_sweep_records_profile_entry():
     assert set(measured) == {1, 2, 4}                 # 4 blocks -> 1,2,4
     best = profile.lookup(128, 32, 1)
     assert best in measured
-    assert measured[best] == min(measured.values())
+    # "best" honors the WIN_MARGIN tie rule (near-ties go to the smaller
+    # split), so it need not be the literal argmin of a jittery sweep
+    assert best == autotune._pick_best(measured)
+    assert measured[best] <= min(measured.values()) / (1 - autotune.WIN_MARGIN)
 
 
 def test_measure_split_sweep_paged_layout():

@@ -1,0 +1,461 @@
+"""Chaos suite: deterministic fault injection against the serving engine.
+
+Every test here drives REAL faults through the real engine (no mocks): NaN
+quarantine with the jnp_ref graceful-degradation retry, backend-raise
+fallback, forced allocator exhaustion, deadline cancellation, bounded-queue
+load shedding, checkpoint/restore, and end-to-end preemption under
+``run_with_restarts``. The recurring acceptance gate is ISOLATION: after any
+injected fault, every surviving request's tokens are identical to its
+fault-free twin and the drained engine holds zero leaked pages.
+
+Also home to the allocator invariant storms (seeded adversarial alloc /
+free / share interleavings; hypothesis-driven when hypothesis is
+installed, seeded-rng otherwise): no double free, refcounts consistent
+with the prefix registry, and free ∪ allocated == all pages after drain.
+
+Marked ``chaos`` so CI can run it as its own job: ``pytest -m chaos``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised on clean envs
+    HAVE_HYPOTHESIS = False
+
+from repro.checkpoint import checkpoint as CK
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.runtime.fault_tolerance import (PreemptionHandler, RestartPolicy,
+                                           run_with_restarts)
+from repro.serving import (EngineConfig, FaultEvent, FaultPlan,
+                           PageAllocator, Request, ServingEngine)
+
+pytestmark = pytest.mark.chaos
+
+PAGE = 16
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("mla-7b")      # pure-MLA, page_size 16
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n=3, pages=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=pages * cfg.page_size,
+                         dtype=np.int32) for _ in range(n)]
+
+
+def _reqs(prompts, gen, **kw):
+    return [Request(rid=i, prompt=p.copy(), max_new=gen, arrival=float(i),
+                    **kw) for i, p in enumerate(prompts)]
+
+
+def _ecfg(**kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_pages_per_seq", 4)
+    return EngineConfig(seed=0, **kw)
+
+
+def _drained(engine):
+    m = engine.metrics()
+    return m["pages"]["free"] == m["pages"]["capacity"]
+
+
+@pytest.fixture(scope="module")
+def clean_run(model):
+    """Fault-free twin every isolation gate compares against."""
+    cfg, params = model
+    engine = ServingEngine(cfg, params, _ecfg())
+    results = engine.run(_reqs(_prompts(cfg), gen=8))
+    assert all(r.status == "done" for r in results)
+    return {r.rid: r.tokens for r in results}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation_and_parse():
+    with pytest.raises(ValueError):
+        FaultEvent("bad_kind", 1)
+    with pytest.raises(ValueError):
+        FaultEvent("nan_logits", -1)
+    plan = FaultPlan.parse(["nan_logits:3:1:sticky", "alloc_fail:2:3",
+                            "backend_raise:5", "preempt:7"])
+    assert plan.retry_poisoned(3, 1) and not plan.retry_poisoned(3, 0)
+    assert plan.alloc_fail(2) and plan.alloc_fail(4) \
+        and not plan.alloc_fail(5)
+    assert plan.backend_raise(5) and not plan.backend_raise(4)
+    assert plan.preempt(7)
+    assert ("alloc_fail" in {k for _, k, _ in plan.fired})
+
+
+def test_fault_plan_random_is_seeded():
+    a = FaultPlan.random(7, n_steps=20, n_faults=5, max_batch=4)
+    b = FaultPlan.random(7, n_steps=20, n_faults=5, max_batch=4)
+    assert a.events == b.events
+    assert FaultPlan.random(8, n_steps=20, n_faults=5,
+                            max_batch=4).events != a.events
+
+
+# ---------------------------------------------------------------------------
+# per-request isolation: NaN quarantine + jnp_ref retry
+# ---------------------------------------------------------------------------
+
+def test_nan_quarantine_recovers_via_ref_retry(model, clean_run):
+    """A transient (kernel-side) NaN: the jnp_ref retry recomputes the row
+    clean, the request CONTINUES, and — the chaos gate — every request
+    still finishes token-identical to the fault-free run."""
+    cfg, params = model
+    plan = FaultPlan([FaultEvent("nan_logits", 4, slot=1)])
+    engine = ServingEngine(cfg, params, _ecfg(), fault_plan=plan)
+    results = engine.run(_reqs(_prompts(cfg), gen=8))
+    m = engine.metrics()
+    assert m["faults"]["nonfinite_rows"] == 1
+    assert m["faults"]["recovered_ref"] == 1
+    assert m["faults"]["failed_nonfinite"] == 0
+    assert [r.status for r in results] == ["done"] * 3
+    for r in results:
+        assert r.tokens == clean_run[r.rid], f"request {r.rid} diverged"
+    assert _drained(engine)
+    assert (4, "nan_logits", 1) in plan.fired
+
+
+def test_nan_quarantine_sticky_fails_one_isolates_rest(model, clean_run):
+    """A sticky NaN (genuinely divergent input): exactly ONE request ends
+    FAILED("nonfinite") with its pages freed; every other slot keeps
+    decoding and finishes token-identical to the fault-free run."""
+    cfg, params = model
+    plan = FaultPlan([FaultEvent("nan_logits", 4, slot=1, sticky=True)])
+    engine = ServingEngine(cfg, params, _ecfg(), fault_plan=plan)
+    results = engine.run(_reqs(_prompts(cfg), gen=8))
+    m = engine.metrics()
+    failed = [r for r in results if r.status == "failed"]
+    assert len(failed) == 1
+    assert failed[0].fail_reason == "nonfinite"
+    assert m["faults"]["recovered_ref"] == 0
+    assert m["faults"]["failed_nonfinite"] == 1
+    for r in results:
+        if r.status == "done":
+            assert r.tokens == clean_run[r.rid], f"survivor {r.rid} diverged"
+    assert _drained(engine)          # the failed request's pages came back
+
+
+def test_nan_quarantine_without_ref_retry_fails_fast(model):
+    cfg, params = model
+    plan = FaultPlan([FaultEvent("nan_logits", 4, slot=1)])
+    engine = ServingEngine(cfg, params, _ecfg(ref_retry=False),
+                           fault_plan=plan)
+    results = engine.run(_reqs(_prompts(cfg), gen=8))
+    m = engine.metrics()
+    assert m["faults"]["recovered_ref"] == 0
+    assert m["faults"]["failed_nonfinite"] == 1
+    assert sum(r.status == "failed" for r in results) == 1
+    assert _drained(engine)
+
+
+def test_failed_result_keeps_partial_tokens(model):
+    """The terminal FAILED result carries the tokens generated before the
+    fault (partial progress is a result, not a loss)."""
+    cfg, params = model
+    plan = FaultPlan([FaultEvent("nan_logits", 5, slot=0, sticky=True)])
+    engine = ServingEngine(cfg, params, _ecfg(max_batch=1),
+                           fault_plan=plan)
+    results = engine.run(_reqs(_prompts(cfg, n=1), gen=8))
+    (r,) = results
+    assert r.status == "failed" and r.fail_reason == "nonfinite"
+    assert 0 < len(r.tokens) < 8
+    assert _drained(engine)
+
+
+# ---------------------------------------------------------------------------
+# backend raise -> whole-step jnp_ref fallback
+# ---------------------------------------------------------------------------
+
+def test_backend_raise_degrades_step_to_ref(model, clean_run):
+    cfg, params = model
+    plan = FaultPlan([FaultEvent("backend_raise", 3)])
+    engine = ServingEngine(cfg, params, _ecfg(), fault_plan=plan)
+    results = engine.run(_reqs(_prompts(cfg), gen=8))
+    m = engine.metrics()
+    assert m["faults"]["backend_faults"] == 1
+    assert m["faults"]["ref_fallback_steps"] == 1
+    assert [r.status for r in results] == ["done"] * 3
+    for r in results:
+        assert r.tokens == clean_run[r.rid]
+    assert _drained(engine)
+
+
+# ---------------------------------------------------------------------------
+# forced pool exhaustion -> eviction machinery
+# ---------------------------------------------------------------------------
+
+def test_forced_alloc_exhaustion_evicts_and_completes(model, clean_run):
+    """Injected allocator exhaustion drives evict-to-requeue without a tiny
+    pool; the requeued request replays and still finishes with the right
+    tokens (replay-prefill is exact)."""
+    cfg, params = model
+    plan = FaultPlan([FaultEvent("alloc_fail", 2, count=3)])
+    engine = ServingEngine(cfg, params, _ecfg(), fault_plan=plan)
+    results = engine.run(_reqs(_prompts(cfg), gen=8))
+    m = engine.metrics()
+    assert m["evictions"] >= 1
+    assert [r.status for r in results] == ["done"] * 3
+    for r in results:
+        assert r.tokens == clean_run[r.rid]
+    assert _drained(engine)
+
+
+# ---------------------------------------------------------------------------
+# deadlines + backpressure
+# ---------------------------------------------------------------------------
+
+def test_ttft_deadline_cancels_waiting_requests(model):
+    """One slot, three same-time arrivals, tight TTFT deadline: the head
+    finishes, the queue-stuck tail is cancelled FAILED("deadline") with
+    its queue position surrendered."""
+    cfg, params = model
+    engine = ServingEngine(cfg, params, _ecfg(max_batch=1))
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=cfg.page_size,
+                    arrival=0.0, ttft_deadline=2)
+            for i, p in enumerate(_prompts(cfg))]
+    results = engine.run(reqs)
+    st = {r.rid: r for r in results}
+    assert st[0].status == "done"
+    cancelled = [r for r in results if r.status == "failed"]
+    assert cancelled and all(r.fail_reason == "deadline" for r in cancelled)
+    m = engine.metrics()
+    assert m["faults"]["deadline_cancelled"] == len(cancelled)
+    assert _drained(engine)
+
+
+def test_blown_deadline_is_preferred_eviction_victim(model):
+    """Under pool pressure the engine cancels the blown-deadline request
+    (freeing pages mid-decode) instead of requeueing the youngest."""
+    cfg, params = model
+    # growth happens when seq_len crosses a page boundary: prompts are 2
+    # full pages, so the second growth lands at step 17 (seq_len 48) —
+    # force exhaustion exactly there, long after rid 2's deadline blew
+    plan = FaultPlan([FaultEvent("alloc_fail", 16, count=4)])
+    prompts = _prompts(cfg)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=cfg.page_size + 4,
+                    arrival=0.0, deadline=3 if i == 2 else None)
+            for i, p in enumerate(prompts)]
+    engine = ServingEngine(cfg, params, _ecfg(), fault_plan=plan)
+    results = engine.run(reqs)
+    st = {r.rid: r for r in results}
+    assert st[2].status == "failed" and st[2].fail_reason == "deadline"
+    assert st[0].status == "done" and st[1].status == "done"
+    m = engine.metrics()
+    assert m["requeues"] == 0        # cancel, not requeue, freed the pages
+    assert _drained(engine)
+
+
+def test_bounded_queue_load_shedding(model):
+    cfg, params = model
+    engine = ServingEngine(cfg, params, _ecfg(max_batch=1, max_queue=1))
+    prompts = _prompts(cfg, n=4)
+    results = engine.run([Request(rid=i, prompt=p.copy(), max_new=4,
+                                  arrival=0.0)
+                          for i, p in enumerate(prompts)])
+    st = [r.status for r in sorted(results, key=lambda r: r.rid)]
+    assert st.count("rejected") >= 1 and st.count("done") >= 1
+    rej = [r for r in results if r.status == "rejected"]
+    assert all(r.fail_reason == "queue_full" and r.tokens == []
+               for r in rej)
+    m = engine.metrics()
+    assert m["faults"]["rejected"] == len(rej)
+    assert _drained(engine)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/restore + preemption
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_midflight(model, clean_run, tmp_path):
+    """Mid-run snapshot -> FRESH engine restore -> drain: the combined
+    output is token-identical to the uninterrupted run (pool pages, page
+    tables, pending tokens and sampling positions all round-trip)."""
+    cfg, params = model
+    reqs = _reqs(_prompts(cfg), gen=8)
+    e1 = ServingEngine(cfg, params, _ecfg())
+    for r in sorted(reqs, key=lambda r: r.arrival):
+        while e1.step_idx < r.arrival:
+            e1.step()
+        e1.submit(r)
+    for _ in range(3):                   # mid-flight: decodes in progress
+        e1.step()
+    path = e1.snapshot(str(tmp_path))
+    assert CK.latest_checkpoint(str(tmp_path)) == path
+
+    e2 = ServingEngine(cfg, params, _ecfg())
+    e2.restore(path)
+    assert e2.step_idx == e1.step_idx
+    assert e2.metrics()["faults"]["restores"] == 1
+    while not e2.scheduler.drained:
+        e2.step()
+    results = sorted(e2.scheduler.finished, key=lambda r: r.rid)
+    assert [r.status.value for r in results] == ["done"] * 3
+    for r in results:
+        assert [int(t) for t in r.out_tokens] == clean_run[r.rid], \
+            f"request {r.rid} diverged after restore"
+    assert _drained(e2)
+
+
+def test_preemption_under_run_with_restarts(model, clean_run, tmp_path):
+    """The full --restartable drill in-process: an injected preemption
+    snapshots and raises EnginePreempted; run_with_restarts restarts the
+    attempt, which restores from the latest checkpoint and finishes with
+    token-identical output."""
+    cfg, params = model
+    plan = FaultPlan([FaultEvent("preempt", 5)])
+    handler = PreemptionHandler(install=False)
+    out: dict = {}
+    restarts: list[int] = []
+
+    def attempt() -> str:
+        handler.reset()
+        engine = ServingEngine(cfg, params, _ecfg(), fault_plan=plan,
+                               preemption=handler)
+        latest = CK.latest_checkpoint(str(tmp_path))
+        if latest:
+            engine.restore(latest)
+        out["engine"] = engine
+        out["results"] = engine.run(_reqs(_prompts(cfg), gen=8),
+                                    ckpt_dir=str(tmp_path), ckpt_every=3)
+        return "done"
+
+    assert run_with_restarts(attempt, RestartPolicy(max_restarts=2),
+                             on_restart=restarts.append) == "done"
+    assert restarts == [1]               # exactly one preemption round trip
+    results, m = out["results"], out["engine"].metrics()
+    assert m["faults"]["preemptions"] >= 1 or m["faults"]["restores"] == 1
+    assert m["faults"]["restores"] == 1
+    assert [r.status for r in results] == ["done"] * 3
+    for r in results:
+        assert r.tokens == clean_run[r.rid], "restore diverged"
+    assert _drained(out["engine"])
+
+
+def test_checkpoint_keep_prunes_old_snapshots(model, tmp_path):
+    cfg, params = model
+    engine = ServingEngine(cfg, params, _ecfg())
+    for r in _reqs(_prompts(cfg), gen=8):
+        engine.submit(r)
+    import os
+    for _ in range(4):
+        engine.step()
+        engine.snapshot(str(tmp_path), keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path)
+                  if d.startswith("step_"))
+    assert len(kept) == 2
+    assert CK.latest_checkpoint(str(tmp_path)).endswith(kept[-1])
+
+
+# ---------------------------------------------------------------------------
+# random storm: everything at once, still isolated + drained
+# ---------------------------------------------------------------------------
+
+def test_random_fault_storm_survivors_identical(model, clean_run):
+    cfg, params = model
+    for seed in (1, 2):
+        plan = FaultPlan.random(seed, n_steps=12, n_faults=4, max_batch=3,
+                                kinds=("nan_logits", "alloc_fail",
+                                       "backend_raise"),
+                                sticky_ratio=0.5)
+        engine = ServingEngine(cfg, params, _ecfg(), fault_plan=plan)
+        results = engine.run(_reqs(_prompts(cfg), gen=8))
+        assert _drained(engine), f"storm seed {seed} leaked pages"
+        for r in results:
+            if r.status == "done" and r.requeues == 0:
+                assert r.tokens == clean_run[r.rid], \
+                    f"storm seed {seed}: survivor {r.rid} diverged"
+
+
+# ---------------------------------------------------------------------------
+# allocator invariant storms (adversarial interleavings)
+# ---------------------------------------------------------------------------
+
+def _allocator_storm(seed: int, n_pages: int, n_ops: int = 200) -> None:
+    """Adversarial interleaving of alloc_prompt/grow/free with prefix
+    sharing: after every op the partition invariant holds (checked inside
+    check_invariants: free ∪ allocated == all pages, no double entries,
+    refcounts >= 1 consistent with the registry); at drain the free list
+    is exactly the capacity."""
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(n_pages, PAGE)
+    prefix = rng.integers(0, 1000, size=2 * PAGE, dtype=np.int32)
+    live: list[list[int]] = []
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.45:
+            n_tok = int(rng.integers(1, 4 * PAGE))
+            body = rng.integers(0, 1000, size=n_tok, dtype=np.int32)
+            if rng.random() < 0.5:           # shareable-prefix prompt
+                n = min(n_tok, len(prefix))
+                body[:n] = prefix[:n]
+            pages = a.alloc_prompt(body)
+            if pages is not None:
+                live.append(list(pages))
+        elif op < 0.65 and live:
+            grown = a.grow(1)                # decode growth on a live run
+            if grown is not None:
+                live[int(rng.integers(len(live)))].extend(grown)
+        elif live:                           # retire a random request
+            a.free(live.pop(int(rng.integers(len(live)))))
+        a.check_invariants()
+    for pages in live:
+        a.free(pages)
+        a.check_invariants()
+    assert a.num_free == a.capacity
+    assert a.num_in_use == 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_allocator_storm_seeded(seed):
+    _allocator_storm(seed, n_pages=12 + seed)
+
+
+def test_allocator_double_free_detected_in_storm():
+    a = PageAllocator(8, PAGE)
+    pages = a.alloc_prompt(np.arange(PAGE, dtype=np.int32))
+    a.free(pages)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(pages)
+    a.check_invariants()
+
+
+def test_allocator_snapshot_roundtrip_preserves_invariants():
+    rng = np.random.default_rng(3)
+    a = PageAllocator(16, PAGE)
+    prefix = rng.integers(0, 1000, size=PAGE, dtype=np.int32)
+    runs = [a.alloc_prompt(np.concatenate([
+        prefix, rng.integers(0, 1000, size=PAGE // 2, dtype=np.int32)]))
+        for _ in range(3)]
+    state = a.export_state()
+    b = PageAllocator(16, PAGE)
+    b.restore_state(state)
+    assert b.num_free == a.num_free and b.num_in_use == a.num_in_use
+    assert b._free == a._free            # LIFO order preserved exactly
+    for pages in runs:
+        b.free(pages)
+        b.check_invariants()
+    assert b.num_free == b.capacity
+    with pytest.raises(ValueError, match="geometry"):
+        PageAllocator(8, PAGE).restore_state(state)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_pages=st.integers(4, 40))
+    def test_allocator_storm_hypothesis(seed, n_pages):
+        _allocator_storm(seed, n_pages, n_ops=60)

@@ -36,3 +36,47 @@ def test_shard_map_matches_oracle_single_device():
         softmax_scale=0.1, block_n=32)
     np.testing.assert_allclose(np.asarray(o_sm), np.asarray(o_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_shard_map_append_matches_pjit_and_honors_active():
+    """The collective-free append == the pjit ``mla_append`` twin, with AND
+    without the per-row ``active`` gate: gated-off rows rewrite their slot
+    with its old value and freeze their seq_lens (the ROADMAP leftover —
+    finished-row gating is no longer a no-op on the shard_map backend)."""
+    from repro.core.distributed_decode import mla_append_shard_map
+    from repro.core.kvcache import mla_append
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    B, d_c, d_r, N, S = 4, 32, 16, 64, 20
+    cfg = CacheConfig(fmt="fp8_e4m3", page_size=32)
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    cache = mla_prefill(init_mla_cache(cfg, B, N, d_c, d_r), cfg,
+                        jax.random.normal(ks[0], (B, S, d_c)) * 2,
+                        jax.random.normal(ks[1], (B, S, d_r)) * 20)
+    c_kv = jax.random.normal(ks[2], (B, d_c))
+    k_r = jax.random.normal(ks[3], (B, d_r)) * 3
+    active = jnp.asarray([True, False, True, False])
+
+    for act in (None, active):
+        ref = mla_append(cache, cfg, c_kv, k_r, active=act)
+        with mesh:
+            sm = jax.jit(lambda c, k, a=act: mla_append_shard_map(
+                mesh, "data", cache, cfg, c, k, active=a))(c_kv, k_r)
+        for name in ("content", "rope", "seq_lens"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sm, name)),
+                np.asarray(getattr(ref, name)),
+                err_msg=f"{name} diverged (active={act is not None})")
+        # scale is recomputed inside vs outside jit; allow rounding slack
+        np.testing.assert_allclose(
+            np.asarray(sm.scale), np.asarray(ref.scale), rtol=1e-6, atol=1e-8,
+            err_msg=f"scale diverged (active={act is not None})")
+
+    with mesh:
+        gated = jax.jit(lambda c, k: mla_append_shard_map(
+            mesh, "data", cache, cfg, c, k, active=active))(c_kv, k_r)
+    lens = np.asarray(gated.seq_lens)
+    assert list(lens) == [S + 1, S, S + 1, S]       # frozen where inactive
+    # inactive rows kept their old (zero-initialized) next slot verbatim
+    np.testing.assert_array_equal(np.asarray(gated.content)[1, S],
+                                  np.asarray(cache.content)[1, S])

@@ -67,3 +67,43 @@ def test_straggler_detector_flags_slow_host():
         flagged = det.update(t)
     assert 3 in flagged
     assert all(h == 3 for _, h in det.flagged)
+
+
+def test_preemption_handler_reset_and_restore():
+    """reset() clears the flag between restart attempts (the handler stays
+    installed); restore() reinstalls the previous signal dispositions —
+    including a None capture (handler set outside Python), which falls back
+    to SIG_DFL instead of raising mid-teardown."""
+    import signal
+
+    h = PreemptionHandler(install=True)
+    h.trigger()
+    assert h.requested
+    h.reset()
+    assert not h.requested
+    # simulate a pre-existing disposition captured as None
+    h._prev[signal.SIGTERM] = None
+    h.restore()
+    assert h._prev == {}
+    assert signal.getsignal(signal.SIGTERM) == signal.SIG_DFL
+    # restore the test runner's default disposition
+    signal.signal(signal.SIGTERM, signal.SIG_DFL)
+    signal.signal(signal.SIGINT, signal.default_int_handler)
+
+
+def test_restart_policy_backoff_and_jitter():
+    p = RestartPolicy(max_restarts=5, backoff_s=1.0, backoff_factor=2.0,
+                      max_backoff_s=5.0)
+    assert p.delay(1) == 1.0
+    assert p.delay(2) == 2.0
+    assert p.delay(3) == 4.0
+    assert p.delay(4) == 5.0             # capped
+    assert RestartPolicy().delay(3) == 0.0   # backoff disabled by default
+
+    a = RestartPolicy(backoff_s=1.0, jitter=0.5, seed=0)
+    b = RestartPolicy(backoff_s=1.0, jitter=0.5, seed=0)
+    da = [a.delay(1) for _ in range(4)]
+    db = [b.delay(1) for _ in range(4)]
+    assert da == db                      # seeded jitter is deterministic
+    assert all(0.5 <= d <= 1.0 for d in da)
+    assert len(set(da)) > 1              # ...but actually jitters
