@@ -273,6 +273,104 @@ def run_fused_gating_twin(cfg, params, seed: int, gen: int = 12) -> dict:
     }
 
 
+def _prefix_workload(seed: int, page: int, vocab: int, n_requests: int,
+                     gap: int, shared_pages: int = 3,
+                     suffix: int | None = None) -> list[Request]:
+    """'Shared system prompt, long-tail user turns': every prompt starts
+    with the SAME ``shared_pages`` full pages (the system prompt) followed
+    by a unique per-request suffix; arrivals are spaced ``gap`` steps apart
+    so requests never overlap live — any page reuse must come from the
+    refcount-0 retained cache, not from live refcount sharing."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, size=shared_pages * page, dtype=np.int32)
+    if suffix is None:
+        suffix = page + page // 2
+    reqs = []
+    for rid in range(n_requests):
+        body = np.concatenate([
+            shared, rng.integers(0, vocab, size=suffix, dtype=np.int32)])
+        reqs.append(Request(rid=rid, prompt=body, max_new=page // 2,
+                            arrival=float(rid * gap)))
+    return reqs
+
+
+def run_prefix_cache_workload(cfg, params, seed: int, n_requests: int = 4,
+                              shared_pages: int = 3) -> dict:
+    """The radix-cache headline: the SAME shared-system-prompt workload
+    through the engine three times — cache off (cold), device-only retained
+    cache, and a tiny device budget backed by the host tier (forcing
+    offload + restore). Chunked prefill, so a cache hit skips whole chunks:
+    the acceptance criterion is hit TTFT (work units, requests 2..N) below
+    the cold run's, with token-identical output across all three runs."""
+    import dataclasses as _dc
+    page = cfg.page_size
+    suffix = page + page // 2
+    S = shared_pages * page + suffix
+    gen = page // 2
+    # arrivals spaced past the worst-case cold lifetime of one request:
+    # every prefill chunk + every decode step + admission slack
+    gap = S // page + 2 + gen + 8
+    span = page_aligned_capacity(S + gen, page) // page
+    pool_pages = 2 * span + 1
+    ccfg = _dc.replace(cfg, prefill_chunk=page)
+    modes = {
+        "cold": dict(prefix_cache_pages=0, host_tier_pages=0),
+        "cached": dict(prefix_cache_pages=pool_pages - 1, host_tier_pages=0),
+        # device budget below the shared-prefix size: retained pages spill
+        # to host, so later hits exercise the restore path too
+        "tiered": dict(prefix_cache_pages=max(shared_pages - 1, 1),
+                       host_tier_pages=pool_pages),
+    }
+    runs = {}
+    for mode, kw in modes.items():
+        engine = ServingEngine(ccfg, params, EngineConfig(
+            max_batch=2, max_pages_per_seq=span, n_pages=pool_pages,
+            prefill_budget=2 * page, seed=seed, **kw))
+        results = engine.run(_prefix_workload(seed, page, cfg.vocab_size,
+                                              n_requests, gap, shared_pages,
+                                              suffix))
+        m = engine.metrics()
+        pc = m["prefix_cache"]
+        hits = [r.ttft_work for r in results if r.rid > 0 and r.ttft_work >= 0]
+        runs[mode] = {
+            "completed": sum(r.status == "done" for r in results),
+            # rid 0 warms the cache; rids 1..N-1 are the hit candidates
+            "ttft_work_first": next((r.ttft_work for r in results
+                                     if r.rid == 0), -1),
+            "ttft_work_rest_mean": float(np.mean(hits)) if hits else -1.0,
+            "ttft_work_rest_max": max(hits, default=-1),
+            "prefill_skipped_tokens": pc["prefill_skipped_tokens"],
+            "pages_reused_cached": pc["reused_cached"],
+            "pages_restored_host": pc["restored_host"],
+            "host_offloads": pc["offloads"],
+            "hbm_peak_resident_pages": pc["peak_resident"],
+            "tokens": {r.rid: r.tokens for r in results},
+        }
+    cold, cached, tiered = runs["cold"], runs["cached"], runs["tiered"]
+    toks = cold.pop("tokens")
+    tokens_equal = toks == cached.pop("tokens") \
+        and toks == tiered.pop("tokens")
+    return {
+        "n_requests": n_requests,
+        "shared_prefix_pages": shared_pages,
+        "prompt_len": S,
+        "pool_pages": pool_pages,
+        # token-identity across cold / cached / tiered runs — cache hits
+        # must not change a single sampled token
+        "tokens_equal": tokens_equal,
+        "cold": cold,
+        "cached": cached,
+        "tiered": tiered,
+        # acceptance headline: positive = cache hits beat cold TTFT
+        "delta": {
+            "hit_ttft_work_mean": cold["ttft_work_rest_mean"]
+                - cached["ttft_work_rest_mean"],
+            "tiered_hit_ttft_work_mean": cold["ttft_work_rest_mean"]
+                - tiered["ttft_work_rest_mean"],
+        },
+    }
+
+
 def run_fault_sweep(cfg, params, seed: int, n_requests: int = 8,
                     max_batch: int = 4) -> dict:
     """Survival metrics under deterministic fault injection: the SAME
@@ -392,6 +490,10 @@ def write_bench_serving(path: str = "BENCH_serving.json", *, seed: int = 0,
         "chunked_prefill": run_chunked_twin(cfg, params, seed,
                                             chunk=page, budget=3 * page),
         "fused_eos_gating": run_fused_gating_twin(cfg, params, seed),
+        # shared-system-prompt long-tail workload: cold vs retained-cache vs
+        # host-tiered runs of identical requests — hit TTFT, pages
+        # recomputed-vs-restored, HBM high-water
+        "prefix_cache": run_prefix_cache_workload(cfg, params, seed),
         "fault_sweep": run_fault_sweep(cfg, params, seed,
                                        n_requests=n_requests,
                                        max_batch=max_batch),
@@ -432,6 +534,15 @@ def main():
     fg = payload["fused_eos_gating"]
     print(f"[serving_sim] fused EOS gating: appends saved "
           f"{fg['appends_saved']}, tokens_equal={fg['tokens_equal']}")
+    pcw = payload["prefix_cache"]
+    print(f"[serving_sim] prefix cache: hit TTFT "
+          f"{pcw['cold']['ttft_work_rest_mean']:.0f} (cold) -> "
+          f"{pcw['cached']['ttft_work_rest_mean']:.0f} (cached) / "
+          f"{pcw['tiered']['ttft_work_rest_mean']:.0f} (tiered) work units, "
+          f"skipped {pcw['cached']['prefill_skipped_tokens']} tokens, "
+          f"restored {pcw['tiered']['pages_restored_host']} pages from host, "
+          f"HBM peak {pcw['cached']['hbm_peak_resident_pages']} pages, "
+          f"tokens_equal={pcw['tokens_equal']}")
     fs = payload["fault_sweep"]
     for name in ("nan_recovered", "nan_sticky", "backend_raise",
                  "alloc_storm", "random_storm"):

@@ -1,0 +1,198 @@
+#!/usr/bin/env python
+"""Perf-regression gate: fresh BENCH_serving.json / BENCH_splitkv.json vs
+the committed baselines in benchmarks/baselines/*.json.
+
+CI reruns the benchmarks on every PR and this script fails the build if a
+DETERMINISTIC headline metric regressed past its per-metric relative
+tolerance. Only metrics that are reproducible run-to-run on any machine are
+gated: virtual work units (seeded engine steps), modeled roofline numbers,
+page counts, and token-identity booleans. Wall-clock numbers (tok/s,
+seconds) are never gated — a loaded CI runner would page the author for
+noise.
+
+Metric spec (paths into the BENCH payloads, direction, tolerance) lives
+HERE; the baselines only record values. Directions:
+
+    lower   regression = fresh > base * (1 + tol)
+    higher  regression = fresh < base * (1 - tol)
+    true    the fresh value must be truthy (token-identity gates;
+            the baseline value is informational)
+
+Refreshing baselines after an intentional perf change (one command, run
+from the repo root with fresh BENCH files in place):
+
+    python benchmarks/serving_sim.py && \
+    python -c "from benchmarks.kernel_perf import write_bench_splitkv; \
+               write_bench_splitkv()" && \
+    python scripts/bench_gate.py --refresh
+
+then commit benchmarks/baselines/*.json with a line in the PR about WHY the
+numbers moved.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE_DIR = ROOT / "benchmarks" / "baselines"
+
+# (bench file stem, baseline file name, dotted path, direction, rel tol)
+# Paths index dicts by key and lists by integer.
+METRICS: list[tuple[str, str, str, str, float]] = [
+    # -- serving: chunked-prefill headline (virtual work units, seeded) ----
+    ("BENCH_serving.json", "serving.json",
+     "chunked_prefill.tokens_equal", "true", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "chunked_prefill.chunked.stall.tokens_per_step_max", "lower", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "chunked_prefill.chunked.ttft_work.short.p99", "lower", 0.05),
+    ("BENCH_serving.json", "serving.json",
+     "chunked_prefill.delta.stall_tokens_per_step_max", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "chunked_prefill.delta.ttft_work_p99_short", "higher", 0.05),
+    # -- serving: radix prefix cache + host tiering ------------------------
+    ("BENCH_serving.json", "serving.json",
+     "prefix_cache.tokens_equal", "true", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "prefix_cache.cached.ttft_work_rest_mean", "lower", 0.05),
+    ("BENCH_serving.json", "serving.json",
+     "prefix_cache.delta.hit_ttft_work_mean", "higher", 0.05),
+    ("BENCH_serving.json", "serving.json",
+     "prefix_cache.cached.prefill_skipped_tokens", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "prefix_cache.tiered.pages_restored_host", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "prefix_cache.tiered.hbm_peak_resident_pages", "lower", 0.0),
+    # -- serving: fused EOS gating ----------------------------------------
+    ("BENCH_serving.json", "serving.json",
+     "fused_eos_gating.tokens_equal", "true", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "fused_eos_gating.appends_saved", "higher", 0.0),
+    # -- splitkv: modeled roofline sweep (pure math, fully deterministic) --
+    # 128k-context rows are the paper's regime: early exit must keep
+    # skipping half the blocks and the 8-way split keeps the chain short.
+    ("BENCH_splitkv.json", "splitkv.json",
+     "sweep.12.blocks_visited", "lower", 0.0),
+    ("BENCH_splitkv.json", "splitkv.json",
+     "sweep.12.early_exit_savings", "higher", 0.0),
+    ("BENCH_splitkv.json", "splitkv.json",
+     "sweep.15.critical_path_blocks", "lower", 0.0),
+    ("BENCH_splitkv.json", "splitkv.json",
+     "sweep.15.t_us", "lower", 0.01),
+    ("BENCH_splitkv.json", "splitkv.json",
+     "paged_sweep.0.early_exit_savings", "higher", 0.0),
+]
+
+
+def dig(payload, path: str):
+    cur = payload
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        else:
+            cur = cur[part]
+    return cur
+
+
+def load_fresh(bench_dir: pathlib.Path) -> dict[str, dict]:
+    out = {}
+    for stem in {m[0] for m in METRICS}:
+        p = bench_dir / stem
+        if not p.exists():
+            raise SystemExit(f"[bench_gate] missing fresh benchmark {p} — "
+                             "run the benchmarks first (see scripts/"
+                             "ci_smoke.sh / --refresh docs in this file)")
+        out[stem] = json.loads(p.read_text())
+    return out
+
+
+def refresh(bench_dir: pathlib.Path) -> int:
+    """Extract the gated metrics from fresh BENCH files into the committed
+    baselines (values only; spec stays in this file)."""
+    fresh = load_fresh(bench_dir)
+    BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+    by_file: dict[str, dict] = {}
+    for stem, base_name, path, direction, tol in METRICS:
+        entry = by_file.setdefault(base_name, {"source": stem, "metrics": {}})
+        entry["metrics"][path] = {
+            "value": dig(fresh[stem], path),
+            "direction": direction,
+            "rel_tolerance": tol,
+        }
+    for base_name, entry in sorted(by_file.items()):
+        p = BASELINE_DIR / base_name
+        p.write_text(json.dumps(entry, indent=2, sort_keys=True) + "\n")
+        print(f"[bench_gate] wrote {p.relative_to(ROOT)} "
+              f"({len(entry['metrics'])} metrics)")
+    return 0
+
+
+def gate(bench_dir: pathlib.Path) -> int:
+    fresh = load_fresh(bench_dir)
+    failures, checked = [], 0
+    for stem, base_name, path, direction, tol in METRICS:
+        base_path = BASELINE_DIR / base_name
+        if not base_path.exists():
+            raise SystemExit(f"[bench_gate] no committed baseline "
+                             f"{base_path.relative_to(ROOT)} — run "
+                             "`python scripts/bench_gate.py --refresh` "
+                             "and commit the result")
+        baseline = json.loads(base_path.read_text())
+        rec = baseline["metrics"].get(path)
+        if rec is None:
+            failures.append(f"{base_name}:{path}: not in baseline — "
+                            "refresh baselines")
+            continue
+        try:
+            val = dig(fresh[stem], path)
+        except (KeyError, IndexError, TypeError):
+            failures.append(f"{stem}:{path}: missing from fresh run "
+                            "(schema drift?)")
+            continue
+        base, checked = rec["value"], checked + 1
+        if direction == "true":
+            ok, detail = bool(val), f"must be true, got {val!r}"
+        elif direction == "lower":
+            bound = base * (1 + tol) if base >= 0 else base * (1 - tol)
+            ok = val <= bound + 1e-12
+            detail = f"{val} > {base} (+{tol:.0%} tol)"
+        else:                                   # "higher"
+            bound = base * (1 - tol) if base >= 0 else base * (1 + tol)
+            ok = val >= bound - 1e-12
+            detail = f"{val} < {base} (-{tol:.0%} tol)"
+        mark = "ok  " if ok else "FAIL"
+        print(f"[bench_gate] {mark} {path:<55} "
+              f"fresh={val} base={base} ({direction})")
+        if not ok:
+            failures.append(f"{stem}:{path}: {detail}")
+    if failures:
+        print(f"\n[bench_gate] {len(failures)}/{checked} metrics REGRESSED:",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        print("[bench_gate] intentional change? refresh baselines (see "
+              "module docstring) and explain the move in the PR.",
+              file=sys.stderr)
+        return 1
+    print(f"[bench_gate] PASS: {checked} deterministic headline metrics "
+          "within tolerance")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir", default=str(ROOT), help="directory with "
+                    "fresh BENCH_*.json (default: repo root)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite benchmarks/baselines/*.json from the "
+                    "fresh BENCH files instead of gating")
+    args = ap.parse_args()
+    bench_dir = pathlib.Path(args.bench_dir)
+    return refresh(bench_dir) if args.refresh else gate(bench_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -351,6 +351,40 @@ def pool_with_tables(pool: PagedMLAPool, table, seq_lens) -> PagedMLAPool:
     return pool._replace(page_table=table, seq_lens=seq_lens)
 
 
+def pool_read_page(pool: PagedMLAPool, page_id: int):
+    """One physical page's payload ``(content, rope, scale)`` — the unit the
+    serving engine's host-memory tier offloads. Handles stacked superblock
+    pools (leading scanned-layer axis) transparently: the page axis is the
+    third-from-last for content/rope and second-from-last for scale, so a
+    stacked read returns every scanned layer's copy of the page at once."""
+    if pool.content.ndim == 4:                     # stacked superblock pools
+        return (pool.content[:, page_id], pool.rope[:, page_id],
+                pool.scale[:, page_id])
+    return pool.content[page_id], pool.rope[page_id], pool.scale[page_id]
+
+
+def pool_write_page(pool: PagedMLAPool, page_id: int, payload) -> PagedMLAPool:
+    """Write ``(content, rope, scale)`` (shapes from ``pool_read_page``)
+    back into physical page ``page_id`` — the host-tier restore path. FP8
+    quantization is deterministic, so a restored page is byte-identical to
+    the page that was offloaded."""
+    content, rope, scale = payload
+    if pool.content.ndim == 4:
+        return pool._replace(
+            content=pool.content.at[:, page_id].set(
+                jnp.asarray(content, pool.content.dtype)),
+            rope=pool.rope.at[:, page_id].set(
+                jnp.asarray(rope, pool.rope.dtype)),
+            scale=pool.scale.at[:, page_id].set(
+                jnp.asarray(scale, pool.scale.dtype)))
+    return pool._replace(
+        content=pool.content.at[page_id].set(
+            jnp.asarray(content, pool.content.dtype)),
+        rope=pool.rope.at[page_id].set(jnp.asarray(rope, pool.rope.dtype)),
+        scale=pool.scale.at[page_id].set(
+            jnp.asarray(scale, pool.scale.dtype)))
+
+
 def paged_mla_prefill(pool: PagedMLAPool, cfg: CacheConfig,
                       c_kv: jax.Array, k_r: jax.Array) -> PagedMLAPool:
     """Bulk-write a prefix through the page table: c_kv [B, S, d_c],

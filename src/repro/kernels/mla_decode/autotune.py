@@ -216,8 +216,8 @@ def measure_split_sweep(capacity: int, block_n: int, batch: int,
                         *, d_c: int = 64, d_r: int = 16, heads: int = 8,
                         fmt: str = "fp8_e4m3", fill: float = 0.75,
                         iters: int = 3, profile: SplitProfile | None = None,
-                        layout: str = "contiguous",
-                        interpret: bool = True) -> dict[int, float]:
+                        layout: str = "contiguous", interpret: bool = True,
+                        timer=None) -> dict[int, float]:
     """Time the real split-KV kernel over the candidate split counts and
     record the winner into ``profile`` (default: the singleton) under
     ``layout`` ("contiguous" times ``snapmla_decode`` on an MLACache,
@@ -227,7 +227,16 @@ def measure_split_sweep(capacity: int, block_n: int, batch: int,
     On CPU this times interpret-mode Pallas — relative ordering at small sizes
     is what seeds the cache; on TPU the same sweep measures compiled kernels.
     ``fill`` sets seq_lens = fill * capacity so early exit is in play exactly
-    as it would be in serving."""
+    as it would be in serving.
+
+    ``timer`` is the measurement seam: ``timer(num_splits, run) -> float``
+    microseconds, where ``run()`` executes the kernel once at that split
+    count. The default wall-clock timer compiles then averages ``iters``
+    runs; tests inject fixed synthetic timings here so the recorded plan
+    (and the WIN_MARGIN tie rule it feeds) is deterministic — wall-clock
+    jitter on a shared CI runner must never flip a profile assertion."""
+    if timer is None:
+        timer = _wall_clock_timer(iters)
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -269,14 +278,32 @@ def measure_split_sweep(capacity: int, block_n: int, batch: int,
 
     measured: dict[int, float] = {}
     for s in candidate_splits(capacity, block_n):
-        o, _ = run(s)                                       # compile
-        jax.block_until_ready(o)
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            o, _ = run(s)
-        jax.block_until_ready(o)
-        measured[s] = (time.perf_counter() - t0) / iters * 1e6
+        measured[s] = float(timer(s, lambda: run(s)))
 
     (profile if profile is not None else get_profile()).record(
         capacity, block_n, batch, measured, layout=layout)
     return measured
+
+
+def _wall_clock_timer(iters: int):
+    """Default ``measure_split_sweep`` timer: one warm-up (compile) run,
+    then the mean wall-clock of ``iters`` synchronized runs, in us."""
+    import jax
+
+    def timer(_s, run):
+        o, _ = run()                                        # compile
+        jax.block_until_ready(o)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            o, _ = run()
+        jax.block_until_ready(o)
+        return (time.perf_counter() - t0) / iters * 1e6
+    return timer
+
+
+def synthetic_timer(timings_us: dict[int, float]):
+    """Deterministic ``timer`` for tests: fixed microseconds per split count,
+    no kernel execution at all."""
+    def timer(s, _run):
+        return timings_us[s]
+    return timer

@@ -381,6 +381,7 @@ def prepare_q(q_c: jax.Array, q_r: jax.Array, fmt: quant.QuantFormat = "fp8_e4m3
     q_c [B, H, d_c] f32, q_r [B, H, d_r] -> (q_c8, q_r_scaled, sigma_q [B, H]).
     """
     if fmt == "none":
-        return q_c.astype(jnp.bfloat16), q_r.astype(jnp.float32), jnp.ones(q_c.shape[:-1], jnp.float32)
+        return (q_c.astype(jnp.bfloat16), q_r.astype(jnp.float32),
+                jnp.ones(q_c.shape[:-1], jnp.float32))
     raq = quant.quantize_rope_aware(q_c, q_r, fmt, rope_dtype=jnp.float32)
     return raq.q_content, raq.rope_scaled, raq.scale[..., 0]

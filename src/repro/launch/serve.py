@@ -173,15 +173,27 @@ def _engine_prompts(cfg, key, args) -> list[np.ndarray]:
     """Per-request prompts for ``serve --engine``: ``--prompt-lens`` (comma
     list, cycled over ``--batch`` requests) yields a MIXED long+short
     workload — the regime chunked prefill exists for; otherwise every
-    request gets a ``--prompt-len`` prompt."""
+    request gets a ``--prompt-len`` prompt. ``--shared-prefix N`` makes the
+    first N tokens identical across requests (the shared-system-prompt
+    traffic shape the radix prefix cache exists for)."""
     if args.prompt_lens:
         lens = [int(s) for s in args.prompt_lens.split(",")]
         lens = [lens[i % len(lens)] for i in range(args.batch)]
     else:
         lens = [args.prompt_len] * args.batch
-    return [np.asarray(jax.random.randint(
-        jax.random.fold_in(key, i), (n,), 0, cfg.vocab_size, jnp.int32))
-        for i, n in enumerate(lens)]
+    shared = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 2**31 - 1), (max(args.shared_prefix, 0),), 0,
+        cfg.vocab_size, jnp.int32))
+    prompts = []
+    for i, n in enumerate(lens):
+        p = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (n,), 0, cfg.vocab_size, jnp.int32))
+        k = min(len(shared), n)
+        if k:
+            p = p.copy()
+            p[:k] = shared[:k]
+        prompts.append(p)
+    return prompts
 
 
 def run_engine(cfg, params, args) -> None:
@@ -219,6 +231,8 @@ def run_engine(cfg, params, args) -> None:
         max_pages_per_seq=span_pages,
         n_pages=args.pool_pages,
         prefix_sharing=not args.no_prefix_share,
+        prefix_cache_pages=args.prefix_cache_pages,
+        host_tier_pages=args.host_tier_pages,
         prefill_budget=args.prefill_budget,
         max_queue=args.max_queue,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
@@ -285,9 +299,20 @@ def run_engine(cfg, params, args) -> None:
               f"preemptions={f['preemptions']}, "
               f"restores={f['restores']} -> "
               f"{n_done}/{len(results)} completed")
-    if m["pages"]["free"] != m["pages"]["capacity"]:
+    pc = m["prefix_cache"]
+    if pc["budget_pages"] or pc["host_tier_pages"]:
+        print(f"[serve] prefix cache: {pc['cached']} pages retained "
+              f"(budget {pc['budget_pages']}), reused {pc['reused_cached']}, "
+              f"restored from host {pc['restored_host']} "
+              f"(offloads {pc['offloads']}, tier "
+              f"{pc['host_used']}/{pc['host_tier_pages']}), "
+              f"prefill tokens skipped {pc['prefill_skipped_tokens']}, "
+              f"HBM high-water {pc['peak_resident']} pages")
+    # drained means every page is FREE or a retained (refcount-0) cache page
+    if m["pages"]["free"] + m["pages"]["cached"] != m["pages"]["capacity"]:
         raise SystemExit("[serve] FATAL: engine drained but pages leaked "
-                         f"({m['pages']['free']} free != "
+                         f"({m['pages']['free']} free + "
+                         f"{m['pages']['cached']} cached != "
                          f"{m['pages']['capacity']} capacity)")
     if (plan or args.restartable) and n_done == 0:
         raise SystemExit("[serve] FATAL: fault drill left zero completed "
@@ -408,6 +433,23 @@ def main():
                     help="engine virtual steps between request arrivals")
     ap.add_argument("--no-prefix-share", action="store_true",
                     help="disable the engine's refcounted prefix sharing")
+    ap.add_argument("--prefix-cache-pages", type=int, default=0,
+                    help="engine radix prefix cache: retain up to this many "
+                         "refcount-0 prefix pages in HBM for reuse across "
+                         "requests (LRU-evicted under pressure; 0 = off, "
+                         "pages are recycled at refcount-0 exactly as "
+                         "before)")
+    ap.add_argument("--host-tier-pages", type=int, default=0,
+                    help="host-memory KV tier: LRU-evicted prefix-cache "
+                         "pages offload to this many host slots instead of "
+                         "being dropped, and re-admit via async device_put "
+                         "restore (requires --prefix-cache-pages > 0; "
+                         "0 = off)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="engine workload shaping: first N tokens identical "
+                         "across every request (the shared-system-prompt "
+                         "traffic the prefix cache serves; 0 = fully random "
+                         "prompts)")
     ap.add_argument("--max-queue", type=int, default=0,
                     help="engine admission-queue bound: a submit that finds "
                          "this many requests already queued is load-shed "

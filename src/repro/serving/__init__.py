@@ -1,21 +1,29 @@
 """Continuous-batching serving engine.
 
-``PageAllocator`` (free-list + refcounted prefix sharing over the shared
-``PagedMLAPool``), ``Scheduler`` (FCFS request lifecycle over fixed decode
-slots, with evict-to-requeue instead of terminal eviction), and
-``ServingEngine`` (admit → chunked or monolithic prefill → slot-based jitted
-decode with donated state buffers → retire; the decode step is compiled once
-for the slot array, chunked prefill compiles are bounded by the power-of-two
-bucket count, never one per prompt length).
+``PageAllocator`` (free-list + radix prefix cache over the shared
+``PagedMLAPool``: refcounted sharing, LRU-retained refcount-0 prefix pages,
+host-memory offload of evicted-but-hot pages), ``PrefixTree`` (the
+page-granular content-hash trie behind it), ``HostTier`` (the second-tier
+host store with async device_put prefetch), ``Scheduler`` (FCFS request
+lifecycle over fixed decode slots, with evict-to-requeue instead of terminal
+eviction), and ``ServingEngine`` (admit → chunked or monolithic prefill →
+slot-based jitted decode with donated state buffers → retire; the decode
+step is compiled once for the slot array, chunked prefill compiles are
+bounded by the power-of-two bucket count, never one per prompt length —
+and prefix-cache hits skip their prefill chunks entirely).
 
 Fault tolerance rides on top: per-slot quarantine with a one-shot jnp_ref
 retry, deadline/backpressure admission with typed FAILED/REJECTED results,
-engine checkpoint/restore through ``repro.checkpoint``, and the
-deterministic ``FaultPlan`` injection harness (``serving.faults``).
+engine checkpoint/restore through ``repro.checkpoint`` (host-tier payloads
+included), and the deterministic ``FaultPlan`` injection harness
+(``serving.faults``).
 """
-from repro.serving.allocator import AllocStats, PageAllocator  # noqa: F401
+from repro.serving.allocator import (AllocStats, PageAllocator,  # noqa: F401
+                                     PromptAlloc)
 from repro.serving.engine import (EngineConfig, RequestResult,  # noqa: F401
                                   ServingEngine)
 from repro.serving.faults import (EnginePreempted, FaultEvent,  # noqa: F401
                                   FaultPlan)
+from repro.serving.prefix_tree import PrefixNode, PrefixTree  # noqa: F401
 from repro.serving.scheduler import Request, Scheduler, Status  # noqa: F401
+from repro.serving.tiering import HostTier  # noqa: F401

@@ -85,12 +85,14 @@ import numpy as np
 from repro.checkpoint import checkpoint as CK
 from repro.configs.base import ModelConfig
 from repro.core.kvcache import (PagedMLAPool, page_aligned_capacity,
-                                pool_with_tables)
+                                pool_read_page, pool_with_tables,
+                                pool_write_page)
 from repro.launch import steps as ST
 from repro.models import transformer as T
 from repro.serving.allocator import PageAllocator
 from repro.serving.faults import EnginePreempted, FaultPlan
 from repro.serving.scheduler import Request, Scheduler, Status
+from repro.serving.tiering import HostTier
 
 
 def _req_to_record(r: Request) -> dict:
@@ -103,6 +105,7 @@ def _req_to_record(r: Request) -> dict:
         "slot": int(r.slot), "pages": [int(p) for p in r.pages],
         "out_tokens": [int(t) for t in r.out_tokens],
         "prefill_pos": int(r.prefill_pos), "requeues": int(r.requeues),
+        "cached_tokens": int(r.cached_tokens),
         "admit_step": int(r.admit_step),
         "first_token_step": int(r.first_token_step),
         "finish_step": int(r.finish_step),
@@ -124,6 +127,7 @@ def _req_from_record(rec: dict) -> Request:
     req.out_tokens = [int(t) for t in rec["out_tokens"]]
     req.prefill_pos = int(rec["prefill_pos"])
     req.requeues = int(rec["requeues"])
+    req.cached_tokens = int(rec.get("cached_tokens", 0))
     req.admit_step = int(rec["admit_step"])
     req.first_token_step = int(rec["first_token_step"])
     req.finish_step = int(rec["finish_step"])
@@ -141,6 +145,16 @@ class EngineConfig:
     #                                max_batch sequences at full span + scratch)
     max_pages_per_seq: int = 8     # page-table width (max context in pages)
     prefix_sharing: bool = True
+    # radix prefix cache: refcount-0 prefix pages RETAINED (up to this many)
+    # instead of freed, LRU-evicted; a later prompt matching them skips
+    # their prefill chunks entirely. 0 = PR 4 behavior (pages die with
+    # their last reference). Requires prefix_sharing.
+    prefix_cache_pages: int = 0
+    # host-memory second tier: LRU-evicted cached pages offload their FP8
+    # bytes to this many host slots and restore via (prefetched)
+    # jax.device_put on the next match, instead of recomputing prefill.
+    # 0 = no tier. Requires prefix_cache_pages > 0.
+    host_tier_pages: int = 0
     # chunked-prefill token budget per engine step (only with
     # ModelConfig.prefill_chunk > 0): each step grants bucketed chunks to
     # PREFILLING requests in FCFS round-robin passes until the budget is
@@ -235,8 +249,11 @@ class ServingEngine:
         # discards the returned state, and the fallback adopts it whole.
         self._ref_fn = None
 
-        self.allocator = PageAllocator(self.n_pages, self.page,
-                                       prefix_sharing=ecfg.prefix_sharing)
+        self.tier = (HostTier(ecfg.host_tier_pages)
+                     if ecfg.host_tier_pages > 0 else None)
+        self.allocator = PageAllocator(
+            self.n_pages, self.page, prefix_sharing=ecfg.prefix_sharing,
+            prefix_cache_pages=ecfg.prefix_cache_pages, host_tier=self.tier)
         self.scheduler = Scheduler(ecfg.max_batch, max_queue=ecfg.max_queue)
         self.table = np.zeros((ecfg.max_batch, self.span_pages), np.int32)
         self.last_tok = np.zeros((ecfg.max_batch,), np.int32)
@@ -260,6 +277,7 @@ class ServingEngine:
         self.prefill_seconds = 0.0
         self.evictions = 0
         self.work_done = 0              # total work units (tokens) processed
+        self.prefill_skipped_tokens = 0  # prefill avoided by cache hits
         self.prefill_tokens_series: list[int] = []  # prefill work per step
         self.stall_tokens_series: list[int] = []   # prefill work per step
         #                                            while decodes in flight
@@ -344,6 +362,52 @@ class ServingEngine:
             lambda old, new: old._replace(content=new.content, rope=new.rope,
                                           scale=new.scale),
             self.state, new_state)
+
+    # ------------------------------------------------------------------
+    # host-tier data movement (the allocator decides, the engine moves)
+    # ------------------------------------------------------------------
+
+    def _gather_page(self, page_id: int) -> list[tuple]:
+        """Host copies of one physical page across every pool leaf of the
+        engine state (scanned superblock stacks + tail layers), in the
+        pytree traversal order ``_write_page`` replays."""
+        leaves: list[tuple] = []
+
+        def read(pool):
+            c, r, s = pool_read_page(pool, page_id)
+            leaves.append((np.asarray(c), np.asarray(r), np.asarray(s)))
+            return pool
+
+        self._map_pools(read, self.state)
+        return leaves
+
+    def _write_page(self, page_id: int, payload: list[tuple]) -> None:
+        it = iter(payload)
+        self.state = self._map_pools(
+            lambda pool: pool_write_page(pool, page_id, next(it)),
+            self.state)
+
+    def _drain_tier_ops(self) -> None:
+        """Execute the allocator's pending placement decisions, in decision
+        order: offloads copy a just-evicted page's bytes to its host slot
+        (the page id is back on the free list, but nothing has written it —
+        drains run before any prefill/decode dispatch of the step); restores
+        write a host slot's bytes into the freshly allocated device page
+        and free the slot. ``prefetch`` starts every restore's
+        host->device upload first so the transfers overlap the offload
+        gathering."""
+        ops = self.allocator.take_pending_tier_ops()
+        if not ops:
+            return
+        assert self.tier is not None, "tier ops without a host tier"
+        for kind, _pid, slot in ops:
+            if kind == "restore" and self.tier.has_data(slot):
+                self.tier.prefetch(slot)
+        for kind, pid, slot in ops:
+            if kind == "offload":
+                self.tier.store(slot, self._gather_page(pid))
+            else:
+                self._write_page(pid, self.tier.take(slot))
 
     # ------------------------------------------------------------------
     # sampling + host sync (ONE device_get per call)
@@ -499,6 +563,28 @@ class ServingEngine:
             row = np.zeros((self.span_pages,), np.int32)
             row[:len(r.pages)] = r.pages
             self.table[r.slot] = row
+        # land host-tier restores BEFORE any prefill chunk can read (or any
+        # reallocation can overwrite) the pages involved
+        self._drain_tier_ops()
+        for r in admitted:
+            if self.chunk <= 0 or r.cached_tokens <= 0:
+                continue
+            # radix-cache hit: the matched pages already hold this prefix's
+            # FP8 bytes (retained, shared, or just restored), so the chunk
+            # cursor starts AFTER them — TTFT tracks the uncached suffix
+            eff_len = len(r.effective_prompt)
+            if r.out_tokens:
+                # replay after evict-to-requeue: no first-token logits
+                # needed, so a fully matched prompt skips prefill outright
+                r.prefill_pos = min(r.cached_tokens, eff_len)
+            else:
+                # always recompute at least the final token — its logits
+                # seed the first sampled token (rewriting a matched page is
+                # byte-identical: FP8 quantization is deterministic)
+                r.prefill_pos = min(r.cached_tokens, eff_len - 1)
+            self.prefill_skipped_tokens += r.prefill_pos
+            if r.prefill_pos >= eff_len:
+                self._finish_prefill(r, None)
         return admitted
 
     def _finish_prefill(self, req: Request, logits_row) -> None:
@@ -543,6 +629,7 @@ class ServingEngine:
         self.prefill_seconds += time.time() - t0
         self._adopt_pool_data(new_state)
         req.prefill_pos += width
+        self.allocator.mark_ready(req.pages, req.prefill_pos)
         if req.prefill_pos == len(eff):
             self._finish_prefill(req, logits)
         return bucket
@@ -586,6 +673,8 @@ class ServingEngine:
             logits.block_until_ready()
             self.prefill_seconds += time.time() - t0
             self._adopt_pool_data(new_state)
+            for r in group:
+                self.allocator.mark_ready(r.pages, length)
             fresh = [r for r in group if not r.out_tokens]
             replay = [r for r in group if r.out_tokens]
             for r in replay:
@@ -692,6 +781,9 @@ class ServingEngine:
             self.stall_seconds += time.time() - t_pre
 
         self._ensure_capacity()
+        # growth-pressure evictions may have queued offloads: copy those
+        # pages' bytes out before the decode dispatch can overwrite them
+        self._drain_tier_ops()
         active = [r for r in self.scheduler.active
                   if r.status is Status.DECODE]
         if active:
@@ -750,6 +842,8 @@ class ServingEngine:
             "finished": [_req_to_record(r) for r in sched.finished],
             "sched_requeues": sched.requeues,
             "allocator": self.allocator.export_state(),
+            "host_tier": (self.tier.export_state()
+                          if self.tier is not None else None),
             "table": self.table.tolist(),
             "last_tok": self.last_tok.tolist(),
             "seen_rids": sorted(self._seen_rids),
@@ -763,6 +857,7 @@ class ServingEngine:
                 "prefill_seconds": self.prefill_seconds,
                 "evictions": self.evictions,
                 "work_done": self.work_done,
+                "prefill_skipped_tokens": self.prefill_skipped_tokens,
                 "stall_seconds": self.stall_seconds,
                 "prefill_tokens_series": self.prefill_tokens_series,
                 "stall_tokens_series": self.stall_tokens_series,
@@ -772,8 +867,11 @@ class ServingEngine:
 
     def snapshot(self, directory: str, *, keep: int = 3) -> str:
         """Atomic engine checkpoint: device pool pages (the jitted state
-        pytree) in arrays.npz, host bookkeeping in the manifest. Returns
-        the published checkpoint path."""
+        pytree) in arrays.npz, host bookkeeping in the manifest (including
+        the host tier's offloaded page payloads). Returns the published
+        checkpoint path."""
+        # pending tier data movement must land before the state is captured
+        self._drain_tier_ops()
         return CK.save_checkpoint(directory, self.step_idx, self.state,
                                   extra_manifest={"engine":
                                                   self._host_state()},
@@ -798,6 +896,15 @@ class ServingEngine:
         sched.finished = [_req_from_record(rec) for rec in host["finished"]]
         sched.requeues = int(host["sched_requeues"])
         self.scheduler = sched
+        # tier payloads first: the allocator's invariant check cross-
+        # references host-slot ownership against the restored tier
+        tier_state = host.get("host_tier")
+        if tier_state is not None:
+            if self.tier is None:
+                raise ValueError(
+                    "checkpoint carries a host tier but this engine has "
+                    "host_tier_pages == 0")
+            self.tier.restore_state(tier_state)
         self.allocator.restore_state(host["allocator"])
         self.table = np.asarray(host["table"], np.int32)
         self.last_tok = np.asarray(host["last_tok"], np.int32)
@@ -814,6 +921,7 @@ class ServingEngine:
         self.prefill_seconds = float(c["prefill_seconds"])
         self.evictions = int(c["evictions"])
         self.work_done = int(c["work_done"])
+        self.prefill_skipped_tokens = int(c.get("prefill_skipped_tokens", 0))
         self.stall_seconds = float(c["stall_seconds"])
         self.prefill_tokens_series = list(c["prefill_tokens_series"])
         self.stall_tokens_series = list(c["stall_tokens_series"])
@@ -908,9 +1016,25 @@ class ServingEngine:
                 "capacity": stats.capacity,
                 "free": stats.free,
                 "in_use": stats.in_use,
+                "cached": stats.cached,
                 "peak_in_use": stats.peak_in_use,
                 "total_allocs": stats.total_allocs,
                 "saved_by_sharing": stats.pages_saved_by_sharing,
+            },
+            "prefix_cache": {
+                "budget_pages": self.ecfg.prefix_cache_pages,
+                "host_tier_pages": self.ecfg.host_tier_pages,
+                "cached": stats.cached,
+                "resident": stats.resident,
+                "peak_resident": stats.peak_resident,   # HBM high-water
+                "reused_cached": stats.pages_reused_cached,
+                "restored_host": stats.pages_restored_host,
+                "offloads": stats.host_offloads,
+                "drops": stats.cache_drops,
+                "host_used": stats.host_used,
+                "prefill_skipped_tokens": self.prefill_skipped_tokens,
+                "nodes": (len(self.allocator.tree)
+                          if self.allocator.tree is not None else 0),
             },
             "utilization_series": self.util_series,
             "faults": {

@@ -82,6 +82,11 @@ class Request:
     pages: list[int] = dataclasses.field(default_factory=list)
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     prefill_pos: int = 0           # chunk cursor into effective_prompt
+    # leading effective-prompt tokens whose pages were already resident at
+    # admission (radix prefix-cache hit, including host-tier restores): the
+    # engine's chunked prefill starts AFTER them — TTFT tracks the uncached
+    # suffix. Set by ``admit`` from the allocator's match.
+    cached_tokens: int = 0
     requeues: int = 0              # evict-to-requeue round trips
     # timing (virtual steps; the engine also records wall-clock spans)
     admit_step: int = -1
@@ -211,6 +216,7 @@ class Scheduler:
             head.status = Status.PREFILLING
             head.slot, head.pages, head.admit_step = slot, pages, step
             head.prefill_pos = 0
+            head.cached_tokens = getattr(pages, "cached_tokens", 0)
             self.slots[slot] = head
             admitted.append(head)
         return admitted

@@ -1,0 +1,183 @@
+"""Host-memory second tier for evicted-but-hot FP8 prefix pages.
+
+When the allocator's device-side prefix-cache budget overflows, the LRU
+cached page is not simply dropped: its FP8 page data (content + rope + scale,
+one tuple per pool leaf of the engine state) is copied into a slot of this
+host-memory store. A later prompt that matches the offloaded prefix restores
+the slot into a fresh device page — one ``jax.device_put`` per array instead
+of recomputing the page's prefill — which is exactly the trade the paper's
+memory-bound analysis says to make: MLA decode starves on HBM capacity, not
+on PCIe transfers of cold prefixes.
+
+Division of labor:
+
+  * the ALLOCATOR owns slot placement (``alloc_slot``/``drop`` and which
+    node maps to which slot, recorded in the prefix tree);
+  * the ENGINE owns data movement: it drains the allocator's pending-op
+    queue, calling ``store`` (device page -> host copy) and ``take``
+    (host copy -> device arrays, freeing the slot). ``prefetch`` issues the
+    ``device_put`` transfers asynchronously ahead of the consuming write so
+    readmission overlaps the upload with the remaining host work.
+
+The payload is opaque to this class — a list (one entry per pool leaf) of
+``(content, rope, scale)`` arrays — so allocator-level tests can exercise
+slot accounting with dummy payloads. ``export_state`` snapshots the payloads
+base64-encoded (FP8/bf16 dtypes ride as ml_dtypes names), so an engine
+checkpoint restores the tier byte-identically.
+"""
+from __future__ import annotations
+
+import base64
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes                    # registered by jax's own dep
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode(a: np.ndarray) -> dict:
+    a = np.ascontiguousarray(a)
+    return {"dtype": a.dtype.name, "shape": list(a.shape),
+            "data": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def _decode(rec: dict) -> np.ndarray:
+    raw = base64.b64decode(rec["data"])
+    return np.frombuffer(raw, dtype=_np_dtype(rec["dtype"])).reshape(
+        rec["shape"]).copy()
+
+
+class HostTier:
+    """Slot-addressed host store of offloaded FP8 KV pages."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = int(n_slots)
+        self._free: list[int] = list(range(self.n_slots - 1, -1, -1))
+        # slot -> list[(content, rope, scale)] host copies (one per pool leaf)
+        self._data: dict[int, list[tuple]] = {}
+        # slot -> list[(content, rope, scale)] in-flight device_put results
+        self._staged: dict[int, list[tuple]] = {}
+        self.offloads = 0
+        self.restores = 0
+        self.prefetches = 0
+
+    # -- slot accounting (allocator side) -----------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc_slot(self) -> int | None:
+        """Reserve a slot for a pending offload (data arrives via ``store``
+        when the engine drains). None when the tier is full — the allocator
+        then LRU-evicts a host-resident node or drops the page."""
+        if not self._free:
+            return None
+        return self._free.pop()
+
+    def drop(self, slot: int) -> None:
+        """Release a slot (host LRU eviction / subtree drop); any stored or
+        staged payload is discarded."""
+        if slot in self._free or not (0 <= slot < self.n_slots):
+            raise ValueError(f"bad host-tier slot {slot}")
+        self._data.pop(slot, None)
+        self._staged.pop(slot, None)
+        self._free.append(slot)
+
+    # -- data movement (engine side) ----------------------------------------
+
+    def store(self, slot: int, page_data: list[tuple]) -> None:
+        """Land a device page's host copy in a previously reserved slot."""
+        if slot in self._free or not (0 <= slot < self.n_slots):
+            raise ValueError(f"store into unreserved host-tier slot {slot}")
+        self._data[slot] = page_data
+        self.offloads += 1
+
+    def has_data(self, slot: int) -> bool:
+        return slot in self._data
+
+    def prefetch(self, slot: int) -> None:
+        """Begin the host -> device upload for ``slot`` without blocking:
+        ``jax.device_put`` returns immediately with in-flight arrays that
+        the consuming ``take``/pool-write then uses directly."""
+        if slot in self._staged or slot not in self._data:
+            return
+        self._staged[slot] = [tuple(jax.device_put(a) for a in leaf)
+                              for leaf in self._data[slot]]
+        self.prefetches += 1
+
+    def take(self, slot: int) -> list[tuple]:
+        """Consume a slot for restore: returns the (prefetched, if
+        ``prefetch`` ran) page payload and frees the slot."""
+        if slot not in self._data:
+            raise ValueError(f"take from empty host-tier slot {slot}")
+        payload = self._staged.pop(slot, None)
+        if payload is None:
+            payload = self._data[slot]
+        del self._data[slot]
+        self._free.append(slot)
+        self.restores += 1
+        return payload
+
+    # -- invariants ---------------------------------------------------------
+
+    def check(self, referenced: set[int], pending: set[int]) -> None:
+        """``referenced``: slots held by prefix-tree nodes. ``pending``:
+        slots owned by not-yet-drained restore ops. Together they must
+        account for every non-free slot exactly once."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate free host slot"
+        assert free <= set(range(self.n_slots)), "host slot out of range"
+        used = set(range(self.n_slots)) - free
+        assert not (referenced & pending), \
+            "host slot both node-referenced and restore-pending"
+        assert referenced | pending == used, \
+            f"host-tier slot leak: used={used} referenced={referenced} " \
+            f"pending={pending}"
+        assert set(self._data) <= used, "payload in a free slot"
+        assert set(self._staged) <= set(self._data), "staged without data"
+
+    # -- checkpoint ---------------------------------------------------------
+
+    def export_state(self) -> dict:
+        """JSON-safe snapshot including payload bytes (host copies are part
+        of engine state: a restore must be able to serve them without the
+        original device pages)."""
+        data: dict[str, Any] = {}
+        for slot, leaves in self._data.items():
+            data[str(slot)] = [[_encode(np.asarray(a)) for a in leaf]
+                               for leaf in leaves]
+        return {
+            "n_slots": self.n_slots,
+            "free": list(self._free),
+            "data": data,
+            "offloads": self.offloads,
+            "restores": self.restores,
+            "prefetches": self.prefetches,
+        }
+
+    def restore_state(self, state: dict) -> None:
+        if int(state["n_slots"]) != self.n_slots:
+            raise ValueError(
+                f"checkpointed host tier geometry ({state['n_slots']} "
+                f"slots) does not match this engine ({self.n_slots})")
+        self._free = [int(s) for s in state["free"]]
+        self._staged = {}
+        self._data = {
+            int(slot): [tuple(_decode(rec) for rec in leaf)
+                        for leaf in leaves]
+            for slot, leaves in state["data"].items()}
+        self.offloads = int(state["offloads"])
+        self.restores = int(state["restores"])
+        self.prefetches = int(state["prefetches"])

@@ -228,28 +228,57 @@ def test_candidate_splits_respect_block_count():
 
 
 def test_measure_split_sweep_records_profile_entry():
+    """Sweep plumbing with injected synthetic timings — fully deterministic,
+    no wall clock anywhere: the sweep walks the candidate splits, feeds the
+    fixed numbers through ``record``, and the WIN_MARGIN tie rule decides
+    the plan (2 wins by >5% over 1; 4's further 1.25% win is within noise
+    margin, so the smaller count keeps the slot)."""
     profile = autotune.SplitProfile()
-    measured = autotune.measure_split_sweep(128, 32, 1, d_c=16, d_r=8,
-                                            heads=2, iters=1, profile=profile)
-    assert set(measured) == {1, 2, 4}                 # 4 blocks -> 1,2,4
-    best = profile.lookup(128, 32, 1)
-    assert best in measured
-    # "best" honors the WIN_MARGIN tie rule (near-ties go to the smaller
-    # split), so it need not be the literal argmin of a jittery sweep
-    assert best == autotune._pick_best(measured)
-    assert measured[best] <= min(measured.values()) / (1 - autotune.WIN_MARGIN)
+    fixed = {1: 100.0, 2: 80.0, 4: 79.0}
+    measured = autotune.measure_split_sweep(
+        128, 32, 1, d_c=16, d_r=8, heads=2, profile=profile,
+        timer=autotune.synthetic_timer(fixed))
+    assert measured == fixed                          # 4 blocks -> 1,2,4
+    assert profile.lookup(128, 32, 1) == 2
+    assert profile.lookup(128, 32, 1) == autotune._pick_best(measured)
+
+
+def test_measure_split_sweep_win_margin_tie_goes_to_fewer_splits():
+    """Near-ties (within WIN_MARGIN) must keep the bit-exact single-pass
+    plan — the exact jitter scenario that used to flake when this sweep was
+    measured: 2 and 4 are 3% and 1% faster than 1, neither a real win."""
+    profile = autotune.SplitProfile()
+    autotune.measure_split_sweep(
+        128, 32, 1, d_c=16, d_r=8, heads=2, profile=profile,
+        timer=autotune.synthetic_timer({1: 100.0, 2: 97.0, 4: 99.0}))
+    assert profile.lookup(128, 32, 1) == 1
 
 
 def test_measure_split_sweep_paged_layout():
-    """The paged sweep times the actual paged kernel and records under the
-    paged key only."""
+    """The paged sweep records under the paged key only."""
+    profile = autotune.SplitProfile()
+    measured = autotune.measure_split_sweep(
+        128, 32, 1, d_c=16, d_r=8, heads=2, profile=profile, layout="paged",
+        timer=autotune.synthetic_timer({1: 300.0, 2: 200.0, 4: 100.0}))
+    assert set(measured) == {1, 2, 4}
+    assert profile.lookup(128, 32, 1, layout="paged") == 4
+    assert profile.lookup(128, 32, 1) is None          # contiguous untouched
+
+
+@pytest.mark.timing
+def test_measure_split_sweep_measured_smoke():
+    """The real wall-clock timer path, end to end (compile + timed runs of
+    the interpret-mode kernel). Informational ONLY — asserts the sweep ran
+    and recorded a sane plan, never anything about relative speed; CI runs
+    it non-gating (see pytest.ini `timing`)."""
     profile = autotune.SplitProfile()
     measured = autotune.measure_split_sweep(128, 32, 1, d_c=16, d_r=8,
-                                            heads=2, iters=1, profile=profile,
-                                            layout="paged")
+                                            heads=2, iters=1, profile=profile)
     assert set(measured) == {1, 2, 4}
-    assert profile.lookup(128, 32, 1, layout="paged") in measured
-    assert profile.lookup(128, 32, 1) is None          # contiguous untouched
+    assert all(us > 0 for us in measured.values())
+    best = profile.lookup(128, 32, 1)
+    assert best in measured
+    assert best == autotune._pick_best(measured)
 
 
 def test_emit_split_profile_artifact(tmp_path):

@@ -1,0 +1,425 @@
+"""Radix prefix cache + host-memory KV tiering.
+
+Allocator level: refcount-0 retention and promote-on-rematch, the COW
+boundary page staying private, LRU budget eviction (oldest-first,
+leaf-first), host-tier offload/restore slot accounting with dummy payloads,
+export/restore round trips of tree + tier state, and seeded storms that
+interleave every operation with ``check_invariants`` after each one.
+
+Engine level: cache-hit runs must be TOKEN-IDENTICAL to their cache-cold
+twins (ref and kernel decode backends), the drain accounting treats retained
+pages as not-leaked, and an engine checkpoint round-trips a POPULATED host
+tier (payloads ride in the manifest) so a restored engine serves host
+restores without the original device pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.kvcache import page_aligned_capacity
+from repro.models import transformer as T
+from repro.serving import (EngineConfig, HostTier, PageAllocator, Request,
+                           ServingEngine)
+
+PAGE = 16
+
+
+def _prompt(rng, n):
+    return rng.integers(0, 1000, size=n, dtype=np.int32)
+
+
+def _payload(pid: int) -> list[tuple]:
+    """Dummy per-page payload shaped like the engine's (list of per-leaf
+    array tuples) so tier export/restore round-trips it."""
+    return [(np.full((2,), pid, np.int32),)]
+
+
+def _drain(a: PageAllocator, tier: HostTier | None) -> None:
+    """Stand-in for the engine's ``_drain_tier_ops``: move dummy payloads
+    for every pending op, in decision order."""
+    for kind, pid, slot in a.take_pending_tier_ops():
+        if kind == "offload":
+            tier.store(slot, _payload(pid))
+        else:
+            tier.take(slot)
+
+
+def _alloc(a: PageAllocator, prompt: np.ndarray):
+    """alloc + the engine's prefill-landed confirmation."""
+    pages = a.alloc_prompt(prompt)
+    if pages is not None:
+        a.mark_ready(pages, len(prompt))
+    return pages
+
+
+# ---------------------------------------------------------------------------
+# retention + promote
+# ---------------------------------------------------------------------------
+
+def test_retained_pages_promoted_on_rematch():
+    a = PageAllocator(16, PAGE, prefix_cache_pages=8)
+    rng = np.random.default_rng(0)
+    prompt = _prompt(rng, 2 * PAGE + PAGE // 2)
+    first = _alloc(a, prompt)
+    a.free(first)
+    a.check_invariants()
+    assert a.num_cached == 2                  # full pages retained, COW tail not
+    second = _alloc(a, prompt.copy())
+    assert list(second[:2]) == list(first[:2])    # same physical pages
+    assert second.cached_tokens == 2 * PAGE
+    assert second.reused_pages == 2
+    assert second.restored_pages == 0
+    # the boundary page is a FRESH copy-on-write page, never shared/reused
+    assert second[2] != first[2] or a.num_cached == 0
+    a.free(second)
+    a.check_invariants()
+
+
+def test_cache_hit_extends_deeper_prefix():
+    """A longer prompt reuses the retained prefix chain of a shorter one and
+    registers its own deeper nodes."""
+    a = PageAllocator(16, PAGE, prefix_cache_pages=8)
+    rng = np.random.default_rng(1)
+    base = _prompt(rng, 2 * PAGE)
+    a.free(_alloc(a, base))
+    longer = np.concatenate([base, _prompt(rng, PAGE)])
+    pages = _alloc(a, longer)
+    assert pages.cached_tokens == 2 * PAGE
+    a.free(pages)
+    a.check_invariants()
+    assert a.num_cached == 3                  # now the 3-page chain is cached
+
+
+def test_budget_zero_is_purge_at_refcount_zero():
+    """prefix_cache_pages=0 (default) is exactly the pre-cache behavior:
+    nothing survives refcount-0, re-alloc recomputes."""
+    a = PageAllocator(16, PAGE)
+    rng = np.random.default_rng(2)
+    prompt = _prompt(rng, 2 * PAGE)
+    a.free(_alloc(a, prompt))
+    assert a.num_cached == 0 and a.num_free == a.capacity
+    again = _alloc(a, prompt.copy())
+    assert again.cached_tokens == 0 and a.pages_saved_by_sharing == 0
+    a.free(again)
+
+
+def test_lru_eviction_is_oldest_first_leaf_first():
+    """Budget pressure drops the LRU chain; within one release the deepest
+    page goes first so a parent is never dropped under a retained child."""
+    a = PageAllocator(32, PAGE, prefix_cache_pages=4)
+    rng = np.random.default_rng(3)
+    old = _prompt(rng, 2 * PAGE)
+    hot = _prompt(rng, 2 * PAGE)
+    a.free(_alloc(a, old))               # cached @ tick 1
+    a.free(_alloc(a, hot))               # cached @ tick 2
+    assert a.num_cached == 4
+    # a third release overflows the budget by 2: the OLD chain is the victim
+    a.free(_alloc(a, _prompt(rng, 2 * PAGE)))
+    a.check_invariants()
+    assert a.num_cached == 4 and a.cache_drops == 2
+    hit = _alloc(a, hot.copy())
+    assert hit.cached_tokens == 2 * PAGE      # hot chain survived
+    miss_pages = _alloc(a, old.copy())
+    assert miss_pages.cached_tokens == 0      # old chain was dropped
+    a.free(hit)
+    a.free(miss_pages)
+
+
+def test_unwritten_pages_never_cached_or_hit():
+    """Registration happens at alloc time but data lands chunk-by-chunk: a
+    page whose prefill never completed (mid-prefill eviction) must not be
+    retained, and a concurrent arrival is only a cache HIT for the landed
+    prefix — the rest live-shares and rewrites, exactly pre-cache."""
+    a = PageAllocator(16, PAGE, prefix_cache_pages=8)
+    rng = np.random.default_rng(9)
+    prompt = _prompt(rng, 2 * PAGE)
+    first = a.alloc_prompt(prompt)
+    a.mark_ready(first, PAGE)              # only page 0 landed so far
+    second = a.alloc_prompt(prompt.copy())
+    assert list(second) == list(first)     # both pages live-shared
+    assert second.cached_tokens == PAGE    # but only one is a hit
+    a.free(second)
+    a.free(first)                          # retire mid-prefill
+    a.check_invariants()
+    assert a.num_cached == 1               # the unwritten page was purged
+    third = _alloc(a, prompt.copy())
+    assert third.cached_tokens == PAGE
+    a.free(third)
+    a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# host tier
+# ---------------------------------------------------------------------------
+
+def test_offload_then_restore_roundtrip():
+    tier = HostTier(4)
+    a = PageAllocator(16, PAGE, prefix_cache_pages=1, host_tier=tier)
+    rng = np.random.default_rng(4)
+    prompt = _prompt(rng, 2 * PAGE)
+    a.free(_alloc(a, prompt))
+    # budget 1: one page stays on device, the evicted one offloads to host
+    a.check_invariants()
+    _drain(a, tier)
+    a.check_invariants()
+    assert a.num_cached == 1 and tier.num_used == 1 and tier.offloads == 1
+    hit = _alloc(a, prompt.copy())
+    assert hit.cached_tokens == 2 * PAGE
+    assert hit.reused_pages == 1 and hit.restored_pages == 1
+    assert a.has_pending_tier_ops              # restore waits for the drain
+    a.check_invariants()
+    _drain(a, tier)
+    a.check_invariants()
+    assert tier.restores == 1 and tier.num_used == 0
+    a.free(hit)
+
+
+def test_host_tier_full_drops_lru_host_page():
+    """Tier exhaustion LRU-evicts a host-resident node to make room (or
+    drops the page when nothing is evictable) — never errors."""
+    tier = HostTier(1)
+    a = PageAllocator(32, PAGE, prefix_cache_pages=1, host_tier=tier)
+    rng = np.random.default_rng(5)
+    for _ in range(3):                        # each release offloads 1 page
+        a.free(_alloc(a, _prompt(rng, 2 * PAGE)))
+        a.check_invariants()
+        _drain(a, tier)
+        a.check_invariants()
+    assert tier.num_used == 1                 # only the newest host page kept
+    assert a.num_free + a.num_cached == a.capacity
+
+
+def test_export_raises_with_pending_ops_and_roundtrips_after_drain():
+    tier = HostTier(4)
+    a = PageAllocator(16, PAGE, prefix_cache_pages=1, host_tier=tier)
+    rng = np.random.default_rng(6)
+    a.free(_alloc(a, _prompt(rng, 2 * PAGE)))
+    assert a.has_pending_tier_ops
+    with pytest.raises(RuntimeError, match="pending"):
+        a.export_state()
+    _drain(a, tier)
+    state = a.export_state()
+    tier2 = HostTier(4)
+    tier2.restore_state(tier.export_state())
+    b = PageAllocator(16, PAGE, prefix_cache_pages=1, host_tier=tier2)
+    b.restore_state(state)
+    assert b.export_state() == state
+    assert tier2.export_state() == tier.export_state()
+    with pytest.raises(ValueError, match="geometry"):
+        HostTier(5).restore_state(tier.export_state())
+
+
+# ---------------------------------------------------------------------------
+# storms: every operation interleaved, invariants after each
+# ---------------------------------------------------------------------------
+
+def _storm(seed: int, ops: int, n_pages: int = 24, budget: int = 6,
+           tier_slots: int = 8) -> None:
+    rng = np.random.default_rng(seed)
+    tier = HostTier(tier_slots)
+    a = PageAllocator(n_pages, PAGE, prefix_cache_pages=budget,
+                      host_tier=tier)
+    prefixes = [_prompt(rng, int(k) * PAGE) for k in rng.integers(1, 4, 3)]
+    live: list[list[int]] = []
+    for _ in range(ops):
+        op = rng.random()
+        if op < 0.45:                          # alloc (often prefix-sharing)
+            if rng.random() < 0.7:
+                body = np.concatenate([
+                    prefixes[int(rng.integers(len(prefixes)))],
+                    _prompt(rng, int(rng.integers(1, PAGE)))])
+            else:
+                body = _prompt(rng, int(rng.integers(1, 3 * PAGE)))
+            pages = a.alloc_prompt(body)
+            if pages is not None:
+                land = rng.random()
+                if land < 0.75:        # prefill fully landed
+                    a.mark_ready(pages, len(body))
+                elif land < 0.9:       # request will retire mid-prefill
+                    a.mark_ready(pages, int(rng.integers(0, len(body) + 1)))
+                live.append(pages)
+        elif op < 0.6 and live:                # decode growth under pressure
+            extra = a.grow(1)
+            if extra is not None:
+                live[int(rng.integers(len(live)))].extend(extra)
+        elif op < 0.85 and live:               # release -> retain/evict
+            a.free(live.pop(int(rng.integers(len(live)))))
+        else:                                  # engine drain point
+            if a.has_pending_tier_ops and rng.random() < 0.3:
+                # partial-drain ordering is not a thing: ops drain in
+                # decision order or not at all this turn
+                pass
+            else:
+                _drain(a, tier)
+        a.check_invariants()
+        in_use = {p for run in live for p in run}
+        assert len(in_use) == a.num_in_use
+        if rng.random() < 0.05 and not a.has_pending_tier_ops:
+            state = a.export_state()
+            t2 = HostTier(tier_slots)
+            t2.restore_state(tier.export_state())
+            b = PageAllocator(n_pages, PAGE, prefix_cache_pages=budget,
+                              host_tier=t2)
+            b.restore_state(state)
+            assert b.export_state() == state
+    for run in live:
+        a.free(run)
+    _drain(a, tier)
+    a.check_invariants()
+    assert a.num_free + a.num_cached == a.capacity
+
+
+def test_prefix_cache_storm_keeps_invariants():
+    _storm(seed=7, ops=250)
+
+
+@pytest.mark.chaos
+def test_prefix_cache_storm_tiny_budgets():
+    """Degenerate geometries: budget 1, single host slot, tight pool."""
+    _storm(seed=8, ops=200, n_pages=10, budget=1, tier_slots=1)
+
+
+@pytest.mark.chaos
+@pytest.mark.nightly
+@pytest.mark.parametrize("seed", [11, 12, 13, 14])
+def test_prefix_cache_long_storm_nightly(seed):
+    """Nightly-scale storms across seeds and geometries."""
+    _storm(seed=seed, ops=1500, n_pages=20 + 4 * seed, budget=seed % 7 + 1,
+           tier_slots=seed % 5 + 1)
+
+
+# ---------------------------------------------------------------------------
+# engine: cache hits are token-identical; checkpoint carries the tier
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("mla-7b")          # pure-MLA, page_size 16
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _shared_reqs(cfg, seed: int, n: int, gap: int, gen: int):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=2 * PAGE, dtype=np.int32)
+    return [Request(rid=i,
+                    prompt=np.concatenate([
+                        shared, rng.integers(0, cfg.vocab_size,
+                                             size=PAGE // 2, dtype=np.int32)]),
+                    max_new=gen, arrival=float(i * gap))
+            for i in range(n)]
+
+
+def _run(cfg, params, reqs, gen, *, cache=0, tier=0, backend=None):
+    S = max(len(r.prompt) for r in reqs)
+    span = page_aligned_capacity(S + gen, cfg.page_size) // cfg.page_size
+    rcfg = dataclasses.replace(cfg, prefill_chunk=PAGE)
+    if backend is not None:
+        rcfg = dataclasses.replace(rcfg, decode_backend=backend,
+                                   use_kernels=backend == "kernel")
+    engine = ServingEngine(rcfg, params, EngineConfig(
+        max_batch=2, max_pages_per_seq=span, n_pages=2 * span + 1,
+        prefix_cache_pages=cache, host_tier_pages=tier, seed=0))
+    results = engine.run(reqs)
+    return engine, {r.rid: r.tokens for r in results}
+
+
+def test_engine_cache_hit_token_identical_to_cold(model):
+    """The acceptance pin: retained-cache and host-tiered runs of the same
+    shared-prefix workload produce EXACTLY the cold run's tokens, while
+    actually skipping prefill work and restoring pages from host."""
+    cfg, params = model
+    gen = 6
+    # arrivals spaced past each request's lifetime: reuse must come from
+    # RETAINED pages, not live refcount sharing
+    mk = lambda: _shared_reqs(cfg, seed=21, n=3, gap=24, gen=gen)
+    e_cold, cold = _run(cfg, params, mk(), gen)
+    e_cache, cached = _run(cfg, params, mk(), gen, cache=12)
+    e_tier, tiered = _run(cfg, params, mk(), gen, cache=1, tier=8)
+    assert cached == cold
+    assert tiered == cold
+    mc, mt = e_cache.metrics(), e_tier.metrics()
+    assert mc["prefix_cache"]["prefill_skipped_tokens"] > 0
+    assert mt["prefix_cache"]["restored_host"] > 0
+    assert mt["prefix_cache"]["peak_resident"] \
+        <= mc["prefix_cache"]["peak_resident"]
+    for m in (mc, mt):
+        # retained pages are NOT leaks: free + cached == capacity
+        assert m["pages"]["free"] + m["pages"]["cached"] \
+            == m["pages"]["capacity"]
+    # cold engine (cache off) drains to a fully free pool, as before
+    m0 = e_cold.metrics()
+    assert m0["pages"]["free"] == m0["pages"]["capacity"]
+
+
+def test_engine_cache_hit_token_identical_kernel_backend(model):
+    """Same pin on the Pallas kernel decode backend (interpret mode): the
+    tiered gather/write round-trips real fp8 page payloads."""
+    cfg, params = model
+    gen = 4
+    mk = lambda: _shared_reqs(cfg, seed=22, n=2, gap=24, gen=gen)
+    _, cold = _run(cfg, params, mk(), gen, backend="kernel")
+    e, tiered = _run(cfg, params, mk(), gen, cache=1, tier=8,
+                     backend="kernel")
+    assert tiered == cold
+    assert e.metrics()["prefix_cache"]["restored_host"] > 0
+
+
+def test_engine_checkpoint_roundtrips_populated_host_tier(model, tmp_path):
+    """Snapshot with pages parked in the host tier -> FRESH engine restore:
+    tree + tier state must round-trip exactly, and the restored engine must
+    serve a host RESTORE for the next shared-prefix request (no recompute,
+    tokens identical to a cold twin)."""
+    cfg, params = model
+    gen = 4
+    warm = _shared_reqs(cfg, seed=23, n=1, gap=1, gen=gen)
+    # fresh Request object per run: Request carries mutable runtime state
+    nxt = lambda: dataclasses.replace(
+        _shared_reqs(cfg, seed=23, n=2, gap=24, gen=gen)[1], arrival=0.0)
+    S = max(len(r.prompt) for r in warm)
+    span = page_aligned_capacity(S + gen, cfg.page_size) // cfg.page_size
+    rcfg = dataclasses.replace(cfg, prefill_chunk=PAGE)
+    ecfg = EngineConfig(max_batch=2, max_pages_per_seq=span,
+                        n_pages=2 * span + 1, prefix_cache_pages=1,
+                        host_tier_pages=8, seed=0)
+    e1 = ServingEngine(rcfg, params, ecfg)
+    e1.run(warm)                              # populates cache + host tier
+    assert e1.tier.num_used > 0
+    path = e1.snapshot(str(tmp_path))
+    e2 = ServingEngine(rcfg, params, ecfg)
+    e2.restore(path)
+    assert e2.allocator.export_state() == e1.allocator.export_state()
+    assert e2.tier.export_state() == e1.tier.export_state()
+    # restored engine serves the host page for the follow-up request
+    # (run() also returns the pre-checkpoint completed record, rid 0)
+    results = {r.rid: r.tokens for r in e2.run([nxt()])}
+    assert e2.metrics()["prefix_cache"]["restored_host"] > 0
+    # cold twin for token identity
+    e3 = ServingEngine(rcfg, params, EngineConfig(
+        max_batch=2, max_pages_per_seq=span, n_pages=2 * span + 1, seed=0))
+    cold = {r.rid: r.tokens for r in e3.run([nxt()])}
+    assert results[1] == cold[1]
+
+
+def test_engine_restore_rejects_tier_checkpoint_without_tier(model,
+                                                            tmp_path):
+    """A checkpoint carrying host-tier state must not silently load into an
+    engine configured without one."""
+    cfg, params = model
+    rcfg = dataclasses.replace(cfg, prefill_chunk=PAGE)
+    span = 4
+    ecfg = EngineConfig(max_batch=2, max_pages_per_seq=span, n_pages=9,
+                        prefix_cache_pages=1, host_tier_pages=4, seed=0)
+    e1 = ServingEngine(rcfg, params, ecfg)
+    e1.run(_shared_reqs(cfg, seed=24, n=1, gap=1, gen=4))
+    assert e1.tier.num_used > 0
+    path = e1.snapshot(str(tmp_path))
+    e2 = ServingEngine(rcfg, params, dataclasses.replace(
+        ecfg, prefix_cache_pages=0, host_tier_pages=0))
+    with pytest.raises(ValueError, match="host"):
+        e2.restore(path)
