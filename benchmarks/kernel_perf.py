@@ -220,6 +220,82 @@ def parity_gate_paged_splitkv(B=2, H=8, d_c=64, d_r=16, N=512, page=64,
     return worst
 
 
+def amla_sweep(B=2, H=8, d_c=64, d_r=16, shapes=((512, 64), (1024, 128)),
+               splits=(1, 2, 4)):
+    """AMLA-vs-FMA rescale sweep through the REAL kernels (interpret mode).
+
+    Per (context, num_splits) point, both rescale modes run the same
+    quantized inputs:
+      * ``amla_vs_fma_rel`` — max rel difference between the two modes'
+        outputs. AMLA snaps (m, sigma_p) to the power-of-two grid, so the
+        modes differ only at P-quantization rounding level (~2% under FP8);
+        ``within_tol`` pins it at 5%.
+      * ``kernel_vs_ref`` — kernel-AMLA vs ref-AMLA parity (< 1e-4): the
+        exponent-add trick is EXACT, so the combine-free kernel must match
+        its jnp twin to interpret-mode float tolerance.
+    """
+    from repro.kernels.mla_decode.ops import snapmla_decode
+
+    rows = []
+    for N, bn in shapes:
+        cache, (q_c8, q_r, sq), scale = _splitkv_inputs(B, H, d_c, d_r, N, bn)
+        for s in splits:
+            o_f, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
+                                    block_n=bn, num_splits=s, rescale="fma")
+            o_a, _ = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
+                                    block_n=bn, num_splits=s, rescale="amla")
+            o_ra, _ = snapmla_decode(q_c8, q_r, sq, cache,
+                                     softmax_scale=scale, block_n=bn,
+                                     num_splits=s, use_kernel=False,
+                                     rescale="amla")
+            rel = float(jnp.max(jnp.abs(o_a - o_f))
+                        / (jnp.max(jnp.abs(o_f)) + 1e-12))
+            kr = float(jnp.max(jnp.abs(o_a - o_ra)))
+            rows.append({"context": N, "block_n": bn, "num_splits": s,
+                         "amla_vs_fma_rel": rel, "within_tol": rel < 0.05,
+                         "kernel_vs_ref": kr, "parity_ok": kr < 1e-4})
+    return rows
+
+
+def fetch_bound_sweep(B=2, d_c=32, d_r=16, page=32,
+                      capacities_pages=(4, 8),
+                      chunk_starts=(0, 17, 64, 256)):
+    """Bounded-vs-full-span prefix fetch grid (DMA accounting + parity).
+
+    ``bounded_pages`` = ceil(chunk_start / page) is the page traffic the
+    chunk_start-prefetched index maps actually issue (dead pages clamp to
+    the last live page, whose DMA the unchanged-index rule elides);
+    ``full_pages`` is what the span fetch streamed every chunk. The counts
+    are pure accounting — deterministic on any machine — and each point
+    also runs the REAL kernel against its ref twin (``parity_ok``)."""
+    from repro.core.kvcache import (CacheConfig, init_paged_mla_cache,
+                                    paged_mla_prefill)
+    from repro.kernels.quantize import fetch_dequant as FD
+
+    rows = []
+    for P in capacities_pages:
+        N = P * page
+        cfg = CacheConfig(fmt="fp8_e4m3", page_size=page)
+        pool = init_paged_mla_cache(cfg, B, N, d_c, d_r)
+        ks = jax.random.split(jax.random.PRNGKey(2), 2)
+        pool = paged_mla_prefill(pool, cfg,
+                                 jax.random.normal(ks[0], (B, N, d_c)),
+                                 jax.random.normal(ks[1], (B, N, d_r)))
+        for cs_val in chunk_starts:
+            cs_val = min(cs_val, N)
+            cs = jnp.full((B,), cs_val, jnp.int32)
+            kv_k = FD.paged_fetch_dequant_pallas(pool, chunk_start=cs)
+            kv_r = FD.paged_fetch_dequant_ref(pool, chunk_start=cs)
+            err = float(jnp.max(jnp.abs(kv_k.astype(jnp.float32)
+                                        - kv_r.astype(jnp.float32))))
+            bounded = -(-cs_val // page)
+            rows.append({"capacity_pages": P, "chunk_start": cs_val,
+                         "bounded_pages": bounded, "full_pages": P,
+                         "dma_savings": 1.0 - bounded / P,
+                         "parity_err": err, "parity_ok": err < 2e-5})
+    return rows
+
+
 def measured_splitkv_cpu(B=2, H=8, d_c=64, d_r=16, N=512, bn=64,
                          splits=(1, 2, 4), iters=3):
     """Interpret-mode wall time + parity of the split-KV decode path through
@@ -273,6 +349,7 @@ def measured_paged_splitkv_cpu(B=2, H=8, d_c=64, d_r=16, N=512, page=64,
 def emit_split_profile(path=None,
                        shapes=((512, 64, 2), (1024, 64, 2), (1024, 128, 4)),
                        paged_shapes=((512, 64, 2),),
+                       config_shapes=((512, 2),),
                        iters=2):
     """Run the autotuner's measured sweep over a few (capacity, block_n,
     batch) shapes — contiguous AND paged layouts, each timed on its own
@@ -292,6 +369,12 @@ def emit_split_profile(path=None,
         autotune.measure_split_sweep(capacity, block_n, batch,
                                      profile=profile, iters=iters,
                                      layout="paged")
+    # joint 2D (num_splits, block_n) sweep: one v2 entry per candidate
+    # block_n, each carrying best_us so lookup_config can compare across
+    # block sizes at the same (capacity, batch, layout)
+    for capacity, batch in config_shapes:
+        autotune.measure_config_sweep(capacity, batch, profile=profile,
+                                      iters=iters)
     out = profile.save(path)
     autotune.reset(profile)          # freshly measured profile wins in-process
     return out
@@ -302,6 +385,8 @@ def write_bench_splitkv(path="BENCH_splitkv.json"):
     payload = {
         "sweep": splitkv_sweep(),
         "paged_sweep": paged_splitkv_sweep(),
+        "amla_sweep": amla_sweep(),
+        "fetch_bound": fetch_bound_sweep(),
         "measured_cpu_interpret_us": {
             str(k): v for k, v in measured_splitkv_cpu().items()},
         "measured_paged_cpu_interpret_us": {
@@ -365,6 +450,20 @@ def main(csv=True):
                     f"visited={row['blocks_visited']}/{row['total_blocks']}pg "
                     f"(early-exit {row['early_exit_savings']*100:.0f}%) "
                     f"chain={row['critical_path_blocks']}pg"))
+    for row in payload["amla_sweep"]:
+        name = f"amla_ctx{row['context']}_s{row['num_splits']}"
+        out.append((name, 0.0,
+                    f"amla-vs-fma rel={row['amla_vs_fma_rel']:.3e} "
+                    f"(tol ok={row['within_tol']}) "
+                    f"kernel-vs-ref={row['kernel_vs_ref']:.1e} "
+                    f"(parity ok={row['parity_ok']})"))
+    for row in payload["fetch_bound"]:
+        name = (f"fetch_bound_cap{row['capacity_pages']}pg"
+                f"_cs{row['chunk_start']}")
+        out.append((name, 0.0,
+                    f"bounded={row['bounded_pages']}/{row['full_pages']}pg "
+                    f"(dma savings {row['dma_savings']*100:.0f}%) "
+                    f"parity ok={row['parity_ok']}"))
     for s, us_m in payload["measured_cpu_interpret_us"].items():
         out.append((f"splitkv_cpu_interpret_s{s}", us_m,
                     "pallas interpret mode on CPU (reduced size)"))

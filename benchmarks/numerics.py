@@ -113,6 +113,77 @@ def attention_fidelity(seed=0, B=4, N=2048, H=16, d_c=512, d_r=64):
     return rows
 
 
+def sink_guard_grid(seed=0, B=2, H=8, d_c=256, d_r=32, sink_tokens=4,
+                    contexts=(512, 2048)):
+    """P-Cast sink guard grid (context x sink-presence): attention-output
+    error of the FP8 pipeline with and without the first-tokens guard
+    (``CacheConfig.sink_tokens``), against the exact f32 oracle.
+
+    The synthetic sink is a massive-activation token at position 0 (content
+    norm ~100x a normal token — the KVSink statistic): roughly half the
+    heads lock onto it, so its FP8 representation error passes straight
+    through the softmax into the output AND into the logits (LSE). Queries
+    are exact and P-quantization is off so the grid isolates the CACHE
+    representation error — the one thing the guard changes. ``guard_ok``
+    requires (a) the guard never makes things worse anywhere on the grid,
+    and (b) with a sink present it strictly reduces both the max output
+    error and the max logit (LSE) error.
+    """
+    from repro.core.kvcache import MLACache as _MLACache
+    from repro.core.kvcache import sink_patched_content
+    rows = []
+    for N in contexts:
+        for sink_present in (False, True):
+            key = jax.random.PRNGKey(seed + N + int(sink_present))
+            k1, k2, k_sink = jax.random.split(key, 3)
+            # content-dominated KV: mild rope (no +-1e3 tails) so the grid
+            # measures the channel the guard changes — synth_mla_kv's rope
+            # outliers would swamp the sink's content error in every metric
+            content = jax.random.normal(k1, (B, N, d_c)) * 2.0
+            rope = jax.random.normal(k2, (B, N, d_r)) * 5.0
+            if sink_present:
+                content = content.at[:, 0].set(
+                    jax.random.normal(k_sink, (B, d_c)) * 300.0)
+            kq = jax.random.split(key, 3)
+            q_lat = jax.random.normal(kq[0], (B, H, d_c))
+            q_rope = jax.random.normal(kq[1], (B, H, d_r)) * 2.0
+            scale = 1.0 / np.sqrt(128 + d_r)
+            seq = jnp.full((B,), N, jnp.int32)
+            q_c8, q_r_s, sq = kref.prepare_q(q_lat, q_rope, "none")
+
+            def run(cache):
+                return kref.snapmla_decode_pipeline_ref(
+                    q_c8, q_r_s, sq, sink_patched_content(cache),
+                    cache.rope.astype(jnp.float32), cache.scale,
+                    cache.seq_lens, softmax_scale=scale, block_n=128,
+                    fmt="none")
+
+            o_ref, lse_ref = run(build_cache("f32ref", content, rope))
+            q_raq = quant.quantize_rope_aware(content, rope, "fp8_e4m3")
+            unguarded = _MLACache(q_raq.q_content, q_raq.rope_scaled,
+                                  q_raq.scale[..., 0], seq)
+            guarded = unguarded._replace(
+                sink=content[:, :sink_tokens].astype(jnp.float32))
+            o_u, lse_u = run(unguarded)
+            o_g, lse_g = run(guarded)
+            err_u = _err(o_u, o_ref)["max_rel_err"]
+            err_g = _err(o_g, o_ref)["max_rel_err"]
+            logit_u = float(jnp.max(jnp.abs(lse_u - lse_ref)))
+            logit_g = float(jnp.max(jnp.abs(lse_g - lse_ref)))
+            ok = (err_g <= err_u * 1.05 + 1e-7
+                  and logit_g <= logit_u * 1.05 + 1e-6)
+            if sink_present:
+                ok = ok and err_g < err_u and logit_g < logit_u
+            rows.append({"context": int(N), "sink_present": sink_present,
+                         "sink_tokens": sink_tokens,
+                         "max_rel_err_unguarded": err_u,
+                         "max_rel_err_guarded": err_g,
+                         "max_logit_err_unguarded": logit_u,
+                         "max_logit_err_guarded": logit_g,
+                         "guard_ok": bool(ok)})
+    return rows
+
+
 def _err(o, o_ref):
     err = np.asarray(o - o_ref, np.float64)
     refn = np.asarray(o_ref, np.float64)
@@ -146,6 +217,13 @@ def main(csv=True):
     for r in attention_fidelity():
         out.append(("fig5_fidelity_" + r["config"], 0.0,
                     f"mse={r['mse']:.3e} cos={r['cos_sim']:.6f}"))
+    for r in sink_guard_grid():
+        tag = f"sink_guard_N{r['context']}_" \
+              f"{'sink' if r['sink_present'] else 'nosink'}"
+        out.append((tag, 0.0,
+                    f"unguarded={r['max_rel_err_unguarded']:.3e} "
+                    f"guarded={r['max_rel_err_guarded']:.3e} "
+                    f"ok={r['guard_ok']}"))
     if csv:
         for name, us, derived in out:
             print(f"{name},{us:.1f},{derived}")

@@ -198,10 +198,31 @@ def run_chunked_twin(cfg, params, seed: int, chunk: int, budget: int,
                 "ttft_s_p99": _pct([r.ttft_s for r in results], 99),
                 "decode_tok_per_s": m["decode_tok_per_s"],
             },
+            "fetch_work": m["fetch_work"],
             "tokens": {r.rid: r.tokens for r in results},
         }
+    # capacity-independence twin: the SAME chunked workload on a pool with
+    # twice the page-table span. The bounded prefix fetch's page traffic
+    # tracks chunk_start, so pages_fetched_bounded must NOT move when the
+    # capacity doubles (a full-span fetch would double with it).
+    engine2x = ServingEngine(
+        _dc.replace(cfg, prefill_chunk=chunk), params,
+        EngineConfig(max_batch=max_batch, max_pages_per_seq=2 * span,
+                     prefill_budget=budget, seed=seed))
+    engine2x.run(_mixed_workload(seed, page, chunk, cfg.vocab_size))
+    fetch_2x = engine2x.metrics()["fetch_work"]
     mono, chk = runs["monolithic"], runs["chunked"]
     tokens_equal = mono.pop("tokens") == chk.pop("tokens")
+    fw = chk["fetch_work"]
+    fetch_bound = {
+        "pages_fetched_bounded": fw["pages_fetched_bounded"],
+        "pages_fetched_full": fw["pages_fetched_full"],
+        "fetch_savings": fw["fetch_savings"],
+        "bounded_at_2x_capacity": fetch_2x["pages_fetched_bounded"],
+        "full_at_2x_capacity": fetch_2x["pages_fetched_full"],
+        "capacity_independent": (fw["pages_fetched_bounded"]
+                                 == fetch_2x["pages_fetched_bounded"]),
+    }
     return {
         "prefill_chunk": chunk,
         "prefill_budget": budget,
@@ -209,6 +230,7 @@ def run_chunked_twin(cfg, params, seed: int, chunk: int, budget: int,
         "tokens_equal": tokens_equal,
         "monolithic": mono,
         "chunked": chk,
+        "fetch_bound": fetch_bound,
         # the acceptance headline: positive = chunked is better
         "delta": {
             "stall_tokens_per_step_max":

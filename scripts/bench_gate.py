@@ -66,6 +66,15 @@ METRICS: list[tuple[str, str, str, str, float]] = [
      "prefix_cache.tiered.pages_restored_host", "higher", 0.0),
     ("BENCH_serving.json", "serving.json",
      "prefix_cache.tiered.hbm_peak_resident_pages", "lower", 0.0),
+    # -- serving: bounded prefix fetch (deterministic page counters) -------
+    # fetch work must track chunk_start (pages below the chunk boundary),
+    # never the pool capacity: the 2x-capacity twin pins the same count.
+    ("BENCH_serving.json", "serving.json",
+     "chunked_prefill.fetch_bound.pages_fetched_bounded", "lower", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "chunked_prefill.fetch_bound.fetch_savings", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "chunked_prefill.fetch_bound.capacity_independent", "true", 0.0),
     # -- serving: fused EOS gating ----------------------------------------
     ("BENCH_serving.json", "serving.json",
      "fused_eos_gating.tokens_equal", "true", 0.0),
@@ -84,6 +93,19 @@ METRICS: list[tuple[str, str, str, str, float]] = [
      "sweep.15.t_us", "lower", 0.01),
     ("BENCH_splitkv.json", "splitkv.json",
      "paged_sweep.0.early_exit_savings", "higher", 0.0),
+    # -- splitkv: AMLA rescale accuracy + combine-free kernel parity -------
+    ("BENCH_splitkv.json", "splitkv.json",
+     "amla_sweep.2.within_tol", "true", 0.0),
+    ("BENCH_splitkv.json", "splitkv.json",
+     "amla_sweep.2.parity_ok", "true", 0.0),
+    # -- splitkv: bounded prefix fetch (deterministic DMA page counts) -----
+    # row 1 = (4-page table, chunk_start 17): one live page out of four
+    ("BENCH_splitkv.json", "splitkv.json",
+     "fetch_bound.1.parity_ok", "true", 0.0),
+    ("BENCH_splitkv.json", "splitkv.json",
+     "fetch_bound.1.bounded_pages", "lower", 0.0),
+    ("BENCH_splitkv.json", "splitkv.json",
+     "fetch_bound.1.dma_savings", "higher", 0.0),
 ]
 
 

@@ -47,6 +47,20 @@ python -m repro.launch.serve --smoke --gen 4 --backend shard-map
 python -m repro.launch.serve --smoke --gen 4 --fused \
     --temperature 0.8 --top-k 8 --top-p 0.9 --seed 3
 
+# raw-kernel-speed knobs: AMLA combine-free rescaling (exponent-add grid,
+# parity-pinned vs FMA in tests/test_parity.py), an explicit --block-n on
+# the contiguous kernel (2D autotune override), --block-n on a paged pool
+# (repages: block_n is structurally the page size), and the P-Cast sink
+# guard (--sink-tokens: raw-f32 first rows substituted at decode)
+python -m repro.launch.serve --smoke --gen 4 --backend kernel --rescale amla
+python -m repro.launch.serve --smoke --gen 4 --backend kernel \
+    --rescale amla --kv-splits 4
+python -m repro.launch.serve --smoke --gen 4 --backend kernel --block-n 16
+python -m repro.launch.serve --smoke --gen 4 --backend kernel --paged \
+    --block-n 64
+python -m repro.launch.serve --smoke --gen 4 --backend kernel --sink-tokens 4
+python -m repro.launch.serve --smoke --gen 4 --sink-tokens 4 --fused
+
 # serving engine: continuous batching with slot recycling + prefix sharing,
 # greedy-parity-gated against the static-batch generate path
 python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 2 \

@@ -59,6 +59,22 @@ class ModelConfig:
     # 0 = auto (measured split profile, else context-length heuristic),
     # 1 = single-pass, >1 = fixed splits. Applies to both cache layouts.
     kv_splits: int = 0
+    # decode-attention KV block size for CONTIGUOUS caches: 0 = page_size
+    # (the seed behavior), >0 = explicit override (must divide the cache
+    # capacity; `serve --block-n`). Paged caches ignore it — their block
+    # size is structurally the physical page (set page_size instead).
+    kv_block_n: int = 0
+    # per-block accumulator rescale in the decode kernels: "fma" = the exact
+    # max-shift FMA (seed), "amla" = the AMLA exponent-add fast path with
+    # combine-free split-KV partials (power-of-two sigma_p grid; differs
+    # from fma only at P-quantization rounding level)
+    kv_rescale: str = "fma"
+    # P-Cast sink guard: keep the first k tokens' latent content rows in full
+    # precision (attention sinks concentrate probability mass and are the
+    # most quantization-sensitive rows in the cache; the decoupled-RoPE part
+    # is already high-precision). Contiguous MLA caches only — paged pools
+    # keep every page quantized. 0 disables (the seed behavior).
+    kv_sink_tokens: int = 0
     # paged KV cache for 'mla' layers at decode: the latent cache lives in a
     # page pool addressed through a per-sequence page table (multi-tenant
     # pool layout) instead of a contiguous per-slot [B, N, ...] cache

@@ -32,7 +32,7 @@ _shard_map = getattr(jax, "shard_map", None)
 if _shard_map is None:                       # pragma: no cover - version dep
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from repro.core.kvcache import MLACache
+from repro.core.kvcache import MLACache, sink_patched_content
 from repro.kernels.mla_decode import ref as mla_ref
 
 
@@ -86,9 +86,11 @@ def mla_decode_shard_map(
                   P(dpa, None, None), P(dpa, None, None), P(dpa, None), P(dpa)),
         out_specs=P(dpa, "model", None),
     )
+    # sink guard substitution happens OUTSIDE the mapped region (batch-major
+    # elementwise op — pjit shards it over dp with no collectives).
     return f(q_c8, q_r.astype(jnp.float32), sigma_q,
-             cache.content, cache.rope.astype(jnp.float32), cache.scale,
-             cache.seq_lens)
+             sink_patched_content(cache), cache.rope.astype(jnp.float32),
+             cache.scale, cache.seq_lens)
 
 
 def mla_append_shard_map(mesh, dp_axes, cache: MLACache, cache_cfg,
@@ -112,8 +114,12 @@ def mla_append_shard_map(mesh, dp_axes, cache: MLACache, cache_cfg,
     from repro.core.kvcache import mla_append
 
     dpa = dp_axes
+    # sink guard shadow (if armed) is batch-major like content, so it shards
+    # over dp with the rest of the cache; None on unguarded caches.
     cache_specs = MLACache(P(dpa, None, None), P(dpa, None, None),
-                           P(dpa, None), P(dpa))
+                           P(dpa, None), P(dpa),
+                           sink=None if cache.sink is None
+                           else P(dpa, None, None))
 
     if active is None:
         def local_append(cache, c_kv, k_r):

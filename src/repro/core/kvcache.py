@@ -33,6 +33,15 @@ class CacheConfig:
     fmt: str = "fp8_e4m3"        # "fp8_e4m3" | "int8" | "none" (bf16 baseline)
     page_size: int = 128          # kernel KV-block granularity (§3.3.2: 128)
     window: int = 0               # >0: ring buffer of this many tokens (SWA)
+    # P-Cast sink guard (PAPERS.md: arxiv 2606.06521): attention sinks — the
+    # first tokens, which soak up outsized probability mass at long context —
+    # are exactly where FP8 E4M3 latent rows hurt most. >0 keeps the first
+    # ``sink_tokens`` tokens' latent content in full precision alongside the
+    # quantized rows (the decoupled-RoPE part already is), shadowed in
+    # ``MLACache.sink`` and substituted at the decode boundary. Contiguous
+    # MLA caches only; paged pools keep every page quantized (a sink page
+    # would need a per-page precision tag through the allocator — follow-on).
+    sink_tokens: int = 0
 
     @property
     def quantized(self) -> bool:
@@ -66,10 +75,37 @@ class MLACache(NamedTuple):
     rope: jax.Array       # [B, N, d_r]  bf16, pre-divided by `scale` if quantized
     scale: jax.Array      # [B, N]       f32 per-token content scale (ones if none)
     seq_lens: jax.Array   # [B] int32 number of valid tokens
+    # P-Cast sink guard shadow (CacheConfig.sink_tokens): [B, S_k, d_c] f32
+    # holding the first S_k tokens' RAW latent c_kv. None (default) keeps the
+    # pytree structure identical to the unguarded cache. The quantized rows
+    # underneath stay written as usual — the guard substitutes at the decode
+    # boundary (``sink_patched_content``), so every write path is unchanged.
+    sink: jax.Array | None = None
 
     @property
     def capacity(self) -> int:
         return self.content.shape[1]
+
+    @property
+    def sink_tokens(self) -> int:
+        return 0 if self.sink is None else self.sink.shape[1]
+
+
+def sink_patched_content(cache: MLACache) -> jax.Array:
+    """Content with the sink rows substituted in full precision.
+
+    Returns ``cache.content`` untouched when no guard is armed. With a guard,
+    returns an f32 copy whose first ``S_k`` rows are ``sink / scale`` — the
+    decode pipeline multiplies content by ``scale`` downstream, so guarded
+    rows reconstruct the exact latent c_kv while every other row keeps its
+    FP8/INT8 value. Rows past ``seq_lens`` are masked by the kernels anyway,
+    so unwritten sink slots (zeros) are never read."""
+    if cache.sink is None:
+        return cache.content
+    S_k = cache.sink.shape[1]
+    tiny = jnp.finfo(jnp.float32).tiny
+    patched = cache.sink / jnp.maximum(cache.scale[:, :S_k, None], tiny)
+    return cache.content.astype(jnp.float32).at[:, :S_k].set(patched)
 
 
 def init_mla_cache(cfg: CacheConfig, batch: int, max_len: int, d_c: int, d_r: int) -> MLACache:
@@ -81,11 +117,13 @@ def init_mla_cache(cfg: CacheConfig, batch: int, max_len: int, d_c: int, d_r: in
     copy per step in the old path).
     """
     n = page_aligned_capacity(max_len, cfg.page_size)
+    S_k = min(cfg.sink_tokens, n)
     return MLACache(
         content=jnp.zeros((batch, n, d_c), cfg.storage_dtype()),
         rope=jnp.zeros((batch, n, d_r), jnp.bfloat16),
         scale=jnp.ones((batch, n), jnp.float32),
         seq_lens=jnp.zeros((batch,), jnp.int32),
+        sink=(jnp.zeros((batch, S_k, d_c), jnp.float32) if S_k > 0 else None),
     )
 
 
@@ -137,18 +175,46 @@ def mla_append(cache: MLACache, cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Arra
         scale=jax.vmap(upd)(cache.scale, scale, idx),
         seq_lens=cache.seq_lens + (1 if active is None
                                    else active.astype(cache.seq_lens.dtype)),
+        sink=_sink_append(cache, c_kv, idx, active),
     )
+
+
+def _sink_append(cache: MLACache, c_kv: jax.Array, idx: jax.Array,
+                 active: jax.Array | None) -> jax.Array | None:
+    """Shadow-write the raw latent row into the sink guard when the append
+    position lands inside the guarded prefix (idx < S_k). Shared by
+    ``mla_append`` and the fused-append kernel wrapper so both write paths
+    keep the guard coherent. No-op (None) on unguarded caches."""
+    if cache.sink is None:
+        return None
+    S_k = cache.sink.shape[1]
+    ok = idx < S_k
+    if active is not None:
+        ok = jnp.logical_and(ok, active)
+
+    def upd(sink_b, val_b, idx_b, ok_b):
+        i = jnp.minimum(idx_b, S_k - 1)
+        old_b = jax.lax.dynamic_slice(sink_b, (i, 0), (1, sink_b.shape[1]))[0]
+        new_b = jnp.where(ok_b, val_b, old_b)
+        return jax.lax.dynamic_update_slice(sink_b, new_b[None], (i, 0))
+
+    return jax.vmap(upd)(cache.sink, c_kv.astype(jnp.float32), idx, ok)
 
 
 def mla_prefill(cache: MLACache, cfg: CacheConfig, c_kv: jax.Array, k_r: jax.Array) -> MLACache:
     """Bulk-write a prefix: c_kv [B, S, d_c], k_r [B, S, d_r] at positions [0, S)."""
     content, rope, scale = mla_quantize_entry(cfg, c_kv, k_r)
     S = c_kv.shape[1]
+    sink = cache.sink
+    if sink is not None:
+        W = min(S, sink.shape[1])
+        sink = sink.at[:, :W].set(c_kv[:, :W].astype(jnp.float32))
     return MLACache(
         content=cache.content.at[:, :S].set(content.astype(cache.content.dtype)),
         rope=cache.rope.at[:, :S].set(rope.astype(jnp.bfloat16)),
         scale=cache.scale.at[:, :S].set(scale),
         seq_lens=jnp.full_like(cache.seq_lens, S),
+        sink=sink,
     )
 
 

@@ -41,6 +41,13 @@ class SnapMLAConfig:
     # fallback (ops.resolve_num_splits), 1 = always single-pass (bit-exact
     # seed path), >1 = fixed split count. Applies to BOTH cache layouts.
     num_splits: int | None = None
+    # contiguous-cache decode block size: 0 = cache.page_size (seed
+    # behavior); >0 = explicit override. Paged caches are structurally
+    # pinned to the physical page size.
+    block_n: int = 0
+    # per-block accumulator rescale: "fma" (exact seed path) | "amla"
+    # (exponent-add fast path, combine-free split-KV partials)
+    rescale: str = "fma"
     # paged KV: the cache is a PagedMLAPool (page-table-driven kernels) rather
     # than a contiguous per-slot MLACache.
     paged: bool = False
@@ -113,9 +120,11 @@ def decode_step(
         "kernel" if cfg.use_kernel else "ref", paged=paged, batch=B,
         n_heads=cfg.mla.n_heads)
     bcfg = mla_backends.BackendConfig(
-        softmax_scale=cfg.mla.softmax_scale, block_n=cfg.cache.page_size,
+        softmax_scale=cfg.mla.softmax_scale,
+        block_n=cfg.block_n or cfg.cache.page_size,
         fmt=cfg.fmt if cfg.cache.quantized else "none",
-        num_splits=cfg.num_splits, interpret=cfg.interpret)
+        num_splits=cfg.num_splits, interpret=cfg.interpret,
+        rescale=cfg.rescale)
     o_lat = backend.decode(
         mla_backends.DecodeQuery(q_c8, q_r_s, sigma_q), cache, bcfg)
 

@@ -1,0 +1,67 @@
+"""AMLA-style power-of-two rescaling helpers (PAPERS.md: arxiv 2509.25224).
+
+The FlashAttention online-softmax rescale multiplies the accumulator by
+``corr = exp(m_prev - m_new) * (sp_prev / sp_new)`` every KV block — an FMA
+on the full [H, d_c] accumulator. AMLA's observation: if the running max and
+the P-quantization scale are snapped onto the power-of-two grid
+(``m = i * ln2``, ``sigma_p = 2^e`` with integer i, e), every rescale factor
+becomes an exact power of two ``2^k`` that can be applied by ADDING
+``k << 23`` to the int32 bit pattern of the f32 accumulator — a pure integer
+add on the exponent field, no FMA, no exp.
+
+Shared verbatim by the Pallas kernel (`kernel.py`) and the pure-jnp oracle
+(`ref.py`) so the two AMLA paths are the *same arithmetic* (parity ~1e-5,
+like the FMA mode). All helpers are plain jnp/lax and lower both inside a
+Pallas kernel body and in interpret/CPU mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+LN2 = 0.6931471805599453
+LOG2E = 1.4426950408889634
+
+
+def exp2_mul(x: jax.Array, k: jax.Array) -> jax.Array:
+    """``x * 2**k`` for f32 ``x`` and int32 ``k`` via an integer exponent add.
+
+    The hot path adds ``k << 23`` to the bit pattern of ``x`` (AMLA's
+    MUL-by-ADD). The bit trick is only valid when both the input and the
+    result are normal numbers; zeros, subnormals, and exponent over/underflow
+    fall back to an exact multiply by ``exp2(k)`` (still a power of two, so
+    both paths are bit-exact where they overlap).
+    """
+    k = k.astype(jnp.int32)
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    biased = (bits >> 23) & 0xFF
+    shifted = biased + k
+    fast = (biased > 0) & (shifted > 0) & (shifted < 255)
+    y = jax.lax.bitcast_convert_type(bits + (k << 23), jnp.float32)
+    return jnp.where(fast, y, x * jnp.exp2(k.astype(jnp.float32)))
+
+
+def quantize_block_pow2(p_fused: jax.Array, fmt: str, qmax: float):
+    """Block-wise dynamic P quantization with a POWER-OF-TWO scale.
+
+    Like ``kernel._quantize_block`` but the scale is rounded UP to the next
+    power of two (``sigma_p = 2^e``, e integer), so cross-block rescales stay
+    on the 2^k grid. Rounding up keeps ``|p| / sigma_p <= qmax``. Returns
+    ``(p8, e)`` with the scale EXPONENT ``e`` (f32-held integer), not the
+    scale itself.
+    """
+    amax = jnp.max(jnp.abs(p_fused), axis=-1)
+    e = jnp.ceil(jnp.log2(jnp.maximum(amax, quant.EPS) / qmax))
+    inv = jnp.exp2(-e)                       # exact: power of two
+    if fmt == "fp8_e4m3":
+        p8 = jnp.clip(p_fused * inv[:, None], -quant.FP8_MAX, quant.FP8_MAX)
+        p8 = p8.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    elif fmt == "int8":
+        p8 = jnp.clip(jnp.round(p_fused * inv[:, None]), -127, 127)
+        p8 = p8.astype(jnp.int8).astype(jnp.float32)
+    else:  # "none": scale-fused but unquantized (BF16-pipeline baseline)
+        e = jnp.zeros_like(e)
+        p8 = p_fused
+    return p8, e

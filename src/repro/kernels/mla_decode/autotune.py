@@ -13,21 +13,30 @@ emit (``benchmarks/kernel_perf.py::emit_split_profile``). Resolution order in
      scales roughly with batch ratio, so 64 is "closer" to 128 than to 8)
   3. no usable entry / no profile file                  -> heuristic fallback
 
-The profile file format (version 1); the key grows a "/paged" suffix for
+The profile file format (version 2); the key grows a "/paged" suffix for
 sweeps measured on the paged kernel (contiguous and paged plans never mix),
 and "best" prefers smaller split counts within WIN_MARGIN so measurement
 jitter can't flip a plan away from the bit-exact single-pass path:
 
     {
-      "version": 1,
+      "version": 2,
       "entries": {
         "<capacity>/<block_n>/<batch>": {
           "best": 4,
+          "best_us": 421.9,
           "measured_us": {"1": 812.3, "2": 530.1, "4": 421.9, "8": 455.0}
         },
         "<capacity>/<block_n>/<batch>/paged": {...}
       }
     }
+
+v2 over v1: each entry records ``best_us`` — the measured time OF the
+recorded best — so entries at DIFFERENT block_n for the same
+(capacity, batch, layout) are comparable and the joint 2D
+``(num_splits, block_n)`` plan (``lookup_config`` / ``tuned_split_config``)
+falls out of the same flat key space. v1 files still load: ``best_us`` is
+derived from the v1 entry's own ``measured_us[best]`` on demand, so an
+existing ``BENCH_splits_profile.json`` keeps driving plans unchanged.
 
 The default artifact path is ``BENCH_splits_profile.json`` at the repo root
 (next to BENCH_splitkv.json); override with ``SNAPMLA_SPLIT_PROFILE``. The
@@ -39,9 +48,18 @@ import json
 import os
 import pathlib
 import time
+from typing import NamedTuple
 
 PROFILE_ENV = "SNAPMLA_SPLIT_PROFILE"
-PROFILE_VERSION = 1
+PROFILE_VERSION = 2
+_LOADABLE_VERSIONS = (1, 2)    # v1 entries are a strict subset of v2's
+
+
+class SplitConfig(NamedTuple):
+    """A joint split-KV plan: how many splits, at which KV block size."""
+
+    num_splits: int
+    block_n: int
 
 # Anchored at the repo root (autotune.py is src/repro/kernels/mla_decode/),
 # NOT the process CWD — `serve` launched from any directory and `pytest` from
@@ -87,6 +105,18 @@ def _pick_best(measured_us: dict[int, float]) -> int:
         if best is None or measured_us[s] < measured_us[best] * (1 - WIN_MARGIN):
             best = s
     return best
+
+
+def _entry_best_us(entry: dict) -> float | None:
+    """Measured microseconds of an entry's recorded best — v2 entries carry
+    it as ``best_us``; for v1 entries it is derived from the entry's own
+    sweep (``measured_us[best]``). None for malformed entries."""
+    try:
+        if "best_us" in entry:
+            return float(entry["best_us"])
+        return float(entry["measured_us"][str(int(entry["best"]))])
+    except (TypeError, KeyError, ValueError):
+        return None
 
 
 class SplitProfile:
@@ -138,6 +168,41 @@ class SplitProfile:
             return None
         return min(candidates)[2]
 
+    def lookup_config(self, capacity: int, batch: int | None,
+                      layout: str = "contiguous") -> "SplitConfig | None":
+        """Joint 2D plan: among ALL entries sharing (capacity, layout) — any
+        block_n — pick the (num_splits, block_n) whose recorded best ran
+        fastest. Exact-batch entries win; otherwise the nearest batch in
+        log-space is used (same interpolation rule as ``lookup_nearest``),
+        and only that batch's entries compete. Ties in measured time go to
+        the smaller block_n. None when no comparable entry exists."""
+        if batch is None:
+            return None
+        by_batch: dict[int, list[tuple[float, int, int]]] = {}
+        for key, entry in self.entries.items():
+            parsed = _parse_key(key)
+            if parsed is None or parsed[0] != capacity or parsed[3] != layout:
+                continue
+            us = _entry_best_us(entry)
+            try:
+                best = int(entry["best"])
+            except (TypeError, KeyError, ValueError):
+                continue
+            if us is None:
+                continue
+            by_batch.setdefault(parsed[2], []).append((us, parsed[1], best))
+        if not by_batch:
+            return None
+        if batch in by_batch:
+            pool = by_batch[batch]
+        else:
+            def log_dist(b):
+                hi, lo = max(b, batch, 1), max(min(b, batch), 1)
+                return (hi / lo, b)
+            pool = by_batch[min(by_batch, key=log_dist)]
+        us, bn, best = min(pool)
+        return SplitConfig(num_splits=best, block_n=bn)
+
     def record(self, capacity: int, block_n: int, batch: int,
                measured_us: dict[int, float],
                layout: str = "contiguous") -> int:
@@ -148,6 +213,7 @@ class SplitProfile:
         best = _pick_best(measured_us)
         self.entries[_key(capacity, block_n, batch, layout)] = {
             "best": int(best),
+            "best_us": float(measured_us[best]),
             "measured_us": {str(k): float(v) for k, v in measured_us.items()},
         }
         return int(best)
@@ -167,7 +233,7 @@ class SplitProfile:
             payload = json.loads(p.read_text())
         except (OSError, ValueError):
             return cls()
-        if payload.get("version") != PROFILE_VERSION:
+        if payload.get("version") not in _LOADABLE_VERSIONS:
             return cls()
         entries = payload.get("entries", {})
         return cls(entries if isinstance(entries, dict) else {})
@@ -195,6 +261,14 @@ def tuned_num_splits(capacity: int, block_n: int, batch: int | None,
     """Measured best for the shape: exact (capacity, block_n, batch, layout)
     hit, else nearest-batch interpolation; None -> heuristic fallback."""
     return get_profile().lookup_nearest(capacity, block_n, batch, layout)
+
+
+def tuned_split_config(capacity: int, batch: int | None,
+                       layout: str = "contiguous") -> SplitConfig | None:
+    """Joint measured 2D plan (num_splits, block_n) for the shape — the
+    fastest recorded best across every block_n the profile has measured at
+    this (capacity, layout); None -> heuristic fallback."""
+    return get_profile().lookup_config(capacity, batch, layout)
 
 
 # ---------------------------------------------------------------------------
@@ -306,4 +380,69 @@ def synthetic_timer(timings_us: dict[int, float]):
     no kernel execution at all."""
     def timer(s, _run):
         return timings_us[s]
+    return timer
+
+
+# ---------------------------------------------------------------------------
+# Joint (num_splits, block_n) sweep — the 2D autotuner
+# ---------------------------------------------------------------------------
+
+def candidate_block_ns(capacity: int,
+                       block_ns: tuple[int, ...] = (32, 64, 128, 256)
+                       ) -> list[int]:
+    """Block sizes the contiguous kernel can take at this capacity: the
+    standard candidates that divide it (paged layouts never sweep block_n —
+    there it is structurally pinned to the physical page size)."""
+    out = [bn for bn in block_ns if bn <= capacity and capacity % bn == 0]
+    return out or [capacity]
+
+
+def measure_config_sweep(capacity: int, batch: int,
+                         *, block_ns: list[int] | None = None,
+                         d_c: int = 64, d_r: int = 16, heads: int = 8,
+                         fmt: str = "fp8_e4m3", fill: float = 0.75,
+                         iters: int = 3,
+                         profile: SplitProfile | None = None,
+                         layout: str = "contiguous",
+                         interpret: bool | None = None,
+                         timer=None) -> dict[tuple[int, int], float]:
+    """Joint 2D sweep: run ``measure_split_sweep`` at every candidate
+    ``block_n`` so the profile holds one entry per (capacity, block_n,
+    batch, layout) and ``lookup_config`` can pick the joint winner.
+
+    ``interpret=None`` resolves to COMPILED measurement on TPU (interpret
+    elsewhere) — production shapes should be timed as the hardware runs
+    them, not through the interpreter. ``timer`` here takes
+    ``timer(block_n, num_splits, run)`` (tests inject a fixed 2D grid via
+    ``synthetic_timer_2d``). Returns {(block_n, num_splits): us}."""
+    if interpret is None:
+        import jax
+        interpret = jax.default_backend() != "tpu"
+    if block_ns is None:
+        block_ns = (candidate_block_ns(capacity) if layout == "contiguous"
+                    else [block_ns_for_paged(capacity)])
+    measured: dict[tuple[int, int], float] = {}
+    for bn in block_ns:
+        bn_timer = None if timer is None else \
+            (lambda s, run, _bn=bn: timer(_bn, s, run))
+        sweep = measure_split_sweep(
+            capacity, bn, batch, d_c=d_c, d_r=d_r, heads=heads, fmt=fmt,
+            fill=fill, iters=iters, profile=profile, layout=layout,
+            interpret=interpret, timer=bn_timer)
+        for s, us in sweep.items():
+            measured[(bn, s)] = us
+    return measured
+
+
+def block_ns_for_paged(capacity: int, page_size: int = 128) -> int:
+    """Paged layouts have no block_n freedom: the kernel's block axis IS the
+    physical page. Kept as a function so call sites state the constraint."""
+    return min(page_size, capacity)
+
+
+def synthetic_timer_2d(timings_us: dict[tuple[int, int], float]):
+    """Deterministic 2D ``timer`` for tests: fixed microseconds per
+    (block_n, num_splits) cell, no kernel execution at all."""
+    def timer(bn, s, _run):
+        return timings_us[(bn, s)]
     return timer

@@ -40,7 +40,8 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.kvcache import MLACache, PagedMLAPool, paged_gather
+from repro.core.kvcache import (MLACache, PagedMLAPool, paged_gather,
+                                sink_patched_content)
 from repro.kernels.mla_decode import ops as _ops
 from repro.kernels.mla_decode import ref as _ref
 
@@ -57,18 +58,31 @@ class DecodeQuery(NamedTuple):
 class BackendConfig:
     """Static (trace-time) decode-attention parameters shared by every
     backend. ``num_splits`` None/0 = autotuner profile -> heuristic;
-    ``interpret`` None = interpret on CPU, compiled on TPU."""
+    ``block_n`` 0 = joint 2D (num_splits, block_n) plan from the v2 profile
+    (contiguous caches only — paged block_n is structurally the page size);
+    ``interpret`` None = interpret on CPU, compiled on TPU; ``rescale``
+    "fma" = the exact per-block FMA rescale, "amla" = the AMLA exponent-add
+    (combine-free split-KV emission) fast path."""
 
     softmax_scale: float
     block_n: int = 128
     fmt: str = "fp8_e4m3"
     num_splits: int | None = None
     interpret: bool | None = None
+    rescale: str = "fma"
 
     def resolved_interpret(self) -> bool:
         if self.interpret is None:
             return jax.default_backend() != "tpu"
         return self.interpret
+
+
+def _split_plan(cfg: BackendConfig, capacity: int, batch: int,
+                layout: str, page_size: int | None = None) -> _ops.SplitConfig:
+    """The one place every backend resolves its (num_splits, block_n) plan."""
+    return _ops.resolve_split_config(
+        cfg.num_splits, cfg.block_n if layout == "contiguous" else None,
+        capacity, batch=batch, layout=layout, page_size=page_size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,22 +179,22 @@ def _supports_shard_map(cfg=None, mesh=None, batch=None, *, paged=False,
 
 def _jnp_ref_decode(q: DecodeQuery, cache: MLACache, cfg: BackendConfig,
                     ctx: Any = None) -> jax.Array:
-    splits = _ops.resolve_num_splits(cfg.num_splits, cache.capacity,
-                                     cfg.block_n, q.q_c8.shape[0],
-                                     "contiguous")
+    plan = _split_plan(cfg, cache.capacity, q.q_c8.shape[0], "contiguous")
     o, _lse = _ref.snapmla_decode_parallel_any(
-        q.q_c8, q.q_r.astype(jnp.float32), q.sigma_q, cache.content,
+        q.q_c8, q.q_r.astype(jnp.float32), q.sigma_q,
+        sink_patched_content(cache),
         cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens,
-        softmax_scale=cfg.softmax_scale, num_splits=splits,
-        block_n=cfg.block_n, fmt=cfg.fmt)
+        softmax_scale=cfg.softmax_scale, num_splits=plan.num_splits,
+        block_n=plan.block_n, fmt=cfg.fmt)
     return o
 
 
 def _jnp_paged_ref_decode(q: DecodeQuery, pool: PagedMLAPool,
                           cfg: BackendConfig, ctx: Any = None) -> jax.Array:
     page = pool.page_size
-    splits = _ops.resolve_num_splits(cfg.num_splits, pool.capacity, page,
-                                     q.q_c8.shape[0], "paged")
+    plan = _split_plan(cfg, pool.capacity, q.q_c8.shape[0], "paged",
+                       page_size=page)
+    splits = plan.num_splits
     content, rope, scale = paged_gather(pool)
     o, _lse = _ref.snapmla_decode_parallel_any(
         q.q_c8, q.q_r.astype(jnp.float32), q.sigma_q, content,
@@ -192,10 +206,12 @@ def _jnp_paged_ref_decode(q: DecodeQuery, pool: PagedMLAPool,
 
 def _pallas_decode(q: DecodeQuery, cache: MLACache, cfg: BackendConfig,
                    ctx: Any = None) -> jax.Array:
+    plan = _split_plan(cfg, cache.capacity, q.q_c8.shape[0], "contiguous")
     o, _lse = _ops.snapmla_decode(
         q.q_c8, q.q_r, q.sigma_q, cache, softmax_scale=cfg.softmax_scale,
-        block_n=cfg.block_n, fmt=cfg.fmt, num_splits=cfg.num_splits,
-        use_kernel=True, interpret=cfg.resolved_interpret())
+        block_n=plan.block_n, fmt=cfg.fmt, num_splits=plan.num_splits,
+        use_kernel=True, interpret=cfg.resolved_interpret(),
+        rescale=cfg.rescale)
     return o
 
 
@@ -204,7 +220,7 @@ def _pallas_paged_decode(q: DecodeQuery, pool: PagedMLAPool,
     o, _lse = _ops.snapmla_decode_paged(
         q.q_c8, q.q_r, q.sigma_q, pool, softmax_scale=cfg.softmax_scale,
         fmt=cfg.fmt, num_splits=cfg.num_splits, use_kernel=True,
-        interpret=cfg.resolved_interpret())
+        interpret=cfg.resolved_interpret(), rescale=cfg.rescale)
     return o
 
 
@@ -213,13 +229,11 @@ def _shard_map_decode(q: DecodeQuery, cache: MLACache, cfg: BackendConfig,
     if not ctx or ctx.get("mesh") is None:
         raise ValueError("shard_map backend needs ctx={'mesh': ..., 'dp': ...}")
     from repro.core.distributed_decode import mla_decode_shard_map
-    splits = _ops.resolve_num_splits(cfg.num_splits, cache.capacity,
-                                     cfg.block_n, q.q_c8.shape[0],
-                                     "contiguous")
+    plan = _split_plan(cfg, cache.capacity, q.q_c8.shape[0], "contiguous")
     return mla_decode_shard_map(
         ctx["mesh"], ctx.get("dp"), q.q_c8, q.q_r, q.sigma_q, cache,
-        softmax_scale=cfg.softmax_scale, block_n=cfg.block_n, fmt=cfg.fmt,
-        num_splits=splits)
+        softmax_scale=cfg.softmax_scale, block_n=plan.block_n, fmt=cfg.fmt,
+        num_splits=plan.num_splits)
 
 
 register(DecodeBackend("jnp_ref", "contiguous", "ref",

@@ -72,6 +72,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import quant
+from repro.kernels.mla_decode import amla
 
 NEG_INF = -1e30
 
@@ -93,12 +94,23 @@ def _quantize_block(p_fused, fmt: str, qmax: float):
 
 def _block_pipeline(qc, qr, sq, c, r, sk, tok0, seq_len,
                     m_ref, l_ref, sp_ref, acc_ref, *,
-                    softmax_scale: float, fmt: str, qmax: float):
+                    softmax_scale: float, fmt: str, qmax: float,
+                    rescale: str = "fma"):
     """One KV block of the scale-fused FP8 pipeline (steps 1-5 of §3.2.3).
 
     Shared verbatim between the single-pass, split-KV, and paged kernels so
     their per-block arithmetic is bit-identical. ``tok0`` is the absolute
     token index of the block's first entry; state is carried in VMEM scratch.
+
+    ``rescale`` selects the cross-block accumulator rescale:
+
+      * ``"fma"`` (default, exact): the Eq. 12-13 max-shift FMA —
+        ``corr = exp(m_prev - m_new) * (sp_prev / sp_new)``.
+      * ``"amla"``: the running max and sigma_p live on the power-of-two grid
+        (``m = i*ln2``, ``sigma_p = 2^e``; m_ref carries i, sp_ref carries e)
+        so every rescale factor is an exact ``2^k`` applied via an integer
+        add on the accumulator exponent bits (``amla.exp2_mul``) — no exp,
+        no FMA on the [H, d_c] accumulator.
     """
     # --- Key Step 1: uniform QK + single rescale -------------------------
     s = jax.lax.dot_general(qc, c, (((1,), (1,)), ((), ())),
@@ -110,6 +122,31 @@ def _block_pipeline(qc, qr, sq, c, r, sk, tok0, seq_len,
     tok = tok0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = tok < seq_len
     s = jnp.where(valid, s, NEG_INF)
+
+    if rescale == "amla":
+        i_prev, l_prev, e_prev = m_ref[...], l_ref[...], sp_ref[...]
+        # max snapped UP onto the log2 grid: monotone, and e <= 1 below
+        i_new = jnp.maximum(i_prev,
+                            jnp.ceil(jnp.max(s, axis=-1) * amla.LOG2E))
+        e = jnp.exp(s - (i_new * amla.LN2)[:, None])
+        e = jnp.where(valid, e, 0.0)
+        p_fused = e * sk[None, :]
+        p8, e_new = amla.quantize_block_pow2(p_fused, fmt, qmax)
+        # corr = 2^k with k = (i_prev - i_new) + (e_prev - e_new): a pure
+        # integer exponent add on the accumulator (l_prev == 0 -> no state
+        # yet, k pinned to 0 so the sentinel i_prev never reaches int32)
+        k = jnp.where(l_prev > 0.0,
+                      (i_prev - i_new) + (e_prev - e_new),
+                      0.0).astype(jnp.int32)                       # [H]
+        l_ref[...] = (amla.exp2_mul(l_prev, k)
+                      + amla.exp2_mul(jnp.sum(e, axis=-1),
+                                      -e_new.astype(jnp.int32)))
+        acc_ref[...] = amla.exp2_mul(acc_ref[...], k[:, None]) + \
+            jax.lax.dot_general(p8, c, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = i_new
+        sp_ref[...] = e_new
+        return
 
     # --- online softmax ---------------------------------------------------
     m_prev, l_prev, sp_prev = m_ref[...], l_ref[...], sp_ref[...]
@@ -159,6 +196,7 @@ def _mla_decode_kernel(
     fmt: str,
     qmax: float,
     paged: bool,
+    rescale: str = "fma",
 ):
     b = pl.program_id(0)
     j = pl.program_id(1)
@@ -182,13 +220,19 @@ def _mla_decode_kernel(
 
     _block_pipeline(qc, qr, sq, c, r, sk, j * block_n, seq_lens_ref[b],
                     m_ref, l_ref, sp_ref, acc_ref,
-                    softmax_scale=softmax_scale, fmt=fmt, qmax=qmax)
+                    softmax_scale=softmax_scale, fmt=fmt, qmax=qmax,
+                    rescale=rescale)
 
     @pl.when(j == nblocks - 1)
     def _finalize():
         l = l_ref[...]
         o_ref[0] = acc_ref[...] / l[:, None]                       # sigma_p cancels
-        lse_ref[0] = m_ref[...] + jnp.log(sp_ref[...] * l)
+        if rescale == "amla":
+            # m_ref/sp_ref hold the integer exponents i and e: the scale-
+            # carrying LSE is (i + e) * ln2 + log(l~)
+            lse_ref[0] = (m_ref[...] + sp_ref[...]) * amla.LN2 + jnp.log(l)
+        else:
+            lse_ref[0] = m_ref[...] + jnp.log(sp_ref[...] * l)
 
 
 def mla_decode_pallas(
@@ -204,6 +248,7 @@ def mla_decode_pallas(
     block_n: int = 128,
     fmt: str = "fp8_e4m3",
     interpret: bool = True,
+    rescale: str = "fma",
 ) -> tuple[jax.Array, jax.Array]:
     """Contiguous-cache SnapMLA decode. Returns (o [B,H,d_c] f32, lse [B,H])."""
     B, H, d_c = q_c8.shape
@@ -215,7 +260,7 @@ def mla_decode_pallas(
 
     kernel = functools.partial(
         _mla_decode_kernel, softmax_scale=softmax_scale, block_n=block_n,
-        fmt=fmt, qmax=qmax, paged=False)
+        fmt=fmt, qmax=qmax, paged=False, rescale=rescale)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -277,6 +322,7 @@ def _mla_decode_splitkv_kernel(
     blocks_per_split: int,
     fmt: str,
     qmax: float,
+    rescale: str = "fma",
 ):
     b = pl.program_id(0)
     s_id = pl.program_id(1)
@@ -302,20 +348,35 @@ def _mla_decode_splitkv_kernel(
         sk = sigma_k_ref[0].astype(jnp.float32)
         _block_pipeline(qc, qr, sq, c, r, sk, g * block_n, seq_lens_ref[b],
                         m_ref, l_ref, sp_ref, acc_ref,
-                        softmax_scale=softmax_scale, fmt=fmt, qmax=qmax)
+                        softmax_scale=softmax_scale, fmt=fmt, qmax=qmax,
+                        rescale=rescale)
 
     @pl.when(j == blocks_per_split - 1)
     def _finalize():
-        # Empty splits (no live block touched the state) publish a neutral
-        # partial: o = 0, lse = NEG_INF — the combine weight exp(lse - m*)
-        # then vanishes. l > 0 iff at least one valid token was accumulated.
         l = l_ref[...]
         has = l > 0.0
-        safe_l = jnp.where(has, l, 1.0)
-        o_ref[0, 0] = jnp.where(has[:, None], acc_ref[...] / safe_l[:, None], 0.0)
-        lse_ref[0, 0] = jnp.where(
-            has, m_ref[...] + jnp.log(sp_ref[...] * safe_l), NEG_INF)
-        sp_ref_out[0, 0] = sp_ref[...]
+        if rescale == "amla":
+            # COMBINE-FREE emission: the partial is published UNNORMALIZED —
+            # raw accumulator in the o slot, raw l~ in the lse slot, and the
+            # split's integer grid exponent g = i + e in the sigma_p slot
+            # (exp(m_s) * sigma_p_s == 2^(i_s + e_s) exactly). The combine
+            # then needs no per-split normalization and no exp: cross-split
+            # rescaling is a pure integer exponent add. Empty splits publish
+            # (0, 0, 0) and contribute nothing.
+            o_ref[0, 0] = acc_ref[...]
+            lse_ref[0, 0] = l
+            sp_ref_out[0, 0] = jnp.where(has, m_ref[...] + sp_ref[...], 0.0)
+        else:
+            # Empty splits (no live block touched the state) publish a
+            # neutral partial: o = 0, lse = NEG_INF — the combine weight
+            # exp(lse - m*) then vanishes. l > 0 iff at least one valid
+            # token was accumulated.
+            safe_l = jnp.where(has, l, 1.0)
+            o_ref[0, 0] = jnp.where(has[:, None],
+                                    acc_ref[...] / safe_l[:, None], 0.0)
+            lse_ref[0, 0] = jnp.where(
+                has, m_ref[...] + jnp.log(sp_ref[...] * safe_l), NEG_INF)
+            sp_ref_out[0, 0] = sp_ref[...]
 
 
 def _clamped_block_index(seq_lens_ref, b, s_id, j, blocks_per_split, block_n):
@@ -389,14 +450,17 @@ def mla_decode_splitkv_pallas(
     fmt: str = "fp8_e4m3",
     interpret: bool = True,
     return_partials: bool = False,
+    rescale: str = "fma",
 ):
     """Sequence-parallel (flash-decoding) SnapMLA decode.
 
     Grid (batch, num_splits, kv_blocks_per_split): each split runs the
     scale-fused FP8 pipeline over its KV slice and emits partial
-    (o, lse, sigma_p); ``lse_combine_pallas`` merges them. Returns
-    (o [B,H,d_c] f32, lse [B,H]) — plus the raw partials when
-    ``return_partials`` (for oracles/telemetry).
+    (o, lse, sigma_p); ``lse_combine_pallas`` (or, under
+    ``rescale="amla"``, the exponent-add ``amla_combine_pallas`` over
+    unnormalized partials) merges them. Returns (o [B,H,d_c] f32,
+    lse [B,H]) — plus the raw partials when ``return_partials`` (for
+    oracles/telemetry).
     """
     B, H, d_c = q_c8.shape
     d_r = q_r.shape[-1]
@@ -409,7 +473,8 @@ def mla_decode_splitkv_pallas(
 
     kernel = functools.partial(
         _mla_decode_splitkv_kernel, softmax_scale=softmax_scale,
-        block_n=block_n, blocks_per_split=blocks_per_split, fmt=fmt, qmax=qmax)
+        block_n=block_n, blocks_per_split=blocks_per_split, fmt=fmt,
+        qmax=qmax, rescale=rescale)
 
     def kv_idx(b, s, j, sl):
         return (b, _clamped_block_index(sl, b, s, j, blocks_per_split, block_n), 0)
@@ -433,7 +498,10 @@ def mla_decode_splitkv_pallas(
         operands=(seq_lens, q_c8, q_r, sigma_q, content, rope, sigma_k),
     )
 
-    o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
+    if rescale == "amla":
+        o, lse = amla_combine_pallas(o_p, lse_p, sp_p, interpret=interpret)
+    else:
+        o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
     if return_partials:
         return o, lse, (o_p, lse_p, sp_p)
     return o, lse
@@ -484,6 +552,59 @@ def lse_combine_pallas(
     )(o_partial, lse_partial)
 
 
+def _amla_combine_kernel(acc_p_ref, l_p_ref, g_p_ref, o_ref, lse_ref):
+    """Exponent-add combine of UNNORMALIZED AMLA partials (one batch row).
+
+    Split s's true (unnormalized) softmax numerator/denominator are
+    ``2^g_s * acc_s`` and ``2^g_s * l_s`` with the integer grid exponent
+    ``g_s = i_s + e_s`` (exp(m_s) * sigma_p_s == 2^g_s exactly). The
+    max-shift therefore needs no exp at all: shift every split onto the
+    hottest grid point K* = max g_s by adding ``(g_s - K*) << 23`` to the
+    accumulator exponent bits, then sum. Replaces lse_combine's
+    ``w = exp(lse_s - m*)`` FMA weights with integer adds; the single
+    division and log happen once, on the combined result.
+    """
+    acc_p = acc_p_ref[0]                               # [S, H, d_c]
+    l_p = l_p_ref[0]                                   # [S, H]
+    g_p = g_p_ref[0]                                   # [S, H]
+    has = l_p > 0.0
+    k_star = jnp.max(jnp.where(has, g_p, NEG_INF), axis=0)       # [H]
+    k = jnp.where(has, g_p - k_star[None, :], 0.0).astype(jnp.int32)
+    den = jnp.sum(amla.exp2_mul(l_p, k), axis=0)                 # [H]
+    num = jnp.sum(amla.exp2_mul(acc_p, k[:, :, None]), axis=0)   # [H, d_c]
+    o_ref[0] = num / den[:, None]
+    lse_ref[0] = k_star * amla.LN2 + jnp.log(den)
+
+
+def amla_combine_pallas(
+    acc_partial: jax.Array,   # [B, S, H, d_c] f32 UNNORMALIZED accumulators
+    l_partial: jax.Array,     # [B, S, H] f32 raw l~ (0 if empty)
+    g_partial: jax.Array,     # [B, S, H] f32 integer grid exponents i + e
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Combine AMLA split-KV partials: returns (o [B,H,d_c], lse [B,H])."""
+    B, S, H, d_c = acc_partial.shape
+    return pl.pallas_call(
+        _amla_combine_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, S, H, d_c), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, H), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, S, H), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, d_c), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, d_c), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(acc_partial, l_partial, g_partial)
+
+
 def mla_decode_paged_pallas(
     q_c8: jax.Array,        # [B, H, d_c]
     q_r: jax.Array,         # [B, H, d_r]
@@ -497,6 +618,7 @@ def mla_decode_paged_pallas(
     softmax_scale: float,
     fmt: str = "fp8_e4m3",
     interpret: bool = True,
+    rescale: str = "fma",
 ) -> tuple[jax.Array, jax.Array]:
     """Paged-pool SnapMLA decode: the page table is scalar-prefetched and
     drives the BlockSpec index maps (TPU-native PagedAttention)."""
@@ -532,7 +654,8 @@ def mla_decode_paged_pallas(
 
     def kernel_paged(sl_ref, pt_ref, *rest):
         return _paged_body(sl_ref, pt_ref, *rest,
-                           softmax_scale=softmax_scale, page=page, fmt=fmt, qmax=qmax)
+                           softmax_scale=softmax_scale, page=page, fmt=fmt,
+                           qmax=qmax, rescale=rescale)
 
     return pl.pallas_call(
         kernel_paged,
@@ -548,7 +671,7 @@ def mla_decode_paged_pallas(
 def _paged_body(seq_lens_ref, page_table_ref, q_c_ref, q_r_ref, sigma_q_ref,
                 content_ref, rope_ref, sigma_k_ref, o_ref, lse_ref,
                 m_ref, l_ref, sp_ref, acc_ref, *,
-                softmax_scale, page, fmt, qmax):
+                softmax_scale, page, fmt, qmax, rescale="fma"):
     # identical math to _mla_decode_kernel, with 3D (1, page, d) blocks
     del page_table_ref  # only used by the index maps
     _mla_decode_kernel(
@@ -556,7 +679,7 @@ def _paged_body(seq_lens_ref, page_table_ref, q_c_ref, q_r_ref, sigma_q_ref,
         content_ref, rope_ref, sigma_k_ref, o_ref, lse_ref,
         m_ref, l_ref, sp_ref, acc_ref,
         softmax_scale=softmax_scale, block_n=page, fmt=fmt, qmax=qmax,
-        paged=False)
+        paged=False, rescale=rescale)
 
 
 # ---------------------------------------------------------------------------
@@ -597,6 +720,7 @@ def mla_decode_paged_splitkv_pallas(
     fmt: str = "fp8_e4m3",
     interpret: bool = True,
     return_partials: bool = False,
+    rescale: str = "fma",
 ):
     """Paged + split-KV SnapMLA decode: sequence parallelism over a page pool.
 
@@ -620,7 +744,7 @@ def mla_decode_paged_splitkv_pallas(
 
     kernel = functools.partial(
         _paged_splitkv_body, softmax_scale=softmax_scale, block_n=page,
-        blocks_per_split=pages_per_split, fmt=fmt, qmax=qmax)
+        blocks_per_split=pages_per_split, fmt=fmt, qmax=qmax, rescale=rescale)
 
     def kv_idx(b, s, j, sl, pt):
         return (_clamped_page_id(sl, pt, b, s, j, pages_per_split, page), 0, 0)
@@ -645,7 +769,10 @@ def mla_decode_paged_splitkv_pallas(
                   content_pool, rope_pool, scale_pool),
     )
 
-    o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
+    if rescale == "amla":
+        o, lse = amla_combine_pallas(o_p, lse_p, sp_p, interpret=interpret)
+    else:
+        o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
     if return_partials:
         return o, lse, (o_p, lse_p, sp_p)
     return o, lse

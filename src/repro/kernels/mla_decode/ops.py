@@ -22,15 +22,20 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.kvcache import MLACache, PagedMLAPool
+from repro.core.kvcache import MLACache, PagedMLAPool, sink_patched_content
 from repro.kernels.mla_decode import autotune as _autotune
 from repro.kernels.mla_decode import kernel as _k
 from repro.kernels.mla_decode import ref as _ref
+from repro.kernels.mla_decode.autotune import SplitConfig
 
 # Split sizing: aim for splits of ~SPLIT_TARGET_TOKENS so each split amortizes
 # its combine cost, capped at MAX_SPLITS partial buffers.
 SPLIT_TARGET_TOKENS = 4096
 MAX_SPLITS = 8
+
+# Contiguous-cache default KV block size (the paged kernels' block size is
+# structurally the physical page, never this).
+DEFAULT_BLOCK_N = 128
 
 
 def default_num_splits(context_len: int, block_n: int = 128,
@@ -73,6 +78,50 @@ def resolve_num_splits(requested: int | None, capacity: int,
     return max(1, min(splits, nblocks))
 
 
+def resolve_split_config(num_splits: int | None, block_n: int | None,
+                         capacity: int, *, batch: int | None = None,
+                         layout: str = "contiguous",
+                         page_size: int | None = None) -> SplitConfig:
+    """Joint (num_splits, block_n) resolution — the 2D generalization of
+    ``resolve_num_splits`` (which stays as the fixed-block_n rule every
+    resolved plan funnels through).
+
+      * ``layout == "paged"``: block_n is STRUCTURAL — it must equal the
+        physical page size; only num_splits is tunable.
+      * explicit ``block_n``: splits resolve at that block size (profile hit
+        for the (capacity, block_n, batch) key, else heuristic).
+      * ``block_n`` None/0 (auto): the measured joint plan from the v2
+        profile — the fastest (num_splits, block_n) recorded across every
+        swept block_n at this (capacity, batch, layout) — else the
+        DEFAULT_BLOCK_N heuristic. A profile block_n that does not divide
+        this cache's capacity is ignored (profiles travel across shapes).
+    """
+    if layout == "paged":
+        if page_size is None:
+            raise ValueError("paged split resolution needs page_size "
+                             "(block_n is structurally the physical page)")
+        if block_n and block_n != page_size:
+            raise ValueError(
+                f"paged caches fix block_n to the page size ({page_size}); "
+                f"got block_n={block_n} — repage the pool instead")
+        return SplitConfig(
+            resolve_num_splits(num_splits, capacity, page_size, batch,
+                               layout), page_size)
+    if block_n:
+        return SplitConfig(
+            resolve_num_splits(num_splits, capacity, block_n, batch, layout),
+            block_n)
+    tuned = _autotune.tuned_split_config(capacity, batch, layout)
+    if tuned is not None and capacity % tuned.block_n == 0:
+        nblocks = max(1, capacity // tuned.block_n)
+        splits = num_splits if num_splits else tuned.num_splits
+        return SplitConfig(max(1, min(splits, nblocks)), tuned.block_n)
+    bn = DEFAULT_BLOCK_N if capacity % DEFAULT_BLOCK_N == 0 \
+        else max(b for b in (64, 32, 16, 8, 4, 2, 1) if capacity % b == 0)
+    return SplitConfig(
+        resolve_num_splits(num_splits, capacity, bn, batch, layout), bn)
+
+
 def _check_alignment(n: int, block_n: int) -> None:
     if n % block_n:
         raise ValueError(
@@ -93,6 +142,7 @@ def snapmla_decode(
     num_splits: int | None = None,
     use_kernel: bool = True,
     interpret: bool = True,
+    rescale: str = "fma",
 ) -> tuple[jax.Array, jax.Array]:
     """Decode one token per sequence. Returns (o_latent [B,H,d_c] f32, lse).
 
@@ -108,11 +158,12 @@ def snapmla_decode(
     return _snapmla_decode_impl(
         q_c8, q_r, sigma_q, cache, softmax_scale=softmax_scale,
         block_n=block_n, fmt=fmt, num_splits=splits, use_kernel=use_kernel,
-        interpret=interpret)
+        interpret=interpret, rescale=rescale)
 
 
 @partial(jax.jit, static_argnames=("softmax_scale", "block_n", "fmt",
-                                   "num_splits", "use_kernel", "interpret"))
+                                   "num_splits", "use_kernel", "interpret",
+                                   "rescale"))
 def _snapmla_decode_impl(
     q_c8: jax.Array,
     q_r: jax.Array,
@@ -125,24 +176,29 @@ def _snapmla_decode_impl(
     num_splits: int,
     use_kernel: bool,
     interpret: bool,
+    rescale: str = "fma",
 ) -> tuple[jax.Array, jax.Array]:
     splits = num_splits
-    args = (q_c8, q_r.astype(jnp.float32), sigma_q, cache.content,
+    # P-Cast sink guard: substitute the guarded prefix rows in full precision
+    # (no-op passthrough on unguarded caches — same jit trace as the seed).
+    args = (q_c8, q_r.astype(jnp.float32), sigma_q,
+            sink_patched_content(cache),
             cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens)
     if use_kernel:
         if splits == 1:
             return _k.mla_decode_pallas(
                 *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
-                interpret=interpret)
+                interpret=interpret, rescale=rescale)
         return _k.mla_decode_splitkv_pallas(
             *args, softmax_scale=softmax_scale, num_splits=splits,
-            block_n=block_n, fmt=fmt, interpret=interpret)
+            block_n=block_n, fmt=fmt, interpret=interpret, rescale=rescale)
     if splits == 1:
         return _ref.snapmla_decode_pipeline_ref(
-            *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt)
+            *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
+            rescale=rescale)
     return _ref.snapmla_decode_splitkv_ref(
         *args, softmax_scale=softmax_scale, num_splits=splits,
-        block_n=block_n, fmt=fmt)
+        block_n=block_n, fmt=fmt, rescale=rescale)
 
 
 def snapmla_decode_paged(
@@ -156,6 +212,7 @@ def snapmla_decode_paged(
     num_splits: int | None = None,
     use_kernel: bool = True,
     interpret: bool = True,
+    rescale: str = "fma",
 ) -> tuple[jax.Array, jax.Array]:
     """Decode one token per sequence against a paged pool.
 
@@ -178,11 +235,12 @@ def snapmla_decode_paged(
                                 batch=q_c8.shape[0], layout="paged")
     return _snapmla_decode_paged_impl(
         q_c8, q_r, sigma_q, pool, softmax_scale=softmax_scale, fmt=fmt,
-        num_splits=splits, use_kernel=use_kernel, interpret=interpret)
+        num_splits=splits, use_kernel=use_kernel, interpret=interpret,
+        rescale=rescale)
 
 
 @partial(jax.jit, static_argnames=("softmax_scale", "fmt", "num_splits",
-                                   "use_kernel", "interpret"))
+                                   "use_kernel", "interpret", "rescale"))
 def _snapmla_decode_paged_impl(
     q_c8: jax.Array,
     q_r: jax.Array,
@@ -194,6 +252,7 @@ def _snapmla_decode_paged_impl(
     num_splits: int,
     use_kernel: bool,
     interpret: bool,
+    rescale: str = "fma",
 ) -> tuple[jax.Array, jax.Array]:
     splits = num_splits
     args = (q_c8, q_r.astype(jnp.float32), sigma_q,
@@ -203,9 +262,10 @@ def _snapmla_decode_paged_impl(
         if splits == 1:
             return _k.mla_decode_paged_pallas(
                 *args, softmax_scale=softmax_scale, fmt=fmt,
-                interpret=interpret)
+                interpret=interpret, rescale=rescale)
         return _k.mla_decode_paged_splitkv_pallas(
             *args, softmax_scale=softmax_scale, num_splits=splits, fmt=fmt,
-            interpret=interpret)
+            interpret=interpret, rescale=rescale)
     return _ref.snapmla_decode_paged_splitkv_ref(
-        *args, softmax_scale=softmax_scale, num_splits=splits, fmt=fmt)
+        *args, softmax_scale=softmax_scale, num_splits=splits, fmt=fmt,
+        rescale=rescale)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.kernels.mla_decode import amla
 
 # Finite -inf sentinel (matches the kernel): keeps empty-split combines
 # NaN-free — NEG_INF - NEG_INF == 0, unlike IEEE -inf.
@@ -41,18 +42,30 @@ def snapmla_decode_pipeline_ref(
     p_quant: bool = True,  # False => scale-fused but unquantized P (ablation)
     return_sigma_p: bool = False,
     skip_dead_blocks: bool = False,  # mirror the kernel's pl.when early exit
+    rescale: str = "fma",
+    return_raw: bool = False,  # AMLA: return (acc, l~, g) unnormalized
 ) -> tuple[jax.Array, ...]:
     """Returns (o [B, H, d_c] f32, lse [B, H] f32) — plus the final per-head
     sigma_p [B, H] when ``return_sigma_p`` (split-KV partial telemetry).
 
     ``skip_dead_blocks`` freezes the carried state on blocks with no valid
     token (instead of running their sigma_p rescale on zeros), matching the
-    split-KV kernel's block-level early exit bit-for-bit on live blocks."""
+    split-KV kernel's block-level early exit bit-for-bit on live blocks.
+
+    ``rescale="amla"`` mirrors the kernel's exponent-add mode: the running
+    max and sigma_p are snapped onto the power-of-two grid (the carried m
+    holds the integer i with m = i*ln2, the carried sp holds the integer
+    sigma_p exponent e) and every cross-block rescale is an exact 2^k
+    applied through ``amla.exp2_mul`` — the SAME helper the kernel uses, so
+    kernel-vs-ref parity holds like in FMA mode. ``return_raw`` (AMLA only)
+    returns the unnormalized (acc, l~, g = i + e) the combine-free split
+    emission publishes."""
     B, H, d_c = q_c8.shape
     N = content.shape[1]
     assert N % block_n == 0, (N, block_n)
     nblocks = N // block_n
     qmax = quant.qmax_for(fmt) if fmt != "none" else 1.0
+    eff_fmt = fmt if p_quant else "none"
 
     qc = q_c8.astype(jnp.float32)
     qr = q_r.astype(jnp.float32)
@@ -69,20 +82,36 @@ def snapmla_decode_pipeline_ref(
             s = s * (sq_b[:, None] * sk[None, :]) * softmax_scale     # [H, bn]
             tok = j * block_n + jnp.arange(block_n)
             s = jnp.where(tok[None, :] < n_b, s, -jnp.inf)
-            m_new = jnp.maximum(m, jnp.max(s, axis=-1))               # [H]
-            e = jnp.exp(s - m_new[:, None])                           # [H, bn]
-            # Key Step 2: fuse per-token V scale (V == latent content cache).
-            p_fused = e * sk[None, :]
-            if p_quant and fmt != "none":
-                amax = jnp.max(jnp.abs(p_fused), axis=-1)
-                sp_new = jnp.maximum(amax, quant.EPS) / qmax          # [H]
-                p8 = quant._cast(p_fused / sp_new[:, None], fmt).astype(jnp.float32)
+            if rescale == "amla":
+                # power-of-two grid: m carries i, sp carries e (see kernel)
+                m_new = jnp.maximum(m, jnp.ceil(jnp.max(s, axis=-1)
+                                                * amla.LOG2E))
+                e = jnp.exp(s - (m_new * amla.LN2)[:, None])
+                p_fused = e * sk[None, :]
+                p8, sp_new = amla.quantize_block_pow2(p_fused, eff_fmt, qmax)
+                k = jnp.where(l > 0.0, (m - m_new) + (sp - sp_new),
+                              0.0).astype(jnp.int32)
+                l_new = (amla.exp2_mul(l, k)
+                         + amla.exp2_mul(jnp.sum(e, axis=-1),
+                                         -sp_new.astype(jnp.int32)))
+                acc_new = (amla.exp2_mul(acc, k[:, None])
+                           + p8 @ sl.astype(jnp.float32))
             else:
-                sp_new = jnp.ones_like(m_new)
-                p8 = p_fused
-            corr = jnp.exp(m - m_new) * (sp / sp_new)                 # Eq. 12/13
-            l_new = l * corr + jnp.sum(e, axis=-1) / sp_new
-            acc_new = acc * corr[:, None] + p8 @ sl.astype(jnp.float32)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))           # [H]
+                e = jnp.exp(s - m_new[:, None])                       # [H, bn]
+                # Key Step 2: fuse per-token V scale (V == latent cache).
+                p_fused = e * sk[None, :]
+                if p_quant and fmt != "none":
+                    amax = jnp.max(jnp.abs(p_fused), axis=-1)
+                    sp_new = jnp.maximum(amax, quant.EPS) / qmax      # [H]
+                    p8 = quant._cast(p_fused / sp_new[:, None],
+                                     fmt).astype(jnp.float32)
+                else:
+                    sp_new = jnp.ones_like(m_new)
+                    p8 = p_fused
+                corr = jnp.exp(m - m_new) * (sp / sp_new)             # Eq. 12/13
+                l_new = l * corr + jnp.sum(e, axis=-1) / sp_new
+                acc_new = acc * corr[:, None] + p8 @ sl.astype(jnp.float32)
             if skip_dead_blocks:
                 live = j * block_n < n_b
                 m_new = jnp.where(live, m_new, m)
@@ -98,13 +127,20 @@ def snapmla_decode_pipeline_ref(
             jnp.zeros((H, d_c), jnp.float32),
         )
         (m, l, sp, acc), _ = jax.lax.scan(body, init, jnp.arange(nblocks))
-        o = acc / l[:, None]                                           # sigma_p cancels
-        lse = m + jnp.log(sp * l)
-        return o, lse, sp
+        return m, l, sp, acc
 
-    o, lse, sp = jax.vmap(one_batch)(qc, qr, sigma_q.astype(jnp.float32),
-                                     content, rope, sigma_k.astype(jnp.float32),
-                                     seq_lens)
+    m, l, sp, acc = jax.vmap(one_batch)(
+        qc, qr, sigma_q.astype(jnp.float32), content, rope,
+        sigma_k.astype(jnp.float32), seq_lens)
+    if rescale == "amla":
+        g = m + sp                                     # integer grid exponent
+        if return_raw:
+            return acc, l, g
+        o = acc / l[..., None]                         # sigma_p cancels
+        lse = g * amla.LN2 + jnp.log(l)
+    else:
+        o = acc / l[..., None]                         # sigma_p cancels
+        lse = m + jnp.log(sp * l)
     if return_sigma_p:
         return o, lse, sp
     return o, lse
@@ -129,13 +165,36 @@ def lse_combine_ref(
     return num / den[..., None], m_star + jnp.log(den)
 
 
+def amla_combine_ref(
+    acc_partial: jax.Array,   # [B, S, H, d_c] UNNORMALIZED per-split acc
+    l_partial: jax.Array,     # [B, S, H] raw l~ (0 if split empty)
+    g_partial: jax.Array,     # [B, S, H] integer grid exponent g = i + e
+) -> tuple[jax.Array, jax.Array]:
+    """Combine-free AMLA merge: exponent-add shift onto K* = max g, sum.
+
+    Each split publishes its accumulator state verbatim — no per-split
+    division, no exp. Because every split's implicit scale is the exact
+    power of two ``2^g`` (``exp(m_s) * sigma_p_s == 2^(i_s + e_s)``), the
+    cross-split alignment is ``exp2_mul(x, g_s - K*)`` — a pure integer
+    exponent add, exact. One division + one log at the very end.
+    """
+    has = l_partial > 0.0
+    k_star = jnp.max(jnp.where(has, g_partial, NEG_INF), axis=1)   # [B, H]
+    k = jnp.where(has, g_partial - k_star[:, None, :], 0.0).astype(jnp.int32)
+    den = jnp.sum(amla.exp2_mul(l_partial, k), axis=1)             # [B, H]
+    num = jnp.sum(amla.exp2_mul(acc_partial, k[..., None]), axis=1)
+    return num / den[..., None], k_star * amla.LN2 + jnp.log(den)
+
+
 def _split_partials(decode_one_split, content, rope, sigma_k, seq_lens,
-                    num_splits: int, block_n: int):
+                    num_splits: int, block_n: int,
+                    neutral=(0.0, NEG_INF, 1.0)):
     """Shared split-KV scaffolding: cut the KV axis into ``num_splits``
     contiguous slices of whole blocks (padding the tail slice), run
     ``decode_one_split(content, rope, sigma_k, local_len)`` per slice —
     returning (o, lse, sigma_p) partials — and neutralize empty slices
-    (o = 0, lse = NEG_INF, sigma_p = 1)."""
+    with ``neutral`` (default (o = 0, lse = NEG_INF, sigma_p = 1); the
+    AMLA combine-free path passes all-zeros)."""
     N = content.shape[1]
     assert N % block_n == 0, (N, block_n)
     nblocks = N // block_n
@@ -157,10 +216,11 @@ def _split_partials(decode_one_split, content, rope, sigma_k, seq_lens,
             content[:, lo:lo + split_tokens], rope[:, lo:lo + split_tokens],
             sigma_k[:, lo:lo + split_tokens], local_len)
         empty = local_len <= 0                                   # [B]
-        o_parts.append(jnp.where(empty[:, None, None], 0.0, o_s))
-        lse_parts.append(jnp.where(empty[:, None], NEG_INF,
-                                   jnp.nan_to_num(lse_s, neginf=NEG_INF)))
-        sp_parts.append(jnp.where(empty[:, None], 1.0, sp_s))
+        if neutral[1] == NEG_INF:
+            lse_s = jnp.nan_to_num(lse_s, neginf=NEG_INF)
+        o_parts.append(jnp.where(empty[:, None, None], neutral[0], o_s))
+        lse_parts.append(jnp.where(empty[:, None], neutral[1], lse_s))
+        sp_parts.append(jnp.where(empty[:, None], neutral[2], sp_s))
     return (jnp.stack(o_parts, axis=1), jnp.stack(lse_parts, axis=1),
             jnp.stack(sp_parts, axis=1))
 
@@ -179,6 +239,7 @@ def snapmla_decode_splitkv_ref(
     block_n: int = 128,
     fmt: quant.QuantFormat = "fp8_e4m3",
     return_partials: bool = False,
+    rescale: str = "fma",
 ):
     """Split-KV (flash-decoding) oracle: per-split pipeline + LSE combine.
 
@@ -187,7 +248,27 @@ def snapmla_decode_splitkv_ref(
     dead-block early exit. The per-block sigma_p quantization decisions
     depend on the split's running max history, so num_splits > 1 differs
     from the single-pass pipeline only at quantization-rounding level (and
-    is exact for fmt == "none")."""
+    is exact for fmt == "none").
+
+    ``rescale="amla"`` uses the combine-free merge: splits publish raw
+    (acc, l~, g) and ``amla_combine_ref`` aligns on the 2^k grid."""
+    if rescale == "amla":
+        def one_split(c, r, sk, local_len):
+            return snapmla_decode_pipeline_ref(
+                q_c8, q_r, sigma_q, c, r, sk, local_len,
+                softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
+                skip_dead_blocks=True, rescale="amla", return_raw=True)
+
+        acc_p, l_p, g_p = _split_partials(one_split, content, rope, sigma_k,
+                                          seq_lens, num_splits, block_n,
+                                          neutral=(0.0, 0.0, 0.0))
+        # _split_partials stacks (o, lse, sp)-shaped outputs; in raw mode the
+        # slots carry (acc, l~, g) — reorder to the combine's convention.
+        o, lse = amla_combine_ref(acc_p, l_p, g_p)
+        if return_partials:
+            return o, lse, (acc_p, l_p, g_p)
+        return o, lse
+
     def one_split(c, r, sk, local_len):
         return snapmla_decode_pipeline_ref(
             q_c8, q_r, sigma_q, c, r, sk, local_len,
@@ -230,6 +311,7 @@ def snapmla_decode_paged_splitkv_ref(
     num_splits: int,
     fmt: quant.QuantFormat = "fp8_e4m3",
     return_partials: bool = False,
+    rescale: str = "fma",
 ):
     """Paged split-KV oracle: page-table gather + the contiguous split-KV
     oracle at block_n == page. Parity target for
@@ -243,7 +325,7 @@ def snapmla_decode_paged_splitkv_ref(
     return snapmla_decode_splitkv_ref(
         q_c8, q_r, sigma_q, c, r.astype(jnp.float32), s, seq_lens,
         softmax_scale=softmax_scale, num_splits=num_splits, block_n=page,
-        fmt=fmt, return_partials=return_partials)
+        fmt=fmt, return_partials=return_partials, rescale=rescale)
 
 
 def snapmla_decode_parallel_ref(

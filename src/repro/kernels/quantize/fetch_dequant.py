@@ -42,6 +42,28 @@ def _paged_fetch_dequant_body(pt_ref, content_ref, rope_ref, scale_ref,
     _fetch_dequant_kernel(content_ref, rope_ref, scale_ref, out_ref, d_c=d_c)
 
 
+def _bounded_paged_fetch_body(cs_ref, pt_ref, content_ref, rope_ref,
+                              scale_ref, out_ref, *, d_c, page):
+    """Bounded-fetch body: pages at/above the chunk boundary are DEAD — their
+    output block is zeroed without touching the pool operands (and the index
+    maps repeat the last live page id, so the dead cells' DMAs are elided by
+    the pipeline's unchanged-index rule: fetch traffic tracks ``chunk_start``,
+    not the page-table span)."""
+    del pt_ref  # only used by the index maps
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    live = j * page < cs_ref[b]
+
+    @pl.when(live)
+    def _fetch():
+        _fetch_dequant_kernel(content_ref, rope_ref, scale_ref, out_ref,
+                              d_c=d_c)
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        out_ref[0] = jnp.zeros_like(out_ref[0])
+
+
 def fetch_dequant_pallas(cache: MLACache, *, page: int = 128,
                          out_dtype=jnp.bfloat16, interpret: bool = True):
     """MLACache -> dequantized [B, N, d_c + d_r] keys (content|rope) in bf16."""
@@ -71,6 +93,7 @@ def fetch_dequant_ref(cache: MLACache, out_dtype=jnp.bfloat16):
 
 
 def paged_fetch_dequant_pallas(pool: PagedMLAPool, *,
+                               chunk_start: jax.Array | None = None,
                                out_dtype=jnp.bfloat16,
                                interpret: bool = True):
     """Paged Fused-Fetch-Dequant: the page table is scalar-prefetched and
@@ -79,38 +102,89 @@ def paged_fetch_dequant_pallas(pool: PagedMLAPool, *,
     chunked prefill reads the FP8 pool pages directly (no host gather, HBM
     fetch traffic stays quantized-width).
 
+    ``chunk_start`` ([B] int32, optional) BOUNDS the fetch: only pages
+    holding positions strictly below ``chunk_start[b]`` are gathered. Dead
+    pages' index maps clamp to the last live page (same-index DMAs are
+    elided by the Pallas pipeline) and their output blocks are zeroed under
+    ``pl.when`` — so per-chunk DMA traffic is ``ceil(chunk_start/page)``
+    pages, independent of the pool capacity ``P``. ``None`` keeps the
+    original full-span gather.
+
     Returns dequantized keys [B, P*page, d_c + d_r] (content|rope) laid out
     in each sequence's LOGICAL order (row b of the page table flattened)."""
     n_pages, page, d_c = pool.content.shape
     d_r = pool.rope.shape[-1]
     B, P = pool.page_table.shape
-    kernel = functools.partial(_paged_fetch_dequant_body, d_c=d_c)
+    out_shape = jax.ShapeDtypeStruct((B, P * page, d_c + d_r), out_dtype)
+    if chunk_start is None:
+        kernel = functools.partial(_paged_fetch_dequant_body, d_c=d_c)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,      # page_table
+            grid=(B, P),
+            in_specs=[
+                pl.BlockSpec((1, page, d_c), lambda b, j, pt: (pt[b, j], 0, 0)),
+                pl.BlockSpec((1, page, d_r), lambda b, j, pt: (pt[b, j], 0, 0)),
+                pl.BlockSpec((1, page), lambda b, j, pt: (pt[b, j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, page, d_c + d_r),
+                                   lambda b, j, pt: (b, j, 0)),
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(pool.page_table, pool.content, pool.rope, pool.scale)
+
+    cs = chunk_start.astype(jnp.int32)
+
+    def _live_page(j, cs_b):
+        # last page holding a position < chunk_start (0 when none are live)
+        last = jnp.maximum((cs_b + page - 1) // page - 1, 0)
+        return jnp.minimum(j, last)
+
+    kernel = functools.partial(_bounded_paged_fetch_body, d_c=d_c, page=page)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,      # page_table
+        num_scalar_prefetch=2,      # chunk_start, page_table
         grid=(B, P),
         in_specs=[
-            pl.BlockSpec((1, page, d_c), lambda b, j, pt: (pt[b, j], 0, 0)),
-            pl.BlockSpec((1, page, d_r), lambda b, j, pt: (pt[b, j], 0, 0)),
-            pl.BlockSpec((1, page), lambda b, j, pt: (pt[b, j], 0)),
+            pl.BlockSpec((1, page, d_c),
+                         lambda b, j, cs, pt: (pt[b, _live_page(j, cs[b])],
+                                               0, 0)),
+            pl.BlockSpec((1, page, d_r),
+                         lambda b, j, cs, pt: (pt[b, _live_page(j, cs[b])],
+                                               0, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, j, cs, pt: (pt[b, _live_page(j, cs[b])],
+                                               0)),
         ],
-        out_specs=pl.BlockSpec((1, page, d_c + d_r), lambda b, j, pt: (b, j, 0)),
+        out_specs=pl.BlockSpec((1, page, d_c + d_r),
+                               lambda b, j, cs, pt: (b, j, 0)),
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, P * page, d_c + d_r), out_dtype),
+        out_shape=out_shape,
         interpret=interpret,
-    )(pool.page_table, pool.content, pool.rope, pool.scale)
+    )(cs, pool.page_table, pool.content, pool.rope, pool.scale)
 
 
-def paged_fetch_dequant_ref(pool: PagedMLAPool, out_dtype=jnp.bfloat16):
+def paged_fetch_dequant_ref(pool: PagedMLAPool, out_dtype=jnp.bfloat16,
+                            chunk_start: jax.Array | None = None):
     """Pure-jnp oracle for the paged fetch: gather rows through the page
-    table, dequantize, lay out logically [B, P*page, d_c + d_r]."""
+    table, dequantize, lay out logically [B, P*page, d_c + d_r]. With
+    ``chunk_start``, mirrors the kernel's bounded fetch: pages wholly
+    at/above the boundary come back zeroed (a straddling page is fetched in
+    full — its tail is masked downstream by the attention's ``pre_ok``)."""
     c = pool.content[pool.page_table].astype(jnp.float32)   # [B, P, page, d_c]
     r = pool.rope[pool.page_table].astype(jnp.float32)
     s = pool.scale[pool.page_table].astype(jnp.float32)[..., None]
     B, P, page, d_c = c.shape
     kv = jnp.concatenate([c * s, r * s], axis=-1)
+    if chunk_start is not None:
+        live = ((jnp.arange(P) * page)[None, :]
+                < chunk_start.astype(jnp.int32)[:, None])       # [B, P]
+        kv = jnp.where(live[:, :, None, None], kv, 0.0)
     return kv.reshape(B, P * page, -1).astype(out_dtype)
 
 
@@ -143,8 +217,13 @@ def paged_chunked_prefill_attention(
     given (bucketed) width. Returns o_latent [B, C, H, d_c] (f32).
     """
     B, C, H, d_c = q_lat.shape
-    kv = (paged_fetch_dequant_pallas(pool, interpret=interpret)
-          if use_kernel else paged_fetch_dequant_ref(pool)).astype(jnp.float32)
+    # bounded fetch: only pages below the chunk boundary are DMA'd — per-chunk
+    # fetch traffic tracks chunk_start, not the pool capacity
+    kv = (paged_fetch_dequant_pallas(pool, chunk_start=chunk_start,
+                                     interpret=interpret)
+          if use_kernel
+          else paged_fetch_dequant_ref(pool, chunk_start=chunk_start)
+          ).astype(jnp.float32)
     q = jnp.concatenate([q_lat, q_rope], axis=-1).astype(jnp.float32)
     # prefix scores: every pool position strictly before the chunk is live
     n = kv.shape[1]

@@ -6,7 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.kvcache import MLACache
+from repro.core.kvcache import MLACache, _sink_append
 from repro.kernels.quantize import kernel as _k
 from repro.kernels.quantize import ref as _ref
 
@@ -34,4 +34,7 @@ def fused_k_append(cache: MLACache, c_kv: jax.Array, k_r: jax.Array, *,
         content, rope, scale = _ref.fused_k_append_ref(
             cache.content, cache.rope, cache.scale, c_kv, k_r, cache.seq_lens,
             fmt=fmt)
-    return MLACache(content, rope, scale, cache.seq_lens + 1)
+    return cache._replace(
+        content=content, rope=rope, scale=scale,
+        seq_lens=cache.seq_lens + 1,
+        sink=_sink_append(cache, c_kv, cache.seq_lens, None))

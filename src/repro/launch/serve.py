@@ -393,6 +393,24 @@ def main():
                          "attention, contiguous AND paged caches "
                          "(0 = auto: measured split profile if present, else "
                          "the context-length heuristic; 1 = single-pass)")
+    ap.add_argument("--block-n", type=int, default=0,
+                    help="decode-attention KV block size (0 = page size). "
+                         "Contiguous caches take any divisor of the cache "
+                         "capacity; with --paged the block size is "
+                         "structurally the physical page, so this sets the "
+                         "page size itself")
+    ap.add_argument("--sink-tokens", type=int, default=0,
+                    help="P-Cast sink guard: keep the first k tokens' latent "
+                         "KV rows in full precision (attention sinks are the "
+                         "most quantization-sensitive rows). Contiguous MLA "
+                         "caches only; 0 disables")
+    ap.add_argument("--rescale", default="fma", choices=["fma", "amla"],
+                    help="per-block accumulator rescale in the decode "
+                         "kernels: fma = exact max-shift FMA (default), "
+                         "amla = AMLA exponent-add fast path (power-of-two "
+                         "sigma_p grid, combine-free split-KV partials; "
+                         "differs from fma only at quantization-rounding "
+                         "level)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache for MLA layers: latent entries live "
                          "in a page pool addressed through per-sequence page "
@@ -495,8 +513,17 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, kv_fmt=args.fmt, kv_splits=args.kv_splits,
                               kv_paged=args.paged,
+                              kv_rescale=args.rescale,
+                              kv_sink_tokens=args.sink_tokens,
                               decode_backend=args.backend,
                               use_kernels=args.backend == "kernel")
+    if args.block_n:
+        # paged caches have no block_n freedom — the kernel block axis IS the
+        # physical page — so --block-n repages the pool there; contiguous
+        # caches keep their page size and override only the decode block
+        cfg = dataclasses.replace(
+            cfg, page_size=args.block_n) if args.paged else \
+            dataclasses.replace(cfg, kv_block_n=args.block_n)
     if args.backend == "shard-map":
         # the shard_map backend needs a mesh context (dryrun sets SHARD_CTX
         # for the production mesh; here: the host mesh, data = all devices)

@@ -62,8 +62,13 @@ def _mla_cfg(cfg: ModelConfig) -> mla_lib.MLAConfig:
 
 
 def _cache_cfg(cfg: ModelConfig, kind: str) -> CacheConfig:
+    # kv_sink_tokens only arms the guard on contiguous MLA caches — GQA
+    # caches and paged pools ignore it (init_gqa_cache / init_paged_mla_*
+    # never allocate a sink shadow).
     return CacheConfig(fmt=cfg.kv_fmt, page_size=cfg.page_size,
-                       window=cfg.window if kind == "swa" else 0)
+                       window=cfg.window if kind == "swa" else 0,
+                       sink_tokens=0 if kind != "mla" or cfg.kv_paged
+                       else cfg.kv_sink_tokens)
 
 
 # ---------------------------------------------------------------------------
@@ -416,8 +421,9 @@ def _mla_decode(p, cfg: ModelConfig, x_t, cache, pos, active=None):
     q_c8, q_r_s, sigma_q = mla_kref.prepare_q(q_lat, q_r[:, 0], fmt)
     q_c8 = _wsc(q_c8, "dp", "model", None)
     bcfg = BK.BackendConfig(softmax_scale=mcfg.softmax_scale,
-                            block_n=ccfg.page_size, fmt=fmt,
-                            num_splits=cfg.kv_splits)
+                            block_n=cfg.kv_block_n or ccfg.page_size, fmt=fmt,
+                            num_splits=cfg.kv_splits,
+                            rescale=cfg.kv_rescale)
     o_lat = backend.decode(
         BK.DecodeQuery(q_c8, q_r_s, sigma_q), cache, bcfg,
         {"mesh": ctx["mesh"], "dp": ctx["dp"]} if ctx else None)

@@ -283,6 +283,15 @@ class ServingEngine:
         #                                            while decodes in flight
         self.stall_seconds = 0.0
         self.util_series: list[float] = []
+        # deterministic fetch-work counters: the DMA page traffic the bounded
+        # prefix fetch actually issues vs what a full-span fetch would have,
+        # plus the decode kernels' block-visit work (early-exit vs dense).
+        # Derived from host bookkeeping — exact and hardware-independent, so
+        # bench_gate can pin them as regression floors.
+        self.pages_fetched_bounded = 0   # chunk-prefill pages read (∝ chunk_start)
+        self.pages_fetched_full = 0      # pages a full-span fetch would read
+        self.decode_blocks_visited = 0   # KV blocks decode visits (∝ seq_lens)
+        self.decode_blocks_full = 0      # blocks without the seq_lens early exit
         self._wall: dict[int, dict[str, float]] = {}   # rid -> wall marks
 
         # fault tolerance: injection plan, preemption flag, survival metrics
@@ -628,6 +637,11 @@ class ServingEngine:
         logits.block_until_ready()
         self.prefill_seconds += time.time() - t0
         self._adopt_pool_data(new_state)
+        # bounded prefix fetch reads ceil(chunk_start / page) pages — the
+        # live prefix BELOW this chunk's start — where the full-span fetch
+        # would stream the whole page-table span every chunk
+        self.pages_fetched_bounded += -(-req.prefill_pos // self.page)
+        self.pages_fetched_full += self.span_pages
         req.prefill_pos += width
         self.allocator.mark_ready(req.pages, req.prefill_pos)
         if req.prefill_pos == len(eff):
@@ -807,6 +821,11 @@ class ServingEngine:
                                              ev.slot)
                         logits = logits.at[ev.slot, 0].set(jnp.nan)
             slots = np.array([r.slot for r in active], np.int32)
+            # split-KV early exit: each row visits ceil(seq_len / page)
+            # blocks; a dense decode would sweep the full span per row
+            self.decode_blocks_visited += int(
+                sum(-(-r.seq_len // self.page) for r in active))
+            self.decode_blocks_full += len(active) * self.span_pages
             toks, finite = self._postprocess(logits[slots], active)
             self.decode_seconds += time.time() - t0
             self.decode_tokens += len(active)
@@ -862,6 +881,10 @@ class ServingEngine:
                 "prefill_tokens_series": self.prefill_tokens_series,
                 "stall_tokens_series": self.stall_tokens_series,
                 "util_series": self.util_series,
+                "pages_fetched_bounded": self.pages_fetched_bounded,
+                "pages_fetched_full": self.pages_fetched_full,
+                "decode_blocks_visited": self.decode_blocks_visited,
+                "decode_blocks_full": self.decode_blocks_full,
             },
         }
 
@@ -926,6 +949,10 @@ class ServingEngine:
         self.prefill_tokens_series = list(c["prefill_tokens_series"])
         self.stall_tokens_series = list(c["stall_tokens_series"])
         self.util_series = list(c["util_series"])
+        self.pages_fetched_bounded = int(c.get("pages_fetched_bounded", 0))
+        self.pages_fetched_full = int(c.get("pages_fetched_full", 0))
+        self.decode_blocks_visited = int(c.get("decode_blocks_visited", 0))
+        self.decode_blocks_full = int(c.get("decode_blocks_full", 0))
         self.step_idx = int(host["step_idx"])
 
     def run(self, requests: list[Request], *, ckpt_dir: str | None = None,
@@ -1011,6 +1038,18 @@ class ServingEngine:
                 "stall_tokens_total": int(sum(self.stall_tokens_series)),
                 "stall_tokens_series": self.stall_tokens_series,
                 "stall_seconds": self.stall_seconds,
+            },
+            "fetch_work": {
+                "pages_fetched_bounded": self.pages_fetched_bounded,
+                "pages_fetched_full": self.pages_fetched_full,
+                "fetch_savings": (
+                    1.0 - self.pages_fetched_bounded / self.pages_fetched_full
+                    if self.pages_fetched_full else 0.0),
+                "decode_blocks_visited": self.decode_blocks_visited,
+                "decode_blocks_full": self.decode_blocks_full,
+                "early_exit_savings": (
+                    1.0 - self.decode_blocks_visited / self.decode_blocks_full
+                    if self.decode_blocks_full else 0.0),
             },
             "pages": {
                 "capacity": stats.capacity,

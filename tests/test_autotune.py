@@ -281,6 +281,179 @@ def test_measure_split_sweep_measured_smoke():
     assert best == autotune._pick_best(measured)
 
 
+# ---------------------------------------------------------------------------
+# v2 joint (num_splits, block_n) plans + v1 migration
+# ---------------------------------------------------------------------------
+
+def test_v1_profile_migration_round_trip(tmp_path):
+    """A committed v1 artifact (no per-entry best_us) keeps driving plans:
+    load -> 1D lookups AND the joint 2D lookup work (best_us derived from the
+    entry's own sweep), and a re-save upgrades the file to version 2 without
+    losing anything."""
+    p = tmp_path / "v1.json"
+    p.write_text(json.dumps({
+        "version": 1,
+        "entries": {
+            "4096/64/2": {"best": 2, "measured_us": {"1": 900.0, "2": 500.0}},
+            "4096/128/2": {"best": 4,
+                           "measured_us": {"1": 800.0, "4": 420.0}},
+        },
+    }))
+    loaded = autotune.SplitProfile.load(p)
+    assert loaded.lookup(4096, 64, 2) == 2
+    assert loaded.lookup(4096, 128, 2) == 4
+    # joint plan: the 128-block best (420us) beats the 64-block best (500us)
+    assert loaded.lookup_config(4096, 2) == autotune.SplitConfig(4, 128)
+    # round-trip: save writes version 2; entries survive verbatim
+    p2 = tmp_path / "v2.json"
+    loaded.save(p2)
+    payload = json.loads(p2.read_text())
+    assert payload["version"] == 2
+    again = autotune.SplitProfile.load(p2)
+    assert again.lookup_config(4096, 2) == autotune.SplitConfig(4, 128)
+    assert again.entries == loaded.entries
+
+
+def test_lookup_config_cross_block_n_and_ties():
+    """The joint plan compares best_us ACROSS block_n; ties in measured time
+    go to the smaller block_n; malformed entries are skipped."""
+    profile = autotune.SplitProfile()
+    profile.record(8192, 64, 4, {1: 700.0, 2: 300.0})
+    profile.record(8192, 128, 4, {1: 600.0, 4: 250.0})
+    profile.record(8192, 256, 4, {1: 900.0})
+    assert profile.lookup_config(8192, 4) == autotune.SplitConfig(4, 128)
+    # a time tie at another block_n -> smaller block_n wins
+    profile.record(8192, 32, 4, {2: 250.0})
+    assert profile.lookup_config(8192, 4) == autotune.SplitConfig(2, 32)
+    # malformed entry at the "fastest" slot must not crash or win
+    profile.entries["8192/16/4"] = {"best": "garbage", "best_us": 1.0}
+    profile.entries["8192/8/4"] = {"best_us": 1.0}
+    assert profile.lookup_config(8192, 4) == autotune.SplitConfig(2, 32)
+    # batch None (shard_map ref paths) never produces a joint plan
+    assert profile.lookup_config(8192, None) is None
+
+
+def test_lookup_config_nearest_batch_and_layout_isolation():
+    """Batch miss: only the nearest log-batch's entries compete (no mixing
+    plans measured at wildly different batches); layouts never cross."""
+    profile = autotune.SplitProfile()
+    profile.record(8192, 64, 2, {1: 500.0, 2: 400.0})
+    profile.record(8192, 128, 64, {1: 300.0, 8: 100.0})
+    # batch 4 is nearer (log-space) to 2: the batch-64 plan (100us) must NOT
+    # leak in even though it is faster
+    assert profile.lookup_config(8192, 4) == autotune.SplitConfig(2, 64)
+    assert profile.lookup_config(8192, 32) == autotune.SplitConfig(8, 128)
+    # paged entries live in their own key space
+    profile.record(8192, 128, 4, {4: 50.0}, layout="paged")
+    assert profile.lookup_config(8192, 4) == autotune.SplitConfig(2, 64)
+    assert profile.lookup_config(8192, 4, layout="paged") == \
+        autotune.SplitConfig(4, 128)
+    # capacity never cross-pollinates
+    assert profile.lookup_config(4096, 4) is None
+
+
+def test_resolve_split_config_auto_block_n():
+    """ops.resolve_split_config: block_n auto -> the measured joint plan;
+    explicit block_n pins the block axis; profile block_n that does not
+    divide the capacity is ignored (heuristic fallback)."""
+    from repro.kernels.mla_decode.ops import (DEFAULT_BLOCK_N,
+                                              resolve_split_config)
+
+    profile = autotune.SplitProfile()
+    profile.record(4096, 64, 2, {1: 900.0, 2: 500.0})
+    profile.record(4096, 128, 2, {1: 800.0, 4: 420.0})
+    autotune.reset(profile)
+    assert resolve_split_config(None, None, 4096, batch=2) == \
+        autotune.SplitConfig(4, 128)
+    # explicit block_n: splits resolve at that block size (profile hit)
+    assert resolve_split_config(None, 64, 4096, batch=2) == \
+        autotune.SplitConfig(2, 64)
+    # explicit num_splits overrides the tuned count, keeps the tuned block_n
+    assert resolve_split_config(2, None, 4096, batch=2) == \
+        autotune.SplitConfig(2, 128)
+    # no profile entry for this capacity -> heuristic block_n (the largest
+    # standard candidate that divides it; 4160 % 128 != 0 -> 64)
+    assert DEFAULT_BLOCK_N == 128
+    assert resolve_split_config(None, None, 4096 + 64, batch=2).block_n == 64
+
+
+def test_resolve_split_config_paged_structural_pin():
+    """Paged layouts: block_n IS the page size — auto resolves to it, a
+    mismatched explicit block_n is an error, and the profile only tunes
+    num_splits."""
+    from repro.kernels.mla_decode.ops import resolve_split_config
+
+    profile = autotune.SplitProfile()
+    profile.record(4096, 64, 2, {1: 900.0, 4: 300.0}, layout="paged")
+    # a faster contiguous entry at another block_n must not repage anything
+    profile.record(4096, 128, 2, {8: 10.0})
+    autotune.reset(profile)
+    cfg = resolve_split_config(None, None, 4096, batch=2, layout="paged",
+                               page_size=64)
+    assert cfg == autotune.SplitConfig(4, 64)
+    with pytest.raises(ValueError):
+        resolve_split_config(None, 128, 4096, batch=2, layout="paged",
+                             page_size=64)
+    with pytest.raises(ValueError):
+        resolve_split_config(None, None, 4096, batch=2, layout="paged")
+
+
+def test_candidate_block_ns_divisibility():
+    assert autotune.candidate_block_ns(4096) == [32, 64, 128, 256]
+    assert autotune.candidate_block_ns(96) == [32]
+    assert autotune.candidate_block_ns(20) == [20]     # nothing divides -> cap
+    assert autotune.block_ns_for_paged(4096) == 128
+    assert autotune.block_ns_for_paged(64) == 64
+
+
+def test_measure_config_sweep_synthetic_2d():
+    """2D sweep plumbing with an injected synthetic grid — one profile entry
+    per block_n, and lookup_config picks the joint winner deterministically
+    (no wall clock anywhere)."""
+    profile = autotune.SplitProfile()
+    grid = {(32, 1): 200.0, (32, 2): 120.0, (32, 4): 110.0,
+            (64, 1): 180.0, (64, 2): 90.0}
+    measured = autotune.measure_config_sweep(
+        128, 1, block_ns=[32, 64], d_c=16, d_r=8, heads=2, profile=profile,
+        timer=autotune.synthetic_timer_2d(grid))
+    assert measured == grid                 # 128/32 -> splits 1,2,4; /64 -> 1,2
+    assert profile.lookup(128, 32, 1) == 4  # 110 beats 120 by > WIN_MARGIN
+    assert profile.lookup(128, 64, 1) == 2
+    assert profile.lookup_config(128, 1) == autotune.SplitConfig(2, 64)
+
+
+def test_measure_config_sweep_paged_pins_block_n():
+    """Paged 2D sweep: block_ns defaults to the single structural page-size
+    candidate — no block_n freedom to sweep."""
+    profile = autotune.SplitProfile()
+    grid = {(128, 1): 100.0}
+    measured = autotune.measure_config_sweep(
+        128, 1, d_c=16, d_r=8, heads=2, profile=profile, layout="paged",
+        timer=autotune.synthetic_timer_2d(grid))
+    assert set(measured) == {(128, 1)}
+    assert profile.lookup(128, 128, 1, layout="paged") == 1
+    assert profile.lookup_config(128, 1, layout="paged") == \
+        autotune.SplitConfig(1, 128)
+    assert profile.lookup_config(128, 1) is None
+
+
+@pytest.mark.timing
+def test_measure_config_sweep_measured_smoke():
+    """Real wall-clock 2D sweep, end to end (compile + timed interpret-mode
+    runs at every (block_n, num_splits) cell). Informational ONLY — asserts
+    the sweep covered the grid and recorded comparable entries, never
+    anything about relative speed; CI runs it non-gating (pytest.ini
+    `timing`)."""
+    profile = autotune.SplitProfile()
+    measured = autotune.measure_config_sweep(
+        128, 1, block_ns=[32, 64], d_c=16, d_r=8, heads=2, iters=1,
+        profile=profile, interpret=True)
+    assert set(measured) == {(32, 1), (32, 2), (32, 4), (64, 1), (64, 2)}
+    assert all(us > 0 for us in measured.values())
+    cfg = profile.lookup_config(128, 1)
+    assert cfg is not None and (cfg.block_n, cfg.num_splits) in measured
+
+
 def test_emit_split_profile_artifact(tmp_path):
     """The benchmark entry point writes the JSON artifact resolve reads,
     covering both layouts."""

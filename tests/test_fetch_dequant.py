@@ -62,6 +62,42 @@ def test_paged_fetch_kernel_matches_ref():
                                np.asarray(out_r, np.float32), atol=1e-6)
 
 
+def test_bounded_fetch_matches_gather_oracle_scrambled_table():
+    """Bounded prefix fetch (chunk_start-prefetched index maps + pl.when
+    block skips) == the gather oracle with a SCRAMBLED page table, at every
+    chunk-boundary class: first chunk (chunk_start 0 — nothing live),
+    page-straddling chunk_start (the straddling page is fetched in full and
+    masked downstream), page-aligned chunk_start, and a full-capacity table
+    (every page live — identical to the unbounded fetch)."""
+    pool, _ = _paged_pool(np.array([[5, 2, 9], [1, 7, 3]]), S=96)  # page=32
+    full_k = paged_fetch_dequant_pallas(pool)
+    for cs_rows in ([0, 0], [1, 17], [32, 64], [96, 96], [0, 96]):
+        cs = jnp.asarray(cs_rows, jnp.int32)
+        out_k = paged_fetch_dequant_pallas(pool, chunk_start=cs)
+        out_r = paged_fetch_dequant_ref(pool, chunk_start=cs)
+        np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                                   np.asarray(out_r, np.float32), atol=1e-6,
+                                   err_msg=str(cs_rows))
+        # live prefix identical to the unbounded fetch; dead pages zeroed
+        for b, c in enumerate(cs_rows):
+            live = -(-c // 32) * 32            # straddling page kept whole
+            np.testing.assert_array_equal(
+                np.asarray(out_k[b, :live], np.float32),
+                np.asarray(full_k[b, :live], np.float32))
+            assert not np.asarray(out_k[b, live:], np.float32).any(), cs_rows
+
+
+def test_bounded_fetch_full_capacity_equals_unbounded():
+    """chunk_start == capacity on every row: the bounded kernel reads every
+    page and must be BIT-identical to the unbounded (seed) fetch path."""
+    pool, _ = _paged_pool(np.array([[5, 2, 9], [1, 7, 3]]), S=96)
+    cs = jnp.full((2,), 96, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(paged_fetch_dequant_pallas(pool, chunk_start=cs),
+                   np.float32),
+        np.asarray(paged_fetch_dequant_pallas(pool), np.float32))
+
+
 def test_paged_fetch_matches_contiguous_fetch():
     """A paged pool whose table is the identity run lays out exactly like a
     contiguous cache: both fetch paths dequantize to the same bytes."""

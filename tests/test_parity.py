@@ -74,6 +74,83 @@ def test_parity_model_kernel_backend_logits(paged):
     np.testing.assert_array_equal(ker.argmax(-1), ref.argmax(-1))
 
 
+@pytest.mark.parametrize("num_splits", [1, 2, 4])
+def test_parity_amla_kernel_vs_ref(num_splits):
+    """Kernel-AMLA == ref-AMLA: the exponent-add rescale and the combine-free
+    split emission are EXACT transforms, so the Pallas path must match its
+    jnp twin to interpret-mode float tolerance at every split count."""
+    from benchmarks.kernel_perf import _splitkv_inputs
+    from repro.kernels.mla_decode.ops import snapmla_decode
+
+    cache, (q_c8, q_r, sq), scale = _splitkv_inputs(2, 8, 64, 16, 512, 64)
+    o_k, lse_k = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
+                                block_n=64, num_splits=num_splits,
+                                rescale="amla")
+    o_r, lse_r = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
+                                block_n=64, num_splits=num_splits,
+                                use_kernel=False, rescale="amla")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(lse_k), np.asarray(lse_r),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("num_splits", [1, 2, 4])
+def test_parity_amla_vs_fma_bit_tolerance(num_splits):
+    """AMLA vs FMA on the same FP8 inputs: the power-of-two (m, sigma_p)
+    grid changes only the P-quantization rounding points, so the modes agree
+    to ~2% rel under FP8 (pinned at 5%) and the LSE — which AMLA reassembles
+    from the integer grid exactly — agrees to float tolerance."""
+    from benchmarks.kernel_perf import _splitkv_inputs
+    from repro.kernels.mla_decode.ops import snapmla_decode
+
+    cache, (q_c8, q_r, sq), scale = _splitkv_inputs(2, 8, 64, 16, 512, 64)
+    o_f, lse_f = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
+                                block_n=64, num_splits=num_splits,
+                                rescale="fma")
+    o_a, lse_a = snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
+                                block_n=64, num_splits=num_splits,
+                                rescale="amla")
+    rel = float(jnp.max(jnp.abs(o_a - o_f)) / (jnp.max(jnp.abs(o_f)) + 1e-12))
+    assert rel < 0.05, rel
+    np.testing.assert_allclose(np.asarray(lse_a), np.asarray(lse_f),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_parity_amla_unquantized_tight():
+    """With fmt='none' there is no P-quantization, so AMLA's only deviation
+    from FMA is the exact power-of-two regrouping — the modes must agree to
+    float tolerance, pinning the exponent-add trick itself as exact."""
+    from benchmarks.kernel_perf import _splitkv_inputs
+    from repro.kernels.mla_decode.ops import snapmla_decode
+
+    cache, (q_c8, q_r, sq), scale = _splitkv_inputs(2, 8, 64, 16, 512, 64)
+    kw = dict(softmax_scale=scale, block_n=64, num_splits=2, fmt="none")
+    o_f, _ = snapmla_decode(q_c8, q_r, sq, cache, rescale="fma", **kw)
+    o_a, _ = snapmla_decode(q_c8, q_r, sq, cache, rescale="amla", **kw)
+    np.testing.assert_allclose(np.asarray(o_a), np.asarray(o_f),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_parity_amla_paged():
+    """Paged AMLA kernel == paged AMLA ref over a shuffled page pool."""
+    from benchmarks.kernel_perf import _scatter_to_pool, _splitkv_inputs
+    from repro.kernels.mla_decode.kernel import mla_decode_paged_splitkv_pallas
+    from repro.kernels.mla_decode import ref as kref
+
+    cache, (q_c8, q_r, sq), scale = _splitkv_inputs(2, 8, 64, 16, 512, 64,
+                                                    seed=1)
+    pool_c, pool_r, pool_s, pt = _scatter_to_pool(cache, 64)
+    for s in (1, 2, 4):
+        o_k, _ = mla_decode_paged_splitkv_pallas(
+            q_c8, q_r, sq, pool_c, pool_r, pool_s, pt, cache.seq_lens,
+            softmax_scale=scale, num_splits=s, rescale="amla")
+        o_r, _ = kref.snapmla_decode_paged_splitkv_ref(
+            q_c8, q_r, sq, pool_c, pool_r, pool_s, pt, cache.seq_lens,
+            softmax_scale=scale, num_splits=s, rescale="amla")
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   atol=1e-4)
+
+
 def test_parity_lse_combine():
     """The combine kernel itself == the max-shift combine reference — the
     narrowest gate on the shared merge path both split kernels feed."""
