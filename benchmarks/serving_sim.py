@@ -37,6 +37,10 @@ identical workloads:
     on an EOS-heavy batch: identical tokens, and the gated run's frozen
     ``seq_lens`` quantify the cache appends + KV blocks the split-KV early
     exit no longer touches for finished rows.
+  * ``telemetry`` — the tiered shared-prefix workload with the span tracer
+    and quant-health probe armed, run twice on the same seed: registry
+    work-metric values for bench_gate pinning plus byte-identical
+    trace/registry determinism booleans.
 """
 from __future__ import annotations
 
@@ -110,7 +114,7 @@ def run_cell(cfg, params, seed: int, n_requests: int, rate: float,
         "evicted": m["requeues"],       # evictions are requeues now (no loss)
         "steps": m["steps"],
         "throughput": {
-            "decode_tok_per_s": m["decode_tok_per_s"],
+            "decode_tok_per_s": m["wall"]["decode_tok_per_s"],
             "decode_tokens": m["decode_tokens"],
             "tok_per_step": m["decode_tokens"] / max(m["steps"], 1),
         },
@@ -192,11 +196,11 @@ def run_chunked_twin(cfg, params, seed: int, chunk: int, budget: int,
                 "tokens_total": int(sum(stalls)),
                 "tokens_per_step_max": int(max(stalls, default=0)),
                 "tokens_per_step_p99": _pct([s for s in stalls], 99),
-                "seconds": m["work"]["stall_seconds"],
+                "seconds": m["wall"]["stall_seconds"],
             },
             "wall": {
                 "ttft_s_p99": _pct([r.ttft_s for r in results], 99),
-                "decode_tok_per_s": m["decode_tok_per_s"],
+                "decode_tok_per_s": m["wall"]["decode_tok_per_s"],
             },
             "fetch_work": m["fetch_work"],
             "tokens": {r.rid: r.tokens for r in results},
@@ -393,6 +397,83 @@ def run_prefix_cache_workload(cfg, params, seed: int, n_requests: int = 4,
     }
 
 
+_TELEMETRY_GATED = (
+    # single-value work metrics bench_gate pins (deterministic for a seed)
+    "snapmla_cache_reused_pages",
+    "snapmla_tier_offload_pages",
+    "snapmla_tier_restore_pages",
+    "snapmla_fetch_pages_bounded_total",
+    "snapmla_fetch_pages_full_total",
+    "snapmla_engine_prefill_skipped_tokens_total",
+    "snapmla_engine_decode_tokens_total",
+    "snapmla_roofline_model_bytes_total",
+)
+
+
+def run_telemetry_probe(cfg, params, seed: int, n_requests: int = 4,
+                        shared_pages: int = 3) -> dict:
+    """Observability headline: the tiered shared-prefix chunked workload
+    with EVERY probe armed (span tracer, quant-health sampler) run twice on
+    the same seed. Reports the registry's single-value work metrics for
+    bench_gate pinning plus the determinism cross-checks — byte-identical
+    Chrome trace and registry snapshot across the twin runs, and a
+    validated trace (one terminal instant per request track)."""
+    import dataclasses as _dc
+    from repro.obs import SpanTracer, validate_chrome_trace
+    page = cfg.page_size
+    suffix = page + page // 2
+    S = shared_pages * page + suffix
+    gen = page // 2
+    gap = S // page + 2 + gen + 8
+    span = page_aligned_capacity(S + gen, page) // page
+    pool_pages = 2 * span + 1
+    ccfg = _dc.replace(cfg, prefill_chunk=page)
+
+    def one_run():
+        tracer = SpanTracer()
+        engine = ServingEngine(ccfg, params, EngineConfig(
+            max_batch=2, max_pages_per_seq=span, n_pages=pool_pages,
+            prefill_budget=2 * page, seed=seed,
+            prefix_cache_pages=max(shared_pages - 1, 1),
+            host_tier_pages=pool_pages, quant_health_every=4),
+            tracer=tracer)
+        engine.run(_prefix_workload(seed, page, cfg.vocab_size, n_requests,
+                                    gap, shared_pages, suffix))
+        return engine, tracer
+
+    engine, tracer = one_run()
+    engine2, tracer2 = one_run()
+    payload = tracer.chrome_payload()
+    stats = validate_chrome_trace(payload, expect_requests=n_requests)
+    dump = json.dumps(payload, sort_keys=True)
+    work = engine.telemetry()["work"]
+    metrics = {}
+    for name in _TELEMETRY_GATED:
+        vals = work[name]["values"]
+        metrics[name] = vals[""]
+    faults = work["snapmla_engine_faults_total"]["values"]
+    probe = engine.quant_probe
+    return {
+        "n_requests": n_requests,
+        "metrics": metrics,
+        "faults_total": int(sum(faults.values())),
+        "trace": {
+            "events": stats["events"],
+            "spans": stats["spans"],
+            "request_tracks": stats["requests"],
+            "deterministic": dump == json.dumps(tracer2.chrome_payload(),
+                                                sort_keys=True),
+        },
+        "registry_deterministic": (engine.telemetry()["work"]
+                                   == engine2.telemetry()["work"]),
+        "quant_health": {
+            "samples": len(probe.samples) if probe else 0,
+            "last_clip_rate_max": (probe.samples[-1]["clip_rate_max"]
+                                   if probe and probe.samples else -1.0),
+        },
+    }
+
+
 def run_fault_sweep(cfg, params, seed: int, n_requests: int = 8,
                     max_batch: int = 4) -> dict:
     """Survival metrics under deterministic fault injection: the SAME
@@ -516,6 +597,9 @@ def write_bench_serving(path: str = "BENCH_serving.json", *, seed: int = 0,
         # host-tiered runs of identical requests — hit TTFT, pages
         # recomputed-vs-restored, HBM high-water
         "prefix_cache": run_prefix_cache_workload(cfg, params, seed),
+        # all probes armed on the tiered shared-prefix workload: registry
+        # work metrics for gating + trace/registry determinism cross-checks
+        "telemetry": run_telemetry_probe(cfg, params, seed),
         "fault_sweep": run_fault_sweep(cfg, params, seed,
                                        n_requests=n_requests,
                                        max_batch=max_batch),
@@ -565,6 +649,15 @@ def main():
           f"restored {pcw['tiered']['pages_restored_host']} pages from host, "
           f"HBM peak {pcw['cached']['hbm_peak_resident_pages']} pages, "
           f"tokens_equal={pcw['tokens_equal']}")
+    tel = payload["telemetry"]
+    print(f"[serving_sim] telemetry: trace {tel['trace']['events']} events/"
+          f"{tel['trace']['spans']} spans over "
+          f"{tel['trace']['request_tracks']} tracks, "
+          f"trace_deterministic={tel['trace']['deterministic']} "
+          f"registry_deterministic={tel['registry_deterministic']} "
+          f"reused_pages={tel['metrics']['snapmla_cache_reused_pages']} "
+          f"tier_restore={tel['metrics']['snapmla_tier_restore_pages']} "
+          f"quant_samples={tel['quant_health']['samples']}")
     fs = payload["fault_sweep"]
     for name in ("nan_recovered", "nan_sticky", "backend_raise",
                  "alloc_storm", "random_storm"):

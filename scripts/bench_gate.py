@@ -106,7 +106,37 @@ METRICS: list[tuple[str, str, str, str, float]] = [
      "fetch_bound.1.bounded_pages", "lower", 0.0),
     ("BENCH_splitkv.json", "splitkv.json",
      "fetch_bound.1.dma_savings", "higher", 0.0),
+    # -- serving: unified telemetry (registry work metrics, probes armed) --
+    # all-probes-on tiered shared-prefix run: the trace and registry must
+    # be byte-identical across same-seed twins, and the registry's page
+    # counters must keep reporting real cache/tier/fetch work.
+    ("BENCH_serving.json", "serving.json",
+     "telemetry.trace.deterministic", "true", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "telemetry.registry_deterministic", "true", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "telemetry.metrics.snapmla_cache_reused_pages", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "telemetry.metrics.snapmla_tier_restore_pages", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "telemetry.metrics.snapmla_fetch_pages_bounded_total", "lower", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "telemetry.metrics.snapmla_engine_prefill_skipped_tokens_total",
+     "higher", 0.0),
 ]
+
+
+def _assert_work_only() -> None:
+    """The gate's contract: only deterministic WORK metrics are pinned.
+    The metrics registry segregates wall-clock series under a ``wall``
+    subtree (``registry.snapshot()`` / ``engine.metrics()["wall"]``), so any
+    gated dotted path with a ``wall`` segment is a spec bug — fail loudly
+    before it pages someone for CI-runner noise."""
+    bad = [path for _, _, path, _, _ in METRICS
+           if "wall" in path.split(".")]
+    if bad:
+        raise SystemExit("[bench_gate] wall-clock metric(s) in the gate "
+                         f"spec (never gate wall time): {bad}")
 
 
 def dig(payload, path: str):
@@ -212,6 +242,7 @@ def main() -> int:
                     help="rewrite benchmarks/baselines/*.json from the "
                     "fresh BENCH files instead of gating")
     args = ap.parse_args()
+    _assert_work_only()
     bench_dir = pathlib.Path(args.bench_dir)
     return refresh(bench_dir) if args.refresh else gate(bench_dir)
 

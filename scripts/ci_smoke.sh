@@ -25,6 +25,10 @@
 #   * the serving simulator (synthetic-arrival sweep + chunked-vs-
 #     monolithic and fused-EOS-gating twin runs -> BENCH_serving.json,
 #     uploaded as a CI artifact)
+#   * the telemetry smoke (--trace-out + --log-json + --quant-health-every):
+#     the engine exports a Chrome trace that scripts/trace_report.py
+#     validates (one terminal instant per request track) and summarizes;
+#     the trace is uploaded as a CI artifact next to BENCH_serving.json
 # The serve driver exits non-zero on non-finite logits (serve._check_finite),
 # so a NaN anywhere in the quantized pipeline fails this script loudly.
 set -euo pipefail
@@ -104,6 +108,17 @@ python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 2 \
 python -m repro.launch.serve --smoke --gen 8 --engine --max-batch 2 \
     --arrival-gap 2 --seed 1 --restartable --inject preempt:5 \
     --ckpt-every 3
+
+# telemetry smoke: the chunked mixed workload again with every probe armed —
+# span tracer (virtual clock -> byte-stable Chrome trace), JSON event log,
+# quant-health sampling. Parity is still gated by the driver; trace_report
+# exits non-zero if the trace is structurally invalid or the request-track
+# count is off. TRACE_serving.json is uploaded as a CI artifact.
+python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 3 \
+    --batch 6 --prompt-lens 48,16,24 --prefill-chunk 16 \
+    --prefill-budget 32 --arrival-gap 1 --seed 1 \
+    --trace-out TRACE_serving.json --log-json --quant-health-every 4
+python scripts/trace_report.py TRACE_serving.json --expect-requests 6
 
 # synthetic-arrival serving sweep (rate x prefix-share) -> BENCH_serving.json
 python benchmarks/serving_sim.py --requests 8 --seed 0 \

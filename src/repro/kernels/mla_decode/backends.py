@@ -249,6 +249,63 @@ register(DecodeBackend("shard_map", "contiguous", "shard_map",
 
 
 # ---------------------------------------------------------------------------
+# analytic dispatch cost (telemetry annotation; see obs/)
+# ---------------------------------------------------------------------------
+
+# v5e hardware constants (same figures as benchmarks/kernel_perf.py — pure
+# modeled numbers, deterministic on any machine)
+_V5E_HBM = 819e9          # bytes/s
+_V5E_BF16 = 197e12        # FLOP/s
+
+
+def token_cost(fmt: str, d_c: int, d_r: int, heads: int
+               ) -> tuple[int, int]:
+    """(bytes streamed, FLOPs computed) per CACHED TOKEN of one decode
+    dispatch: quantized content byte/elem + bf16 rope + f32 per-token
+    scale, QK + PV per head — the Eq. 12–13 pipeline's traffic model."""
+    if fmt == "none":
+        bytes_tok = (d_c + d_r) * 2
+    else:
+        bytes_tok = d_c * 1 + d_r * 2 + 4
+    flops_tok = (2 * (d_c + d_r) + 2 * d_c) * heads
+    return bytes_tok, flops_tok
+
+
+def dispatch_cost(backend: "DecodeBackend | str", *, tokens_visited: int,
+                  tokens_full: int, heads: int, d_c: int, d_r: int,
+                  fmt: str) -> dict:
+    """Analytic bytes/FLOPs annotation for ONE decode dispatch.
+
+    ``tokens_visited`` is the KV-token work the split-KV early exit
+    actually touches (``sum(seq_lens)``, which the engine's blocks-visited
+    counters already track); ``tokens_full`` is the dense full-span sweep.
+    Kernel backends stream only the visited tokens; the paged REF backend
+    materializes the whole page-table span (``paged_gather``), so its
+    modeled traffic is the full sweep — the annotation makes that
+    structural difference visible per step. ``achieved_fraction`` is
+    roofline-minimum bytes over modeled bytes: 1.0 = the dispatch streams
+    exactly the live context, lower = dead traffic."""
+    b = get_backend(backend) if isinstance(backend, str) else backend
+    bytes_tok, flops_tok = token_cost(fmt, d_c, d_r, heads)
+    streamed = tokens_full if (b.kind == "ref" and b.layout == "paged") \
+        else tokens_visited
+    streamed = max(streamed, tokens_visited)
+    model_bytes = streamed * bytes_tok
+    min_bytes = tokens_visited * bytes_tok
+    flops = tokens_visited * flops_tok
+    t_model_s = max(model_bytes / _V5E_HBM, flops / _V5E_BF16)
+    return {
+        "backend": b.name,
+        "bytes": model_bytes,
+        "bytes_min": min_bytes,
+        "flops": flops,
+        "achieved_fraction": (min_bytes / model_bytes
+                              if model_bytes else 1.0),
+        "t_model_us": t_model_s * 1e6,
+    }
+
+
+# ---------------------------------------------------------------------------
 # resolution — the ONE decode-dispatch decision point
 # ---------------------------------------------------------------------------
 

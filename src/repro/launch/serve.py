@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -196,6 +197,21 @@ def _engine_prompts(cfg, key, args) -> list[np.ndarray]:
     return prompts
 
 
+def _make_logger(log_json: bool):
+    """Engine-mode event logging: the default is the human-readable
+    ``[serve]`` lines; ``--log-json`` swaps every one for a single-line JSON
+    object (``{"event": ..., ...}``) a log pipeline can parse without
+    regexes. ``text`` is the legacy rendering, ``fields`` the structured
+    payload."""
+    def log(event: str, text: str, **fields) -> None:
+        if log_json:
+            print(json.dumps({"event": event, **fields}, sort_keys=True,
+                             default=float))
+        else:
+            print(text)
+    return log
+
+
 def run_engine(cfg, params, args) -> None:
     """``serve --engine``: the continuous-batching engine over the shared
     paged pool, with the static-batch ``generate`` path as the greedy parity
@@ -214,12 +230,15 @@ def run_engine(cfg, params, args) -> None:
     latest checkpoint — CI gates that the survivors complete, match the
     greedy oracle, and drain every page."""
     from repro.checkpoint import checkpoint as CK
+    from repro.obs import SpanTracer, validate_chrome_trace
     from repro.runtime.fault_tolerance import (PreemptionHandler,
                                                RestartPolicy,
                                                run_with_restarts)
     from repro.serving import (EngineConfig, FaultPlan, Request,
                                ServingEngine)
 
+    log = _make_logger(args.log_json)
+    tracer = SpanTracer(clock=args.trace_clock) if args.trace_out else None
     key = jax.random.PRNGKey(args.seed)
     prompts = _engine_prompts(cfg, key, args)
     span_pages = page_aligned_capacity(
@@ -236,7 +255,8 @@ def run_engine(cfg, params, args) -> None:
         prefill_budget=args.prefill_budget,
         max_queue=args.max_queue,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
-        eos_id=args.eos_id, seed=args.seed)
+        eos_id=args.eos_id, seed=args.seed,
+        quant_health_every=args.quant_health_every)
     plan = FaultPlan.parse(args.inject) if args.inject else None
     reqs = [Request(rid=i, prompt=p, max_new=args.gen,
                     arrival=float(i * args.arrival_gap),
@@ -256,7 +276,7 @@ def run_engine(cfg, params, args) -> None:
             # resubmitting the whole workload is idempotent
             handler.reset()
             engine = ServingEngine(cfg, params, ecfg, fault_plan=plan,
-                                   preemption=handler)
+                                   preemption=handler, tracer=tracer)
             latest = CK.latest_checkpoint(ckpt_dir)
             if latest:
                 engine.restore(latest)
@@ -267,47 +287,85 @@ def run_engine(cfg, params, args) -> None:
 
         run_with_restarts(
             attempt, RestartPolicy(max_restarts=3),
-            on_restart=lambda n: print(f"[serve] engine restart #{n} "
-                                       f"(restoring from {ckpt_dir})"))
+            on_restart=lambda n: log(
+                "engine_restart",
+                f"[serve] engine restart #{n} (restoring from {ckpt_dir})",
+                restart=n, ckpt_dir=ckpt_dir))
         handler.restore()
         engine, results = out["engine"], out["results"]
     else:
         engine = ServingEngine(cfg, params, ecfg, fault_plan=plan,
-                               preemption=None)
+                               preemption=None, tracer=tracer)
         results = engine.run(reqs)
     m = engine.metrics()
     n_done = sum(1 for r in results if r.status == "done")
-    print(f"[serve] engine: {len(results)} requests over "
-          f"{ecfg.max_batch} slots, {m['steps']} steps, "
-          f"{m['decode_tok_per_s']:.1f} tok/s (decode), "
-          f"prefill {m['prefill']['mode']} "
-          f"(chunk={m['prefill']['chunk']}, "
-          f"traces={m['prefill']['traces']}), "
-          f"pages peak {m['pages']['peak_in_use']}/{m['pages']['capacity']} "
-          f"(saved by sharing: {m['pages']['saved_by_sharing']}), "
-          f"evictions: {m['evictions']} "
-          f"(requeued: {m['requeues']})")
+    log("engine_summary",
+        f"[serve] engine: {len(results)} requests over "
+        f"{ecfg.max_batch} slots, {m['steps']} steps, "
+        f"{m['wall']['decode_tok_per_s']:.1f} tok/s (decode), "
+        f"prefill {m['prefill']['mode']} "
+        f"(chunk={m['prefill']['chunk']}, "
+        f"traces={m['prefill']['traces']}), "
+        f"pages peak {m['pages']['peak_in_use']}/{m['pages']['capacity']} "
+        f"(saved by sharing: {m['pages']['saved_by_sharing']}), "
+        f"evictions: {m['evictions']} "
+        f"(requeued: {m['requeues']})",
+        requests=len(results), slots=ecfg.max_batch, steps=m["steps"],
+        decode_tok_per_s=m["wall"]["decode_tok_per_s"],
+        prefill_mode=m["prefill"]["mode"], chunk=m["prefill"]["chunk"],
+        prefill_traces=m["prefill"]["traces"],
+        pages_peak=m["pages"]["peak_in_use"],
+        pages_capacity=m["pages"]["capacity"],
+        saved_by_sharing=m["pages"]["saved_by_sharing"],
+        evictions=m["evictions"], requeues=m["requeues"],
+        roofline=m["roofline"])
     f = m["faults"]
     if plan or args.restartable or f["rejected"] or f["deadline_cancelled"]:
-        print(f"[serve] faults: injected={len(f['injected'])} "
-              f"quarantined={f['nonfinite_rows']} "
-              f"(recovered via jnp_ref: {f['recovered_ref']}, "
-              f"failed: {f['failed_nonfinite']}), "
-              f"backend faults={f['backend_faults']}, "
-              f"deadline cancels={f['deadline_cancelled']}, "
-              f"rejected={f['rejected']}, "
-              f"preemptions={f['preemptions']}, "
-              f"restores={f['restores']} -> "
-              f"{n_done}/{len(results)} completed")
+        log("engine_faults",
+            f"[serve] faults: injected={len(f['injected'])} "
+            f"quarantined={f['nonfinite_rows']} "
+            f"(recovered via jnp_ref: {f['recovered_ref']}, "
+            f"failed: {f['failed_nonfinite']}), "
+            f"backend faults={f['backend_faults']}, "
+            f"deadline cancels={f['deadline_cancelled']}, "
+            f"rejected={f['rejected']}, "
+            f"preemptions={f['preemptions']}, "
+            f"restores={f['restores']} -> "
+            f"{n_done}/{len(results)} completed",
+            completed=n_done, total=len(results),
+            **{k: v for k, v in f.items() if k != "injected"},
+            injected=len(f["injected"]))
     pc = m["prefix_cache"]
     if pc["budget_pages"] or pc["host_tier_pages"]:
-        print(f"[serve] prefix cache: {pc['cached']} pages retained "
-              f"(budget {pc['budget_pages']}), reused {pc['reused_cached']}, "
-              f"restored from host {pc['restored_host']} "
-              f"(offloads {pc['offloads']}, tier "
-              f"{pc['host_used']}/{pc['host_tier_pages']}), "
-              f"prefill tokens skipped {pc['prefill_skipped_tokens']}, "
-              f"HBM high-water {pc['peak_resident']} pages")
+        log("prefix_cache",
+            f"[serve] prefix cache: {pc['cached']} pages retained "
+            f"(budget {pc['budget_pages']}), reused {pc['reused_cached']}, "
+            f"restored from host {pc['restored_host']} "
+            f"(offloads {pc['offloads']}, tier "
+            f"{pc['host_used']}/{pc['host_tier_pages']}), "
+            f"prefill tokens skipped {pc['prefill_skipped_tokens']}, "
+            f"HBM high-water {pc['peak_resident']} pages",
+            **{k: v for k, v in pc.items()})
+    if engine.quant_probe is not None and engine.quant_probe.samples:
+        last = engine.quant_probe.samples[-1]
+        log("quant_health",
+            f"[serve] quant health ({cfg.kv_fmt}, every "
+            f"{args.quant_health_every} steps, "
+            f"{len(engine.quant_probe.samples)} samples): scale "
+            f"[{last['scale_min']:.3g}, {last['scale_max']:.3g}], "
+            f"clip rate max {last['clip_rate_max']:.3g}, sink err bound "
+            f"{last['sink_err_bound_max']:.3g}",
+            fmt=cfg.kv_fmt, every=args.quant_health_every,
+            samples=len(engine.quant_probe.samples), **last)
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        stats = validate_chrome_trace(
+            json.load(open(args.trace_out)), expect_requests=len(reqs))
+        log("trace_written",
+            f"[serve] trace: {args.trace_out} ({stats['events']} events, "
+            f"{stats['requests']} request tracks, {stats['spans']} spans; "
+            f"clock={tracer.clock})",
+            path=args.trace_out, clock=tracer.clock, **stats)
     # drained means every page is FREE or a retained (refcount-0) cache page
     if m["pages"]["free"] + m["pages"]["cached"] != m["pages"]["capacity"]:
         raise SystemExit("[serve] FATAL: engine drained but pages leaked "
@@ -347,8 +405,10 @@ def run_engine(cfg, params, args) -> None:
         if bad:
             raise SystemExit("[serve] FATAL: engine tokens diverge from the "
                              f"static-batch generate oracle for {bad}")
-        print(f"[serve] engine parity vs static-batch generate: exact "
-              f"({n_done} completed requests)")
+        log("engine_parity",
+            f"[serve] engine parity vs static-batch generate: exact "
+            f"({n_done} completed requests)",
+            parity="exact", completed=n_done)
 
 
 def main():
@@ -508,6 +568,30 @@ def main():
                     help="PRNG seed for params, prompts, and sampling — "
                          "smokes, the engine, and the serving sim are "
                          "reproducible run-to-run for a fixed seed")
+    ap.add_argument("--trace-out", default="",
+                    help="engine-only: write a Chrome trace-event JSON of "
+                         "the run (per-request lifecycle spans, engine step "
+                         "phases, pool counters) to this path — loadable in "
+                         "chrome://tracing or ui.perfetto.dev. Validated on "
+                         "write (all spans closed, one terminal instant per "
+                         "request)")
+    ap.add_argument("--trace-clock", default="virtual",
+                    choices=["virtual", "wall"],
+                    help="trace timestamp source: 'virtual' stamps "
+                         "step*1000+offset ticks (byte-identical across "
+                         "same-seed runs; ts//1000 recovers the engine "
+                         "step), 'wall' stamps real microseconds (readable, "
+                         "not reproducible)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="engine-only: emit every [serve] status line as a "
+                         "single-line JSON event object instead of prose")
+    ap.add_argument("--quant-health-every", type=int, default=0,
+                    help="engine-only: sample FP8 quantization health "
+                         "(per-layer KV scale min/max + exponent histogram, "
+                         "clip rate, sink-row error bound) from the live "
+                         "pool every N engine steps. Host-read cost per "
+                         "sample; 0 = off (the default — the hot path never "
+                         "pays it)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

@@ -1,0 +1,7 @@
+"""Deterministic-first observability: metrics registry, span tracing,
+quantization health probes. See README "Observability"."""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry)
+from repro.obs.quant_health import QuantHealthProbe, probe_pools  # noqa: F401
+from repro.obs.trace import (SpanTracer, TICKS_PER_STEP,  # noqa: F401
+                             validate_chrome_trace)

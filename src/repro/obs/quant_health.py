@@ -1,0 +1,172 @@
+"""Opt-in FP8 quantization health probes over the live paged KV pool.
+
+SnapMLA stores the content half of every KV entry quantized per token
+(``core/quant.py``: scale = amax / qmax), and P-Cast's observation is that
+quantization damage is not uniform — attention-sink rows (token 0) carry
+outsized scales and outsized error. ``benchmarks/numerics.py`` measures
+this offline on synthetic grids; this module measures it on the RUNNING
+engine's pool, so a serving workload whose scale distribution drifts (or
+whose clip rate climbs) is visible before tokens degrade.
+
+Sampling is **opt-in and periodic** (``serve --quant-health-every N``,
+default off): each sample does host reads of the resident pages' scale /
+content planes — a real transfer cost, which is why the hot path never
+pays it implicitly. The probe only READS pool state, so greedy tokens are
+bit-identical with probes on or off (pinned by tests/test_obs.py).
+
+Per pool layer, over WRITTEN rows only (unwritten rows keep their init
+scale of 0 and are masked out):
+
+  * ``scale_min`` / ``scale_max`` and a log2-exponent histogram of the
+    per-token scales — drift here means the activation distribution moved;
+  * ``clip_rate`` — fraction of stored content elements saturated at the
+    format's qmax (|code| >= qmax): persistent clipping means per-token
+    scaling is no longer absorbing the dynamic range;
+  * ``sink_err_bound_max`` — an analytic max-quantization-error bound for
+    the sink rows (token 0 of each live sequence): ``scale * qmax *
+    rel_step / 2``, the worst-case grid spacing of the storage format at
+    full magnitude. fp8_e4m3 has a 3-bit mantissa (rel_step 2^-3); int8 has
+    rel_step 1/qmax (uniform grid). The paper's sink guard exists exactly
+    because this bound is largest on those rows.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.core.quant import qmax_for
+
+# log2(scale) exponent histogram range (clamped): 2^-24 .. 2^8
+_EXP_LO, _EXP_HI = -24, 8
+
+
+def _rel_step(fmt: str) -> float:
+    """Worst-case relative grid spacing of the storage format."""
+    if fmt == "fp8_e4m3":
+        return 2.0 ** -3          # e4m3: 3 mantissa bits
+    return 1.0 / qmax_for(fmt)    # int8: uniform grid
+
+
+def _layer_stats(content: np.ndarray, scale: np.ndarray, qmax: float,
+                 rel_step: float, pages: np.ndarray,
+                 sink_pages: np.ndarray) -> dict[str, Any]:
+    """Health stats for ONE pool layer. ``content`` [n_pages, page, d_c]
+    (already float32 host copies), ``scale`` [n_pages, page]; ``pages`` are
+    the resident page ids, ``sink_pages`` the first page of each live
+    sequence (their row 0 is the sequence's attention sink)."""
+    s = scale[pages]                                   # [P, page]
+    written = s > 0.0
+    n_written = int(written.sum())
+    out: dict[str, Any] = {"written_rows": n_written}
+    if n_written == 0:
+        out.update(scale_min=0.0, scale_max=0.0, clip_rate=0.0,
+                   scale_exp_hist={}, sink_rows=0, sink_scale_max=0.0,
+                   sink_err_bound_max=0.0)
+        return out
+    sw = s[written]
+    out["scale_min"] = float(sw.min())
+    out["scale_max"] = float(sw.max())
+    exps = np.clip(np.floor(np.log2(sw)).astype(np.int64), _EXP_LO, _EXP_HI)
+    uniq, counts = np.unique(exps, return_counts=True)
+    out["scale_exp_hist"] = {str(int(e)): int(n)
+                             for e, n in zip(uniq, counts)}
+    c = np.abs(content[pages])                         # [P, page, d_c]
+    clipped = int((c[written] >= qmax).sum())
+    out["clip_rate"] = clipped / float(c[written].size)
+    # sink rows: token 0 of each live sequence
+    if sink_pages.size:
+        sink_s = scale[sink_pages, 0]
+        sink_live = sink_s > 0.0
+        out["sink_rows"] = int(sink_live.sum())
+        smax = float(sink_s[sink_live].max()) if sink_live.any() else 0.0
+        out["sink_scale_max"] = smax
+        out["sink_err_bound_max"] = smax * qmax * rel_step / 2.0
+    else:
+        out.update(sink_rows=0, sink_scale_max=0.0, sink_err_bound_max=0.0)
+    return out
+
+
+def probe_pools(map_pools, state, *, fmt: str, resident_pages,
+                sink_pages) -> dict[str, Any]:
+    """Sample every pool leaf of ``state`` (via the engine's ``map_pools``
+    traversal) and return the per-layer health report plus an aggregate.
+
+    Scanned superblock leaves carry leading stacked layer axes; each
+    stacked index is reported as its own layer (``layers`` is keyed by
+    ``pool{leaf}.{stack}``)."""
+    qmax = qmax_for(fmt)
+    rel = _rel_step(fmt)
+    pages = np.asarray(sorted(resident_pages), np.int64)
+    sinks = np.asarray(sorted(sink_pages), np.int64)
+    layers: dict[str, dict] = {}
+    leaf_idx = [0]
+
+    def visit(pool):
+        content = np.asarray(pool.content, np.float32)
+        scale = np.asarray(pool.scale, np.float32)
+        # flatten leading stacked axes down to [L, n_pages, page, ...]
+        lead = content.shape[:-3]
+        content = content.reshape((-1,) + content.shape[len(lead):])
+        scale = scale.reshape((-1,) + scale.shape[len(lead):])
+        for layer in range(content.shape[0]):
+            key = f"pool{leaf_idx[0]}.{layer}"
+            layers[key] = _layer_stats(content[layer], scale[layer], qmax,
+                                       rel, pages, sinks)
+        leaf_idx[0] += 1
+        return pool
+
+    map_pools(visit, state)
+    agg = {
+        "resident_pages": int(pages.size),
+        "scale_min": min((v["scale_min"] for v in layers.values()
+                          if v["written_rows"]), default=0.0),
+        "scale_max": max((v["scale_max"] for v in layers.values()), default=0.0),
+        "clip_rate_max": max((v["clip_rate"] for v in layers.values()),
+                             default=0.0),
+        "sink_err_bound_max": max((v["sink_err_bound_max"]
+                                   for v in layers.values()), default=0.0),
+    }
+    return {"fmt": fmt, "layers": layers, "aggregate": agg}
+
+
+class QuantHealthProbe:
+    """Periodic sampler bound to a registry: every ``every`` engine steps,
+    probe the pool and push the aggregate into gauges. Reports accumulate
+    in ``self.samples`` for the JSON event log."""
+
+    def __init__(self, registry, *, fmt: str, every: int):
+        if every <= 0:
+            raise ValueError("quant-health sampling period must be > 0")
+        self.fmt = fmt
+        self.every = int(every)
+        self.samples: list[dict] = []
+        self._scale_min = registry.gauge(
+            "snapmla_quant_scale_min", "min per-token KV scale (written rows)")
+        self._scale_max = registry.gauge(
+            "snapmla_quant_scale_max", "max per-token KV scale (written rows)")
+        self._clip_rate = registry.gauge(
+            "snapmla_quant_clip_rate_max",
+            "max per-layer fraction of content elements saturated at qmax")
+        self._sink_err = registry.gauge(
+            "snapmla_quant_sink_err_bound_max",
+            "analytic max quantization error bound over sink rows")
+        self._samples = registry.counter(
+            "snapmla_quant_samples_total", "quant-health probes taken")
+
+    def due(self, step: int) -> bool:
+        return step % self.every == 0
+
+    def sample(self, step: int, map_pools, state, *, resident_pages,
+               sink_pages) -> dict[str, Any]:
+        report = probe_pools(map_pools, state, fmt=self.fmt,
+                             resident_pages=resident_pages,
+                             sink_pages=sink_pages)
+        agg = report["aggregate"]
+        self._scale_min.set(agg["scale_min"])
+        self._scale_max.set(agg["scale_max"])
+        self._clip_rate.set(agg["clip_rate_max"])
+        self._sink_err.set(agg["sink_err_bound_max"])
+        self._samples.inc()
+        self.samples.append({"step": step, **agg})
+        return report

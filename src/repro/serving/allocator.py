@@ -155,6 +155,11 @@ class PageAllocator:
     def num_cached(self) -> int:
         return len(self._cached)
 
+    def resident_pages(self) -> set[int]:
+        """Pages currently holding live KV bytes: referenced by requests or
+        cache-retained at refcount 0 (the set obs/quant_health probes)."""
+        return set(self._refs) | set(self._cached)
+
     def stats(self, live_tokens: int = 0) -> AllocStats:
         in_use = self.num_in_use
         refs = sum(self._refs.values())

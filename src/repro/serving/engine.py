@@ -87,12 +87,32 @@ from repro.configs.base import ModelConfig
 from repro.core.kvcache import (PagedMLAPool, page_aligned_capacity,
                                 pool_read_page, pool_with_tables,
                                 pool_write_page)
+from repro.kernels.mla_decode import backends as BK
 from repro.launch import steps as ST
 from repro.models import transformer as T
+from repro.obs import trace as TRC
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.quant_health import QuantHealthProbe
 from repro.serving.allocator import PageAllocator
 from repro.serving.faults import EnginePreempted, FaultPlan
 from repro.serving.scheduler import Request, Scheduler, Status
 from repro.serving.tiering import HostTier
+
+# the typed fault/degradation events the engine counts
+# (snapmla_engine_faults_total{kind=...}; the metrics()["faults"] compat view
+# reports exactly this set)
+FAULT_KINDS = (
+    "nonfinite_rows",        # quarantined decode rows seen
+    "recovered_ref",         # ..recovered by the jnp_ref retry
+    "failed_nonfinite",      # ..terminal (retry also non-finite)
+    "failed_prefill",        # non-finite prefill logits
+    "backend_faults",        # decode dispatch raised
+    "ref_fallback_steps",    # steps degraded to jnp_ref
+    "deadline_cancelled",    # typed FAILED("deadline")
+    "rejected",              # bounded-queue load shedding
+    "preemptions",           # snapshot-and-raise exits
+    "restores",              # checkpoint restores into this engine
+)
 
 
 def _req_to_record(r: Request) -> dict:
@@ -169,6 +189,10 @@ class EngineConfig:
     # once on the jnp_ref backend before failing the request — records
     # whether the fault was the kernel's (recovered) or the input's (failed)
     ref_retry: bool = True
+    # opt-in FP8 health probe (obs/quant_health.py): sample the pool's
+    # scale/clip/sink stats every N engine steps. 0 = off (the default —
+    # each sample is a host read of the resident pages).
+    quant_health_every: int = 0
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 0.0
@@ -200,7 +224,8 @@ class ServingEngine:
     """Admit → (chunked) prefill → decode → retire over one shared pool."""
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, *,
-                 fault_plan: FaultPlan | None = None, preemption=None):
+                 fault_plan: FaultPlan | None = None, preemption=None,
+                 tracer: TRC.SpanTracer | None = None):
         bad = [k for k in cfg.layer_pattern if k != "mla"]
         if bad or cfg.n_aux_tokens:
             raise ValueError(
@@ -220,14 +245,23 @@ class ServingEngine:
         span_tokens = self.span_pages * self.page
         self.state = T.init_decode_state(self.cfg, ecfg.max_batch, span_tokens)
 
+        # unified telemetry (obs/): every scalar counter lives in ONE typed
+        # registry; the legacy attributes below are read-only views over it
+        # and metrics() stays a compatibility dict over the same values
+        self.registry = MetricsRegistry()
+        self.tracer = tracer
+        self._register_metrics()
+        self.quant_probe = (
+            QuantHealthProbe(self.registry, fmt=cfg.kv_fmt,
+                             every=ecfg.quant_health_every)
+            if ecfg.quant_health_every > 0 and cfg.kv_fmt != "none" else None)
+
         # prefill trace counter: the wrapped python body runs at TRACE time
         # only, so this counts compiles — the recompile-bound test asserts it
         # stays <= the bucket count across any mix of prompt lengths
-        self.prefill_traces = 0
-
         def _counted(fn):
             def wrapper(*args):
-                self.prefill_traces += 1
+                self._c_prefill_traces.inc()
                 return fn(*args)
             return wrapper
 
@@ -271,46 +305,221 @@ class ServingEngine:
         self.state = warm
 
         self.step_idx = 0
-        self.decode_tokens = 0          # tokens produced by decode steps
-        self.decode_seconds = 0.0
-        self.prefill_tokens = 0         # padded chunk/prompt tokens processed
-        self.prefill_seconds = 0.0
-        self.evictions = 0
-        self.work_done = 0              # total work units (tokens) processed
-        self.prefill_skipped_tokens = 0  # prefill avoided by cache hits
         self.prefill_tokens_series: list[int] = []  # prefill work per step
         self.stall_tokens_series: list[int] = []   # prefill work per step
         #                                            while decodes in flight
-        self.stall_seconds = 0.0
         self.util_series: list[float] = []
-        # deterministic fetch-work counters: the DMA page traffic the bounded
-        # prefix fetch actually issues vs what a full-span fetch would have,
-        # plus the decode kernels' block-visit work (early-exit vs dense).
-        # Derived from host bookkeeping — exact and hardware-independent, so
-        # bench_gate can pin them as regression floors.
-        self.pages_fetched_bounded = 0   # chunk-prefill pages read (∝ chunk_start)
-        self.pages_fetched_full = 0      # pages a full-span fetch would read
-        self.decode_blocks_visited = 0   # KV blocks decode visits (∝ seq_lens)
-        self.decode_blocks_full = 0      # blocks without the seq_lens early exit
         self._wall: dict[int, dict[str, float]] = {}   # rid -> wall marks
+
+        # registry collectors mirror the allocator/tier/scheduler occupancy
+        # counters into gauges at snapshot time (they can legally DECREMENT
+        # on un-evict fast paths, so they cannot be monotonic Counters)
+        self.registry.register_collector(self._collect_occupancy)
+
+        # analytic roofline annotation: per-step model bytes/FLOPs for the
+        # resolved decode backend (ref paged gather models full-span traffic;
+        # kernels stream only visited tokens)
+        try:
+            self._backend = BK.resolve_backend(
+                cfg.decode_backend, paged=True, use_kernels=cfg.use_kernels)
+        except ValueError:
+            self._backend = BK.get_backend("jnp_paged_ref")
 
         # fault tolerance: injection plan, preemption flag, survival metrics
         self.fault_plan = fault_plan
         self.preemption = preemption       # PreemptionHandler-like (.requested)
         self._seen_rids: set[int] = set()  # submitted at least once (run()
         #                                    skips these after a restore)
-        self.faults = {
-            "nonfinite_rows": 0,        # quarantined decode rows seen
-            "recovered_ref": 0,         # ..recovered by the jnp_ref retry
-            "failed_nonfinite": 0,      # ..terminal (retry also non-finite)
-            "failed_prefill": 0,        # non-finite prefill logits
-            "backend_faults": 0,        # decode dispatch raised
-            "ref_fallback_steps": 0,    # steps degraded to jnp_ref
-            "deadline_cancelled": 0,    # typed FAILED("deadline")
-            "rejected": 0,              # bounded-queue load shedding
-            "preemptions": 0,           # snapshot-and-raise exits
-            "restores": 0,              # checkpoint restores into this engine
-        }
+
+    # ------------------------------------------------------------------
+    # telemetry (obs/metrics registry + legacy attribute views)
+    # ------------------------------------------------------------------
+
+    def _register_metrics(self) -> None:
+        r = self.registry
+        self._c_steps = r.counter(
+            "snapmla_engine_steps_total", "engine steps executed")
+        self._c_decode_tokens = r.counter(
+            "snapmla_engine_decode_tokens_total",
+            "tokens produced by decode steps")
+        self._c_prefill_tokens = r.counter(
+            "snapmla_engine_prefill_tokens_total",
+            "padded chunk/prompt tokens processed")
+        self._c_prefill_skipped = r.counter(
+            "snapmla_engine_prefill_skipped_tokens_total",
+            "prefill tokens avoided by prefix-cache hits")
+        self._c_work = r.counter(
+            "snapmla_engine_work_units_total",
+            "total work units (tokens) processed")
+        self._c_evictions = r.counter(
+            "snapmla_engine_evictions_total",
+            "pressure evictions (evict-to-requeue round trips)")
+        self._c_prefill_traces = r.counter(
+            "snapmla_engine_prefill_traces_total",
+            "prefill/chunk trace-time executions (compiles)")
+        self._h_chunk_width = r.histogram(
+            "snapmla_engine_prefill_chunk_width",
+            "padded token width of each prefill dispatch")
+        # deterministic fetch-work counters: the DMA page traffic the bounded
+        # prefix fetch actually issues vs what a full-span fetch would have,
+        # plus the decode kernels' block-visit work (early-exit vs dense).
+        # Derived from host bookkeeping — exact and hardware-independent, so
+        # bench_gate can pin them as regression floors.
+        self._c_fetch_bounded = r.counter(
+            "snapmla_fetch_pages_bounded_total",
+            "chunk-prefill pages read (bounded prefix fetch)")
+        self._c_fetch_full = r.counter(
+            "snapmla_fetch_pages_full_total",
+            "pages a full-span fetch would have read")
+        self._c_blocks_visited = r.counter(
+            "snapmla_fetch_decode_blocks_visited_total",
+            "KV blocks decode visits (seq_lens early exit)")
+        self._c_blocks_full = r.counter(
+            "snapmla_fetch_decode_blocks_full_total",
+            "KV blocks a dense decode sweep would visit")
+        # analytic roofline cost of the dispatched decode work (model, not
+        # measurement: deterministic bytes/FLOPs from the cost annotation)
+        self._c_roof_bytes = r.counter(
+            "snapmla_roofline_model_bytes_total",
+            "modeled HBM bytes moved by the resolved decode backend")
+        self._c_roof_bytes_min = r.counter(
+            "snapmla_roofline_bytes_min_total",
+            "compulsory HBM bytes (visited tokens only)")
+        self._c_roof_flops = r.counter(
+            "snapmla_roofline_flops_total", "modeled attention FLOPs")
+        self._g_roof_frac = r.gauge(
+            "snapmla_roofline_achieved_fraction",
+            "bytes_min / modeled bytes for the last decode dispatch")
+        self._c_faults = r.counter(
+            "snapmla_engine_faults_total",
+            "fault-tolerance events by kind", labels=("kind",))
+        for kind in FAULT_KINDS:      # pre-materialize for byte-stable views
+            self._c_faults.labels(kind=kind)
+        # wall-clock family: never eligible for gating (bench_gate asserts)
+        self._w_decode_s = r.counter(
+            "snapmla_wall_decode_seconds_total",
+            "wall seconds inside decode dispatch", wall=True)
+        self._w_prefill_s = r.counter(
+            "snapmla_wall_prefill_seconds_total",
+            "wall seconds inside prefill dispatch", wall=True)
+        self._w_stall_s = r.counter(
+            "snapmla_wall_stall_seconds_total",
+            "wall seconds prefilling while decodes waited", wall=True)
+        # occupancy mirrors, pushed by the collector at snapshot time
+        self._g_pages_in_use = r.gauge(
+            "snapmla_pages_in_use", "pool pages referenced by live requests")
+        self._g_pages_free = r.gauge(
+            "snapmla_pages_free", "pool pages on the free list")
+        self._g_pages_cached = r.gauge(
+            "snapmla_pages_cached", "refcount-0 cache-retained pages")
+        self._g_pages_peak_in_use = r.gauge(
+            "snapmla_pages_peak_in_use", "high-water mark of in-use pages")
+        self._g_pages_peak_resident = r.gauge(
+            "snapmla_pages_peak_resident",
+            "high-water mark of in-use + cached pages")
+        self._g_cache_saved = r.gauge(
+            "snapmla_cache_saved_pages",
+            "pages avoided via prefix sharing (live-hit)")
+        self._g_cache_reused = r.gauge(
+            "snapmla_cache_reused_pages",
+            "pages re-adopted from the refcount-0 cache")
+        self._g_cache_restored = r.gauge(
+            "snapmla_cache_restored_pages", "pages restored from the host tier")
+        self._g_cache_dropped = r.gauge(
+            "snapmla_cache_dropped_pages", "cached pages dropped under pressure")
+        self._g_tier_offloads = r.gauge(
+            "snapmla_tier_offload_pages", "pages offloaded to host memory")
+        self._g_tier_restores = r.gauge(
+            "snapmla_tier_restore_pages", "pages copied back from host memory")
+        self._g_tier_used = r.gauge(
+            "snapmla_tier_slots_used", "host tier slots currently occupied")
+        self._g_sched_requeues = r.gauge(
+            "snapmla_sched_requeues", "cumulative evict-to-requeue count")
+        self._g_sched_active = r.gauge(
+            "snapmla_sched_active_slots", "requests in prefill/decode slots")
+
+    def _collect_occupancy(self) -> None:
+        a = self.allocator
+        self._g_pages_in_use.set(a.num_in_use)
+        self._g_pages_free.set(a.num_free)
+        self._g_pages_cached.set(a.num_cached)
+        self._g_pages_peak_in_use.set(a.peak_in_use)
+        self._g_pages_peak_resident.set(a.peak_resident)
+        self._g_cache_saved.set(a.pages_saved_by_sharing)
+        self._g_cache_reused.set(a.pages_reused_cached)
+        self._g_cache_restored.set(a.pages_restored_host)
+        self._g_cache_dropped.set(a.cache_drops)
+        self._g_tier_offloads.set(a.host_offloads)
+        self._g_tier_restores.set(self.tier.restores if self.tier else 0)
+        self._g_tier_used.set(self.tier.num_used if self.tier else 0)
+        self._g_sched_requeues.set(self.scheduler.requeues)
+        self._g_sched_active.set(self.scheduler.num_active)
+
+    def _fault(self, kind: str, n: int = 1) -> None:
+        self._c_faults.labels(kind=kind).inc(n)
+
+    def telemetry(self, *, include_wall: bool = False) -> dict:
+        """The registry view (``{"work": ..., "wall": ...}``); the ``work``
+        subtree is byte-stable for a seeded run."""
+        return self.registry.snapshot(include_wall=include_wall)
+
+    # legacy attribute views (read-only) over the registry — kept so tests
+    # and callers that predate obs/ keep reading the same numbers
+    @property
+    def decode_tokens(self) -> int:
+        return self._c_decode_tokens.value
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self._c_prefill_tokens.value
+
+    @property
+    def prefill_skipped_tokens(self) -> int:
+        return self._c_prefill_skipped.value
+
+    @property
+    def work_done(self) -> int:
+        return self._c_work.value
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evictions.value
+
+    @property
+    def prefill_traces(self) -> int:
+        return self._c_prefill_traces.value
+
+    @property
+    def pages_fetched_bounded(self) -> int:
+        return self._c_fetch_bounded.value
+
+    @property
+    def pages_fetched_full(self) -> int:
+        return self._c_fetch_full.value
+
+    @property
+    def decode_blocks_visited(self) -> int:
+        return self._c_blocks_visited.value
+
+    @property
+    def decode_blocks_full(self) -> int:
+        return self._c_blocks_full.value
+
+    @property
+    def decode_seconds(self) -> float:
+        return self._w_decode_s.value
+
+    @property
+    def prefill_seconds(self) -> float:
+        return self._w_prefill_s.value
+
+    @property
+    def stall_seconds(self) -> float:
+        return self._w_stall_s.value
+
+    @property
+    def faults(self) -> dict[str, int]:
+        return {k: self._c_faults.labels(kind=k).value for k in FAULT_KINDS}
 
     # ------------------------------------------------------------------
     # submission
@@ -341,11 +550,20 @@ class ServingEngine:
         self._wall[req.rid] = {"arrival": time.time()}
         req.arrival_work = self.work_done
         self._seen_rids.add(req.rid)
+        if self.tracer:
+            # the QUEUED span opens at the request's virtual arrival step
+            self.tracer.req_begin(
+                req.rid, "QUEUED", self.tracer.ts(max(int(req.arrival), 0)),
+                args={"prompt_len": req.prompt_len, "max_new": req.max_new})
         if self.scheduler.queue_full:
             # backpressure: typed load shedding instead of unbounded queueing
-            self.faults["rejected"] += 1
+            self._fault("rejected")
             self._wall[req.rid]["finish"] = time.time()
             self.scheduler.reject(req, self.step_idx, "queue_full")
+            if self.tracer:
+                ts = self.tracer.ts(self.step_idx, TRC.OFF_FAIL)
+                self.tracer.req_end(req.rid, ts, args={"status": "rejected"})
+                self.tracer.req_instant(req.rid, "REJECTED(queue_full)", ts)
             return
         self.scheduler.submit(req)
 
@@ -409,6 +627,9 @@ class ServingEngine:
         if not ops:
             return
         assert self.tier is not None, "tier ops without a host tier"
+        if self.tracer:
+            self.tracer.step_phase(self.step_idx, "tier_drain",
+                                   args={"ops": len(ops)})
         for kind, _pid, slot in ops:
             if kind == "restore" and self.tier.has_data(slot):
                 self.tier.prefetch(slot)
@@ -462,6 +683,11 @@ class ServingEngine:
             req.first_token_step = self.step_idx
             req.first_token_work = self.work_done
             self._wall[req.rid]["first"] = time.time()
+            if self.tracer:
+                self.tracer.req_instant(
+                    req.rid, "FIRST_TOKEN",
+                    self.tracer.ts(self.step_idx, TRC.OFF_FIRST_TOKEN),
+                    args={"token": int(tok)})
         eos_hit = self.ecfg.eos_id is not None and tok == self.ecfg.eos_id
         if len(req.out_tokens) >= req.max_new or eos_hit:
             self._retire(req)
@@ -470,6 +696,11 @@ class ServingEngine:
         slot = req.slot
         self.scheduler.retire(req, self.step_idx, self.allocator)
         self._wall[req.rid]["finish"] = time.time()
+        if self.tracer:
+            ts = self.tracer.ts(self.step_idx, TRC.OFF_RETIRE)
+            self.tracer.req_end(req.rid, ts, args={"status": "done"})
+            self.tracer.req_instant(req.rid, "DONE", ts,
+                                    args={"tokens": len(req.out_tokens)})
         if slot >= 0:
             self.table[slot] = 0          # park the slot on the scratch page
             self.last_tok[slot] = 0
@@ -479,6 +710,14 @@ class ServingEngine:
         replays prompt + generated tokens at its next admission."""
         slot = req.slot
         self.scheduler.requeue(req, self.allocator)
+        if self.tracer:
+            ts = self.tracer.ts(self.step_idx, TRC.OFF_EVICT)
+            self.tracer.req_end(req.rid, ts, args={"evicted": True})
+            self.tracer.req_instant(req.rid, "EVICTED", ts,
+                                    args={"requeues": req.requeues})
+            self.tracer.reset_chunks(req.rid)
+            self.tracer.req_begin(req.rid, "QUEUED", ts,
+                                  args={"requeue": req.requeues})
         if slot >= 0:
             self.table[slot] = 0
             self.last_tok[slot] = 0
@@ -491,6 +730,11 @@ class ServingEngine:
         self.scheduler.fail(req, self.step_idx, self.allocator, reason)
         self._wall.setdefault(req.rid, {"arrival": time.time()})
         self._wall[req.rid]["finish"] = time.time()
+        if self.tracer:
+            ts = self.tracer.ts(self.step_idx, TRC.OFF_FAIL)
+            self.tracer.req_end(req.rid, ts,
+                                args={"status": "failed", "reason": reason})
+            self.tracer.req_instant(req.rid, f"FAILED({reason})", ts)
         if slot >= 0:
             self.table[slot] = 0
             self.last_tok[slot] = 0
@@ -509,7 +753,7 @@ class ServingEngine:
                  if r.status in (Status.QUEUED, Status.PREFILLING)
                  and r.any_deadline_blown(now)]
         for req in stale:
-            self.faults["deadline_cancelled"] += 1
+            self._fault("deadline_cancelled")
             self._fail(req, "deadline")
 
     # ------------------------------------------------------------------
@@ -552,14 +796,18 @@ class ServingEngine:
     def _quarantine(self, req: Request) -> None:
         """A poisoned logits row: retry once on jnp_ref (if enabled), else /
         on a second failure mark the request terminal FAILED("nonfinite")."""
-        self.faults["nonfinite_rows"] += 1
+        self._fault("nonfinite_rows")
+        if self.tracer:
+            self.tracer.engine_instant(
+                self.step_idx, TRC.OFF_FAIL - 20, "quarantine",
+                args={"rid": req.rid, "slot": req.slot})
         if self.ecfg.ref_retry:
             recovered, tok = self._retry_ref(req)
             if recovered:
-                self.faults["recovered_ref"] += 1
+                self._fault("recovered_ref")
                 self._emit(req, tok)
                 return
-        self.faults["failed_nonfinite"] += 1
+        self._fault("failed_nonfinite")
         self._fail(req, "nonfinite")
 
     # ------------------------------------------------------------------
@@ -572,6 +820,11 @@ class ServingEngine:
             row = np.zeros((self.span_pages,), np.int32)
             row[:len(r.pages)] = r.pages
             self.table[r.slot] = row
+            if self.tracer:
+                self.tracer.req_transition(
+                    r.rid, "PREFILL",
+                    self.tracer.ts(self.step_idx, TRC.OFF_ADMIT),
+                    args={"slot": r.slot, "cached_tokens": r.cached_tokens})
         # land host-tier restores BEFORE any prefill chunk can read (or any
         # reallocation can overwrite) the pages involved
         self._drain_tier_ops()
@@ -591,7 +844,7 @@ class ServingEngine:
                 # seed the first sampled token (rewriting a matched page is
                 # byte-identical: FP8 quantization is deterministic)
                 r.prefill_pos = min(r.cached_tokens, eff_len - 1)
-            self.prefill_skipped_tokens += r.prefill_pos
+            self._c_prefill_skipped.inc(r.prefill_pos)
             if r.prefill_pos >= eff_len:
                 self._finish_prefill(r, None)
         return admitted
@@ -604,16 +857,25 @@ class ServingEngine:
         req.status = Status.DECODE
         if req.out_tokens:                        # replay after requeue
             self.last_tok[req.slot] = req.out_tokens[-1]
+            if self.tracer:
+                self.tracer.req_transition(
+                    req.rid, "DECODE",
+                    self.tracer.ts(self.step_idx, TRC.OFF_DECODE),
+                    args={"replay": True})
             return
         toks, finite = self._postprocess(logits_row, [req])
         if not finite[0]:
             # per-request isolation (no ref retry for prefill: the chunked
             # prefix pages are already written, a divergent prompt stays
             # divergent — quarantine is decode's cheap path, prefill just
-            # fails the one request)
-            self.faults["failed_prefill"] += 1
+            # fails the one request). The open PREFILL span closes in _fail.
+            self._fault("failed_prefill")
             self._fail(req, "nonfinite_prefill")
             return
+        if self.tracer:
+            self.tracer.req_transition(
+                req.rid, "DECODE",
+                self.tracer.ts(self.step_idx, TRC.OFF_DECODE))
         self._emit(req, int(toks[0]))
 
     def _run_chunk(self, req: Request) -> int:
@@ -635,13 +897,18 @@ class ServingEngine:
             jnp.asarray([req.prefill_pos], jnp.int32),
             jnp.asarray([width - 1], jnp.int32))
         logits.block_until_ready()
-        self.prefill_seconds += time.time() - t0
+        self._w_prefill_s.inc(time.time() - t0)
         self._adopt_pool_data(new_state)
         # bounded prefix fetch reads ceil(chunk_start / page) pages — the
         # live prefix BELOW this chunk's start — where the full-span fetch
         # would stream the whole page-table span every chunk
-        self.pages_fetched_bounded += -(-req.prefill_pos // self.page)
-        self.pages_fetched_full += self.span_pages
+        self._c_fetch_bounded.inc(-(-req.prefill_pos // self.page))
+        self._c_fetch_full.inc(self.span_pages)
+        self._h_chunk_width.observe(bucket)
+        if self.tracer:
+            self.tracer.req_chunk(req.rid, self.step_idx,
+                                  args={"width": width, "bucket": bucket,
+                                        "pos": req.prefill_pos})
         req.prefill_pos += width
         self.allocator.mark_ready(req.pages, req.prefill_pos)
         if req.prefill_pos == len(eff):
@@ -685,8 +952,9 @@ class ServingEngine:
             t0 = time.time()
             logits, new_state = self._prefill_fn(self.params, prompts, view)
             logits.block_until_ready()
-            self.prefill_seconds += time.time() - t0
+            self._w_prefill_s.inc(time.time() - t0)
             self._adopt_pool_data(new_state)
+            self._h_chunk_width.observe(length)
             for r in group:
                 self.allocator.mark_ready(r.pages, length)
             fresh = [r for r in group if not r.out_tokens]
@@ -694,16 +962,25 @@ class ServingEngine:
             for r in replay:
                 r.status = Status.DECODE
                 self.last_tok[r.slot] = r.out_tokens[-1]
+                if self.tracer:
+                    self.tracer.req_transition(
+                        r.rid, "DECODE",
+                        self.tracer.ts(self.step_idx, TRC.OFF_DECODE),
+                        args={"replay": True})
             if fresh:
                 idx = [group.index(r) for r in fresh]
                 toks, finite = self._postprocess(logits[np.asarray(idx)],
                                                  fresh)
                 for r, tok, ok in zip(fresh, toks, finite):
                     if not ok:           # isolate the poisoned row only
-                        self.faults["failed_prefill"] += 1
+                        self._fault("failed_prefill")
                         self._fail(r, "nonfinite_prefill")
                         continue
                     r.status = Status.DECODE
+                    if self.tracer:
+                        self.tracer.req_transition(
+                            r.rid, "DECODE",
+                            self.tracer.ts(self.step_idx, TRC.OFF_DECODE))
                     self._emit(r, int(tok))
             spent += length * len(group)
         return spent
@@ -736,9 +1013,9 @@ class ServingEngine:
                 victim = self.scheduler.eviction_victim(self.step_idx)
                 if victim is None:
                     break
-                self.evictions += 1
+                self._c_evictions.inc()
                 if victim.any_deadline_blown(self.step_idx):
-                    self.faults["deadline_cancelled"] += 1
+                    self._fault("deadline_cancelled")
                     self._fail(victim, "deadline")
                 else:
                     self._requeue(victim)
@@ -767,8 +1044,12 @@ class ServingEngine:
                     f"injected backend failure at step {self.step_idx}")
             return self._decode_fn(self.params, tok, state, lens)
         except Exception:
-            self.faults["backend_faults"] += 1
-            self.faults["ref_fallback_steps"] += 1
+            self._fault("backend_faults")
+            self._fault("ref_fallback_steps")
+            if self.tracer:
+                self.tracer.engine_instant(
+                    self.step_idx, TRC.PHASE_WINDOWS["decode"][0] + 10,
+                    "backend_fault", args={"fallback": "jnp_ref"})
             return self._ref_decode_fn()(self.params, tok, state, lens)
 
     def step(self) -> None:
@@ -779,20 +1060,28 @@ class ServingEngine:
         self._sweep_deadlines()
         decode_in_flight = any(r.status is Status.DECODE
                                for r in self.scheduler.active)
+        finished_before = len(self.scheduler.finished)
         admitted = self._admit()
+        if self.tracer and admitted:
+            self.tracer.step_phase(self.step_idx, "admit",
+                                   args={"admitted": len(admitted)})
         t_pre = time.time()
         if self.chunk > 0:
             spent = self._prefill_chunked()
         else:
             spent = self._prefill_monolithic(admitted)
-        self.prefill_tokens += spent
-        self.work_done += spent
+        self._c_prefill_tokens.inc(spent)
+        self._c_work.inc(spent)
         self.prefill_tokens_series.append(spent)
         # decode-stall accounting: prefill work that ran while decodes were
         # in flight is exactly the work that would have stalled them
         self.stall_tokens_series.append(spent if decode_in_flight else 0)
         if decode_in_flight:
-            self.stall_seconds += time.time() - t_pre
+            self._w_stall_s.inc(time.time() - t_pre)
+        if self.tracer and spent:
+            self.tracer.step_phase(self.step_idx, "prefill",
+                                   args={"tokens": spent,
+                                         "stalled_decodes": decode_in_flight})
 
         self._ensure_capacity()
         # growth-pressure evictions may have queued offloads: copy those
@@ -823,13 +1112,34 @@ class ServingEngine:
             slots = np.array([r.slot for r in active], np.int32)
             # split-KV early exit: each row visits ceil(seq_len / page)
             # blocks; a dense decode would sweep the full span per row
-            self.decode_blocks_visited += int(
-                sum(-(-r.seq_len // self.page) for r in active))
-            self.decode_blocks_full += len(active) * self.span_pages
+            self._c_blocks_visited.inc(int(
+                sum(-(-r.seq_len // self.page) for r in active)))
+            self._c_blocks_full.inc(len(active) * self.span_pages)
+            # analytic roofline annotation of this dispatch (model, not
+            # measurement: pure function of the visited-token counts)
+            cost = BK.dispatch_cost(
+                self._backend,
+                tokens_visited=sum(r.seq_len for r in active),
+                tokens_full=len(active) * self.span_pages * self.page,
+                heads=self.cfg.n_heads, d_c=self.cfg.mla.d_c,
+                d_r=self.cfg.mla.d_rope, fmt=self.cfg.kv_fmt)
+            self._c_roof_bytes.inc(cost["bytes"])
+            self._c_roof_bytes_min.inc(cost["bytes_min"])
+            self._c_roof_flops.inc(cost["flops"])
+            self._g_roof_frac.set(cost["achieved_fraction"])
+            if self.tracer:
+                self.tracer.step_phase(
+                    self.step_idx, "decode",
+                    args={"rows": len(active),
+                          "model_bytes": cost["bytes"],
+                          "achieved_fraction": cost["achieved_fraction"]})
             toks, finite = self._postprocess(logits[slots], active)
-            self.decode_seconds += time.time() - t0
-            self.decode_tokens += len(active)
-            self.work_done += len(active)
+            self._w_decode_s.inc(time.time() - t0)
+            self._c_decode_tokens.inc(len(active))
+            self._c_work.inc(len(active))
+            if self.tracer:
+                self.tracer.step_phase(self.step_idx, "postprocess",
+                                       args={"rows": len(active)})
             for r, tok, ok in zip(active, toks, finite):
                 if not ok:
                     # per-slot quarantine: THIS request degrades (ref retry
@@ -840,6 +1150,22 @@ class ServingEngine:
         live = sum(r.seq_len if r.status is Status.DECODE else r.prefill_pos
                    for r in self.scheduler.active)
         self.util_series.append(self.allocator.stats(live).utilization)
+        if self.tracer:
+            retired = len(self.scheduler.finished) - finished_before
+            if retired:
+                self.tracer.step_phase(self.step_idx, "retire",
+                                       args={"requests": retired})
+            a = self.allocator
+            self.tracer.counter(self.step_idx, "pages",
+                                {"in_use": a.num_in_use, "free": a.num_free,
+                                 "cached": a.num_cached})
+        if self.quant_probe and self.quant_probe.due(self.step_idx):
+            self.quant_probe.sample(
+                self.step_idx, self._map_pools, self.state,
+                resident_pages=self.allocator.resident_pages(),
+                sink_pages={r.pages[0] for r in self.scheduler.active
+                            if r.pages})
+        self._c_steps.inc()
         self.step_idx += 1
 
     # ------------------------------------------------------------------
@@ -870,22 +1196,16 @@ class ServingEngine:
                      for rid, marks in self._wall.items()},
             "faults": dict(self.faults),
             "counters": {
-                "decode_tokens": self.decode_tokens,
-                "decode_seconds": self.decode_seconds,
-                "prefill_tokens": self.prefill_tokens,
-                "prefill_seconds": self.prefill_seconds,
-                "evictions": self.evictions,
-                "work_done": self.work_done,
-                "prefill_skipped_tokens": self.prefill_skipped_tokens,
-                "stall_seconds": self.stall_seconds,
                 "prefill_tokens_series": self.prefill_tokens_series,
                 "stall_tokens_series": self.stall_tokens_series,
                 "util_series": self.util_series,
-                "pages_fetched_bounded": self.pages_fetched_bounded,
-                "pages_fetched_full": self.pages_fetched_full,
-                "decode_blocks_visited": self.decode_blocks_visited,
-                "decode_blocks_full": self.decode_blocks_full,
             },
+            # the registry is the single source of truth for every scalar
+            # counter; the tracer state keeps span ids unique across a
+            # restore so the resumed run appends to the SAME trace
+            "registry": self.registry.export_state(),
+            "trace": (self.tracer.export_state()
+                      if self.tracer is not None else None),
         }
 
     def snapshot(self, directory: str, *, keep: int = 3) -> str:
@@ -934,25 +1254,19 @@ class ServingEngine:
         self._seen_rids = set(host["seen_rids"])
         self._wall = {int(rid): {k: float(v) for k, v in marks.items()}
                       for rid, marks in host["wall"].items()}
-        restored_faults = dict(host["faults"])
-        restored_faults["restores"] = restored_faults.get("restores", 0) + 1
-        self.faults = restored_faults
         c = host["counters"]
-        self.decode_tokens = int(c["decode_tokens"])
-        self.decode_seconds = float(c["decode_seconds"])
-        self.prefill_tokens = int(c["prefill_tokens"])
-        self.prefill_seconds = float(c["prefill_seconds"])
-        self.evictions = int(c["evictions"])
-        self.work_done = int(c["work_done"])
-        self.prefill_skipped_tokens = int(c.get("prefill_skipped_tokens", 0))
-        self.stall_seconds = float(c["stall_seconds"])
         self.prefill_tokens_series = list(c["prefill_tokens_series"])
         self.stall_tokens_series = list(c["stall_tokens_series"])
         self.util_series = list(c["util_series"])
-        self.pages_fetched_bounded = int(c.get("pages_fetched_bounded", 0))
-        self.pages_fetched_full = int(c.get("pages_fetched_full", 0))
-        self.decode_blocks_visited = int(c.get("decode_blocks_visited", 0))
-        self.decode_blocks_full = int(c.get("decode_blocks_full", 0))
+        # the registry round-trips every scalar counter (faults included);
+        # restore the values, then re-materialize the full fault label set
+        # and count this restore itself
+        self.registry.restore_state(host["registry"])
+        for kind in FAULT_KINDS:
+            self._c_faults.labels(kind=kind)
+        self._fault("restores")
+        if self.tracer is not None and host.get("trace") is not None:
+            self.tracer.restore_state(host["trace"])
         self.step_idx = int(host["step_idx"])
 
     def run(self, requests: list[Request], *, ckpt_dir: str | None = None,
@@ -984,7 +1298,11 @@ class ServingEngine:
             preempted = (self.preemption is not None
                          and getattr(self.preemption, "requested", False))
             if preempted:
-                self.faults["preemptions"] += 1
+                self._fault("preemptions")
+                if self.tracer:
+                    self.tracer.engine_instant(
+                        self.step_idx, 0, "preemption",
+                        args={"snapshot": bool(ckpt_dir)})
             if ckpt_dir and (preempted or (
                     ckpt_every and self.step_idx % ckpt_every == 0)):
                 self.snapshot(ckpt_dir)
@@ -1018,12 +1336,21 @@ class ServingEngine:
         stats = self.allocator.stats()
         tps = self.decode_tokens / self.decode_seconds \
             if self.decode_seconds else 0.0
+        roof_bytes = self._c_roof_bytes.value
         return {
             "steps": self.step_idx,
             "decode_tokens": self.decode_tokens,
-            "decode_tok_per_s": tps,
             "evictions": self.evictions,
             "requeues": self.scheduler.requeues,
+            # wall-clock family: machine-dependent by construction, so it
+            # lives under ONE subtree that gating must never reach into
+            # (scripts/bench_gate.py asserts no gated path contains "wall")
+            "wall": {
+                "decode_tok_per_s": tps,
+                "decode_seconds": self.decode_seconds,
+                "prefill_seconds": self.prefill_seconds,
+                "stall_seconds": self.stall_seconds,
+            },
             "prefill": {
                 "mode": "chunked" if self.chunk else "monolithic",
                 "chunk": self.chunk,
@@ -1031,13 +1358,21 @@ class ServingEngine:
                 "traces": self.prefill_traces,
                 "tokens": self.prefill_tokens,
                 "tokens_series": self.prefill_tokens_series,
-                "seconds": self.prefill_seconds,
             },
             "work": {
                 "total": self.work_done,
                 "stall_tokens_total": int(sum(self.stall_tokens_series)),
                 "stall_tokens_series": self.stall_tokens_series,
-                "stall_seconds": self.stall_seconds,
+            },
+            "roofline": {
+                "backend": self._backend.name,
+                "model_bytes": roof_bytes,
+                "bytes_min": self._c_roof_bytes_min.value,
+                "flops": self._c_roof_flops.value,
+                "achieved_fraction_total": (
+                    self._c_roof_bytes_min.value / roof_bytes
+                    if roof_bytes else 0.0),
+                "achieved_fraction_last": self._g_roof_frac.value,
             },
             "fetch_work": {
                 "pages_fetched_bounded": self.pages_fetched_bounded,
