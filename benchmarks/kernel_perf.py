@@ -350,6 +350,7 @@ def emit_split_profile(path=None,
                        shapes=((512, 64, 2), (1024, 64, 2), (1024, 128, 4)),
                        paged_shapes=((512, 64, 2),),
                        config_shapes=((512, 2),),
+                       amla_config_shapes=((512, 2),),
                        iters=2):
     """Run the autotuner's measured sweep over a few (capacity, block_n,
     batch) shapes — contiguous AND paged layouts, each timed on its own
@@ -375,6 +376,14 @@ def emit_split_profile(path=None,
     for capacity, batch in config_shapes:
         autotune.measure_config_sweep(capacity, batch, profile=profile,
                                       iters=iters)
+    # AMLA-rescale entries ("/amla" keys): the combine-free emission shifts
+    # the split/combine trade-off, so its plans are timed on the AMLA kernel
+    # itself (compiled on TPU via interpret=None) and never borrow FMA
+    # timings. FMA stays the default — these keys only drive callers that
+    # opt into rescale="amla".
+    for capacity, batch in amla_config_shapes:
+        autotune.measure_config_sweep(capacity, batch, profile=profile,
+                                      iters=iters, rescale="amla")
     out = profile.save(path)
     autotune.reset(profile)          # freshly measured profile wins in-process
     return out

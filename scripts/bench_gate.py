@@ -106,6 +106,21 @@ METRICS: list[tuple[str, str, str, str, float]] = [
      "fetch_bound.1.bounded_pages", "lower", 0.0),
     ("BENCH_splitkv.json", "splitkv.json",
      "fetch_bound.1.dma_savings", "higher", 0.0),
+    # -- serving: self-speculative decoding twin (seeded, greedy) ----------
+    # speculation must stay a pure throughput optimization: identical
+    # tokens, committed tokens per slot-step above the sequential-decode
+    # ceiling of 1.0 (the baseline value pins > 1.0), and the same
+    # workload drained in no more engine steps than the baseline run.
+    ("BENCH_serving.json", "serving.json",
+     "speculative.tokens_equal", "true", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "speculative.spec.accepted_tokens_per_step", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "speculative.spec.accept_rate", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "speculative.spec.accepted_tokens", "higher", 0.0),
+    ("BENCH_serving.json", "serving.json",
+     "speculative.delta.steps_saved", "higher", 0.0),
     # -- serving: unified telemetry (registry work metrics, probes armed) --
     # all-probes-on tiered shared-prefix run: the trace and registry must
     # be byte-identical across same-seed twins, and the registry's page

@@ -19,6 +19,10 @@
 #     parity-gated per prompt-length group against the generate oracle,
 #     and the driver additionally fails if the engine compiled more
 #     prefill variants than the power-of-two bucket count
+#   * self-speculative decoding (--spec-draft): n-gram drafts verified by
+#     one q_len>1 split-KV dispatch per step with rollback-by-rewind —
+#     greedy runs parity-gated against the generate oracle, the spec trace
+#     summarized (verify steps / accept rate) by scripts/trace_report.py
 #   * fault drills (--inject): NaN-poisoned slot recovered via the jnp_ref
 #     retry, and an injected preemption under --restartable restored from
 #     an engine checkpoint — both parity-gated against the generate oracle
@@ -95,6 +99,22 @@ python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 2 \
 python -m repro.launch.serve --smoke --gen 4 --engine --backend kernel \
     --batch 3 --prompt-len 48 --shared-prefix 48 --prefix-cache-pages 2 \
     --host-tier-pages 12 --prefill-chunk 16 --arrival-gap 10 --seed 2
+
+# self-speculative decoding: n-gram drafts verified in ONE q_len>1 split-KV
+# dispatch per step, rejected tail rolled back by rewinding seq_lens (pages
+# never move). Greedy runs are parity-gated against the static-batch
+# generate oracle by the driver, so a draft surviving an incorrect verify
+# fails loudly; the sampled run pins the fold_in(count) key-alignment
+# contract (sampling through the verify path == sequential sampling). Both
+# ref and kernel backends decode through the same rank-4 verify kernel.
+python -m repro.launch.serve --smoke --gen 8 --engine --max-batch 2 \
+    --batch 4 --spec-draft 3 --arrival-gap 2 --seed 1 \
+    --trace-out TRACE_spec.json
+python scripts/trace_report.py TRACE_spec.json --expect-requests 4
+python -m repro.launch.serve --smoke --gen 6 --engine --backend kernel \
+    --batch 3 --spec-draft 2 --seed 2
+python -m repro.launch.serve --smoke --gen 6 --engine --max-batch 2 \
+    --batch 4 --spec-draft 3 --temperature 0.8 --top-k 8 --seed 3
 
 # fault drills: (1) a NaN injected into one slot's logits mid-decode —
 # the poisoned request must recover via the one-shot jnp_ref retry while

@@ -11,7 +11,10 @@ does), then prints three tables derived purely from the trace:
     own reported numbers), prefill chunk count, outcome;
   * decode-stall — engine steps whose prefill window ran while decodes
     were in flight (the ITL-spike steps), with per-step token maxima;
-  * page occupancy — min/mean/peak of the per-step pool counter samples.
+  * page occupancy — min/mean/peak of the per-step pool counter samples;
+  * speculative decoding (``serve --spec-draft``) — verify steps, drafted
+    vs accepted totals, and the acceptance rate, from the verify-flagged
+    decode phase spans.
 
 Exit code is non-zero on validation failure, so CI can gate on it.
 """
@@ -53,6 +56,7 @@ def summarize(payload: dict) -> dict:
     reqs: dict[int, dict] = {}
     stall_steps: dict[int, dict] = {}
     pages: list[dict] = []
+    spec = {"verify_steps": 0, "drafted": 0, "accepted": 0, "rows": 0}
     for e in payload["traceEvents"]:
         ph = e.get("ph")
         if ph == "M":
@@ -65,6 +69,12 @@ def summarize(payload: dict) -> dict:
                 stall_steps[e["args"]["step"]] = {
                     "tokens": e["args"].get("tokens", 0),
                     "stalled_decodes": e["args"]["stalled_decodes"]}
+            elif ph == "X" and e.get("name") == "decode" \
+                    and e.get("args", {}).get("verify"):
+                spec["verify_steps"] += 1
+                spec["drafted"] += e["args"].get("drafted", 0)
+                spec["accepted"] += e["args"].get("accepted", 0)
+                spec["rows"] += e["args"].get("rows", 0)
             continue
         rid = e.get("tid")
         r = reqs.setdefault(rid, {"rid": rid, "queued": None, "admit": None,
@@ -104,6 +114,8 @@ def summarize(payload: dict) -> dict:
             "capacity": max(cap),
         }
     stalls = sorted(stall_steps.items())
+    spec["accept_rate"] = (spec["accepted"] / spec["drafted"]
+                           if spec["drafted"] else 0.0)
     return {
         "clock": meta.get("clock", "virtual"),
         "requests": [reqs[rid] for rid in sorted(reqs)],
@@ -115,6 +127,7 @@ def summarize(payload: dict) -> dict:
             "by_step": stalls,
         },
         "occupancy": occupancy,
+        "speculative": spec,
     }
 
 
@@ -144,6 +157,12 @@ def render(summary: dict, stats: dict) -> str:
                 f"in use (mean {occ['in_use_mean']:.1f}, "
                 f"min {occ['in_use_min']}, cached peak "
                 f"{occ['cached_peak']}) over {occ['samples']} step samples"]
+    sp = summary["speculative"]
+    if sp["verify_steps"]:
+        out += ["", f"speculative: {sp['verify_steps']} verify steps over "
+                f"{sp['rows']} slot-steps, drafted {sp['drafted']} / "
+                f"accepted {sp['accepted']} "
+                f"(accept rate {sp['accept_rate']:.3f})"]
     return "\n".join(out)
 
 

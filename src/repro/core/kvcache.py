@@ -525,7 +525,10 @@ def paged_mla_prefill_at(pool: PagedMLAPool, cfg: CacheConfig,
     P = pool.page_table.shape[-1]
     logical = jnp.clip(t // page, 0, P - 1)
     pids = jnp.take_along_axis(pool.page_table, logical, axis=1)   # [B, C]
-    pids = jnp.where(valid, pids, 0)                # padded tail -> scratch
+    # positions past the table span route to scratch instead of aliasing the
+    # last mapped page (a speculative-verify block near the end of a full
+    # span writes its rejected tail rows here; they are never read back)
+    pids = jnp.where(valid & (t // page < P), pids, 0)
     offs = t % page
     return pool._replace(
         content=pool.content.at[pids, offs].set(

@@ -14,8 +14,10 @@ emit (``benchmarks/kernel_perf.py::emit_split_profile``). Resolution order in
   3. no usable entry / no profile file                  -> heuristic fallback
 
 The profile file format (version 2); the key grows a "/paged" suffix for
-sweeps measured on the paged kernel (contiguous and paged plans never mix),
-and "best" prefers smaller split counts within WIN_MARGIN so measurement
+sweeps measured on the paged kernel (contiguous and paged plans never mix)
+and an "/amla" suffix for sweeps timed under the combine-free AMLA rescale
+(FMA, the default, keeps the bare key — existing profiles stay exact hits).
+"best" prefers smaller split counts within WIN_MARGIN so measurement
 jitter can't flip a plan away from the bit-exact single-pass path:
 
     {
@@ -73,21 +75,31 @@ def profile_path() -> pathlib.Path:
     return pathlib.Path(override) if override else DEFAULT_PROFILE
 
 
-def _key(capacity: int, block_n: int, batch: int, layout: str) -> str:
+def _key(capacity: int, block_n: int, batch: int, layout: str,
+         rescale: str = "fma") -> str:
     base = f"{int(capacity)}/{int(block_n)}/{int(batch)}"
-    return base if layout == "contiguous" else f"{base}/{layout}"
+    if layout != "contiguous":
+        base = f"{base}/{layout}"
+    # the FMA rescale is the default path and keeps the PR-8 key shape, so
+    # existing profile files stay exact hits; AMLA sweeps get their own
+    # suffix — the two emission paths' timings never drive each other
+    return base if rescale == "fma" else f"{base}/{rescale}"
 
 
-def _parse_key(key: str) -> tuple[int, int, int, str] | None:
-    """Inverse of ``_key``: '<cap>/<bn>/<batch>[/<layout>]' -> tuple, or None
-    for malformed keys (hand-edited files must not crash resolution)."""
+def _parse_key(key: str) -> tuple[int, int, int, str, str] | None:
+    """Inverse of ``_key``: '<cap>/<bn>/<batch>[/<layout>][/amla]' ->
+    (capacity, block_n, batch, layout, rescale), or None for malformed keys
+    (hand-edited files must not crash resolution)."""
     parts = key.split("/")
+    rescale = "fma"
+    if parts and parts[-1] == "amla":
+        rescale = parts.pop()
     if len(parts) == 3:
         parts = parts + ["contiguous"]
     if len(parts) != 4:
         return None
     try:
-        return int(parts[0]), int(parts[1]), int(parts[2]), parts[3]
+        return int(parts[0]), int(parts[1]), int(parts[2]), parts[3], rescale
     except ValueError:
         return None
 
@@ -130,32 +142,33 @@ class SplitProfile:
 
     # -- queries ----------------------------------------------------------
     def lookup(self, capacity: int, block_n: int, batch: int | None,
-               layout: str = "contiguous") -> int | None:
+               layout: str = "contiguous", rescale: str = "fma") -> int | None:
         """Measured best split count, or None (-> heuristic fallback)."""
         if batch is None:
             return None
-        e = self.entries.get(_key(capacity, block_n, batch, layout))
+        e = self.entries.get(_key(capacity, block_n, batch, layout, rescale))
         try:
             return int(e["best"]) if e else None
         except (TypeError, KeyError, ValueError):
             return None          # malformed entry -> heuristic fallback
 
     def lookup_nearest(self, capacity: int, block_n: int, batch: int | None,
-                       layout: str = "contiguous") -> int | None:
+                       layout: str = "contiguous",
+                       rescale: str = "fma") -> int | None:
         """Exact hit, else nearest-neighbor batch interpolation: among the
-        entries sharing (capacity, block_n, layout), the best of the batch
-        nearest in log-space (ties go to the smaller batch — closer to the
-        conservative fewer-splits regime). The split/combine trade-off moves
-        with the batch *ratio*, not the difference, hence log distance. None
-        if no comparable entry exists (-> heuristic fallback)."""
-        exact = self.lookup(capacity, block_n, batch, layout)
+        entries sharing (capacity, block_n, layout, rescale), the best of the
+        batch nearest in log-space (ties go to the smaller batch — closer to
+        the conservative fewer-splits regime). The split/combine trade-off
+        moves with the batch *ratio*, not the difference, hence log distance.
+        None if no comparable entry exists (-> heuristic fallback)."""
+        exact = self.lookup(capacity, block_n, batch, layout, rescale)
         if exact is not None or batch is None:
             return exact
         candidates: list[tuple[float, int, int]] = []
         for key, entry in self.entries.items():
             parsed = _parse_key(key)
             if parsed is None or parsed[:2] != (capacity, block_n) \
-                    or parsed[3] != layout:
+                    or parsed[3] != layout or parsed[4] != rescale:
                 continue
             b = parsed[2]
             try:
@@ -169,19 +182,22 @@ class SplitProfile:
         return min(candidates)[2]
 
     def lookup_config(self, capacity: int, batch: int | None,
-                      layout: str = "contiguous") -> "SplitConfig | None":
-        """Joint 2D plan: among ALL entries sharing (capacity, layout) — any
-        block_n — pick the (num_splits, block_n) whose recorded best ran
-        fastest. Exact-batch entries win; otherwise the nearest batch in
-        log-space is used (same interpolation rule as ``lookup_nearest``),
-        and only that batch's entries compete. Ties in measured time go to
-        the smaller block_n. None when no comparable entry exists."""
+                      layout: str = "contiguous",
+                      rescale: str = "fma") -> "SplitConfig | None":
+        """Joint 2D plan: among ALL entries sharing (capacity, layout,
+        rescale) — any block_n — pick the (num_splits, block_n) whose
+        recorded best ran fastest. Exact-batch entries win; otherwise the
+        nearest batch in log-space is used (same interpolation rule as
+        ``lookup_nearest``), and only that batch's entries compete. Ties in
+        measured time go to the smaller block_n. None when no comparable
+        entry exists."""
         if batch is None:
             return None
         by_batch: dict[int, list[tuple[float, int, int]]] = {}
         for key, entry in self.entries.items():
             parsed = _parse_key(key)
-            if parsed is None or parsed[0] != capacity or parsed[3] != layout:
+            if parsed is None or parsed[0] != capacity or parsed[3] != layout \
+                    or parsed[4] != rescale:
                 continue
             us = _entry_best_us(entry)
             try:
@@ -205,13 +221,13 @@ class SplitProfile:
 
     def record(self, capacity: int, block_n: int, batch: int,
                measured_us: dict[int, float],
-               layout: str = "contiguous") -> int:
+               layout: str = "contiguous", rescale: str = "fma") -> int:
         """Store one sweep; best = fastest split count, with ties within
         WIN_MARGIN going to the smaller count. Returns the best."""
         if not measured_us:
             raise ValueError("empty sweep")
         best = _pick_best(measured_us)
-        self.entries[_key(capacity, block_n, batch, layout)] = {
+        self.entries[_key(capacity, block_n, batch, layout, rescale)] = {
             "best": int(best),
             "best_us": float(measured_us[best]),
             "measured_us": {str(k): float(v) for k, v in measured_us.items()},
@@ -257,18 +273,24 @@ def reset(profile: SplitProfile | None = None) -> None:
 
 
 def tuned_num_splits(capacity: int, block_n: int, batch: int | None,
-                     layout: str = "contiguous") -> int | None:
-    """Measured best for the shape: exact (capacity, block_n, batch, layout)
-    hit, else nearest-batch interpolation; None -> heuristic fallback."""
-    return get_profile().lookup_nearest(capacity, block_n, batch, layout)
+                     layout: str = "contiguous",
+                     rescale: str = "fma") -> int | None:
+    """Measured best for the shape: exact (capacity, block_n, batch, layout,
+    rescale) hit, else nearest-batch interpolation; None -> heuristic
+    fallback. AMLA plans only come from AMLA-timed sweeps — its combine-free
+    rescaling shifts the split/combine trade-off, so FMA timings never drive
+    it (and an un-swept rescale simply falls back to the heuristic)."""
+    return get_profile().lookup_nearest(capacity, block_n, batch, layout,
+                                        rescale)
 
 
 def tuned_split_config(capacity: int, batch: int | None,
-                       layout: str = "contiguous") -> SplitConfig | None:
+                       layout: str = "contiguous",
+                       rescale: str = "fma") -> SplitConfig | None:
     """Joint measured 2D plan (num_splits, block_n) for the shape — the
     fastest recorded best across every block_n the profile has measured at
-    this (capacity, layout); None -> heuristic fallback."""
-    return get_profile().lookup_config(capacity, batch, layout)
+    this (capacity, layout, rescale); None -> heuristic fallback."""
+    return get_profile().lookup_config(capacity, batch, layout, rescale)
 
 
 # ---------------------------------------------------------------------------
@@ -291,7 +313,7 @@ def measure_split_sweep(capacity: int, block_n: int, batch: int,
                         fmt: str = "fp8_e4m3", fill: float = 0.75,
                         iters: int = 3, profile: SplitProfile | None = None,
                         layout: str = "contiguous", interpret: bool = True,
-                        timer=None) -> dict[int, float]:
+                        rescale: str = "fma", timer=None) -> dict[int, float]:
     """Time the real split-KV kernel over the candidate split counts and
     record the winner into ``profile`` (default: the singleton) under
     ``layout`` ("contiguous" times ``snapmla_decode`` on an MLACache,
@@ -345,17 +367,18 @@ def measure_split_sweep(capacity: int, block_n: int, batch: int,
         if layout == "paged":
             return snapmla_decode_paged(q_c8, q_r, sq, cache,
                                         softmax_scale=scale, fmt=fmt,
-                                        num_splits=s, interpret=interpret)
+                                        num_splits=s, rescale=rescale,
+                                        interpret=interpret)
         return snapmla_decode(q_c8, q_r, sq, cache, softmax_scale=scale,
                               block_n=block_n, fmt=fmt, num_splits=s,
-                              interpret=interpret)
+                              rescale=rescale, interpret=interpret)
 
     measured: dict[int, float] = {}
     for s in candidate_splits(capacity, block_n):
         measured[s] = float(timer(s, lambda: run(s)))
 
     (profile if profile is not None else get_profile()).record(
-        capacity, block_n, batch, measured, layout=layout)
+        capacity, block_n, batch, measured, layout=layout, rescale=rescale)
     return measured
 
 
@@ -405,6 +428,7 @@ def measure_config_sweep(capacity: int, batch: int,
                          profile: SplitProfile | None = None,
                          layout: str = "contiguous",
                          interpret: bool | None = None,
+                         rescale: str = "fma",
                          timer=None) -> dict[tuple[int, int], float]:
     """Joint 2D sweep: run ``measure_split_sweep`` at every candidate
     ``block_n`` so the profile holds one entry per (capacity, block_n,
@@ -428,7 +452,7 @@ def measure_config_sweep(capacity: int, batch: int,
         sweep = measure_split_sweep(
             capacity, bn, batch, d_c=d_c, d_r=d_r, heads=heads, fmt=fmt,
             fill=fill, iters=iters, profile=profile, layout=layout,
-            interpret=interpret, timer=bn_timer)
+            interpret=interpret, rescale=rescale, timer=bn_timer)
         for s, us in sweep.items():
             measured[(bn, s)] = us
     return measured

@@ -47,11 +47,20 @@ from repro.kernels.mla_decode import ref as _ref
 
 
 class DecodeQuery(NamedTuple):
-    """Prepared decode query (post Fused-Q-Quant / ``ref.prepare_q``)."""
+    """Prepared decode query (post Fused-Q-Quant / ``ref.prepare_q``).
 
-    q_c8: jax.Array      # [B, H, d_c] quantized content query (storage dtype)
-    q_r: jax.Array       # [B, H, d_r] rope query, pre-divided by sigma_q
-    sigma_q: jax.Array   # [B, H] per-(token, head) content scale
+    Rank-3 ``[B, H, ...]`` is the one-token decode shape; rank-4
+    ``[B, q_len, H, ...]`` is the speculative-verify block (the q_len query
+    rows are the LAST q_len positions of each sequence, causally masked) —
+    kernel and ref backends accept both, shard_map rejects q_len > 1."""
+
+    q_c8: jax.Array      # [B, (q_len,) H, d_c] quantized content query
+    q_r: jax.Array       # [B, (q_len,) H, d_r] rope query, / sigma_q
+    sigma_q: jax.Array   # [B, (q_len,) H] per-(token, head) content scale
+
+    @property
+    def q_len(self) -> int:
+        return self.q_c8.shape[1] if self.q_c8.ndim == 4 else 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +91,8 @@ def _split_plan(cfg: BackendConfig, capacity: int, batch: int,
     """The one place every backend resolves its (num_splits, block_n) plan."""
     return _ops.resolve_split_config(
         cfg.num_splits, cfg.block_n if layout == "contiguous" else None,
-        capacity, batch=batch, layout=layout, page_size=page_size)
+        capacity, batch=batch, layout=layout, page_size=page_size,
+        rescale=cfg.rescale)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,14 +148,14 @@ def _layout_ok(layout: str, paged: bool) -> tuple[bool, str]:
 
 def _supports_ref(layout):
     def supports(cfg=None, mesh=None, batch=None, *, paged=False,
-                 n_heads=None, dp=None):
+                 n_heads=None, dp=None, q_len=None):
         return _layout_ok(layout, paged)
     return supports
 
 
 def _supports_kernel(layout):
     def supports(cfg=None, mesh=None, batch=None, *, paged=False,
-                 n_heads=None, dp=None):
+                 n_heads=None, dp=None, q_len=None):
         ok, why = _layout_ok(layout, paged)
         if not ok:
             return ok, why
@@ -158,10 +168,14 @@ def _supports_kernel(layout):
 
 
 def _supports_shard_map(cfg=None, mesh=None, batch=None, *, paged=False,
-                        n_heads=None, dp=None):
+                        n_heads=None, dp=None, q_len=None):
     ok, why = _layout_ok("contiguous", paged)
     if not ok:
         return ok, why
+    if q_len is not None and q_len > 1:
+        return False, ("the shard_map region computes one query token per "
+                       f"slot; q_len={q_len} verify blocks need the kernel "
+                       "or jnp_ref backends")
     if mesh is None:
         return False, "requires a device mesh (SHARD_CTX / dryrun variants)"
     from repro.core.distributed_decode import shard_map_applicable
@@ -226,6 +240,9 @@ def _pallas_paged_decode(q: DecodeQuery, pool: PagedMLAPool,
 
 def _shard_map_decode(q: DecodeQuery, cache: MLACache, cfg: BackendConfig,
                       ctx: Any = None) -> jax.Array:
+    if q.q_c8.ndim == 4:
+        raise ValueError("shard_map backend does not take q_len > 1 verify "
+                         "blocks; resolve with q_len to route elsewhere")
     if not ctx or ctx.get("mesh") is None:
         raise ValueError("shard_map backend needs ctx={'mesh': ..., 'dp': ...}")
     from repro.core.distributed_decode import mla_decode_shard_map
@@ -325,7 +342,8 @@ def resolve_backend(request: str = "auto", *, paged: bool = False,
                     batch: int | None = None, n_heads: int | None = None,
                     mesh=None, dp=None, use_kernels: bool = False,
                     prefer_shard_map: bool = False,
-                    cfg: BackendConfig | None = None) -> DecodeBackend:
+                    cfg: BackendConfig | None = None,
+                    q_len: int | None = None) -> DecodeBackend:
     """Pick the decode backend. Static (trace-time) decision.
 
     ``request`` is ``serve --backend``'s vocabulary — "auto", "ref",
@@ -335,9 +353,12 @@ def resolve_backend(request: str = "auto", *, paged: bool = False,
     and no multi-device pjit mesh is in the way), else the jnp pjit twin —
     auto never fails, it degrades to the reference path. An explicit request
     whose ``supports`` predicate rejects the configuration raises at trace
-    time with the reason.
+    time with the reason. ``q_len`` > 1 (the speculative-verify block shape)
+    routes away from backends that only take one query token per slot
+    (shard_map) — under "auto" it silently degrades, an explicit request
+    raises.
     """
-    kw = dict(paged=paged, n_heads=n_heads, dp=dp)
+    kw = dict(paged=paged, n_heads=n_heads, dp=dp, q_len=q_len)
     if request in (None, "", "auto"):
         if prefer_shard_map:
             sm = get_backend("shard_map")

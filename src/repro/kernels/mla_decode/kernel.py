@@ -44,6 +44,15 @@ Split-KV (flash-decoding) variant — ``mla_decode_splitkv_pallas``:
   the compute. HBM traffic therefore scales with ``seq_lens``, not with the
   padded cache capacity.
 
+  q_len > 1 (the speculative-verify shape): both split-KV wrappers accept a
+  rank-4 ``[B, q_len, H, ...]`` query block — the q_len rows are the LAST
+  q_len positions of each sequence, flattened head-major into ``q_len * H``
+  kernel rows (each row carries its own online-softmax state, so the body is
+  unchanged except for a per-row causal limit ``seq_len - (q_len-1) + t`` in
+  place of the scalar and the dead-row neutrality guard in
+  ``_block_pipeline``). q_len = 1 passes the scalar limit exactly as before
+  — bit-identical to the PR 8 kernel by literal trace identity.
+
 Paged split-KV — ``mla_decode_paged_splitkv_pallas``: the same split grid and
   per-split partial/combine layout over a page pool; the scalar-prefetched
   page table only relocates each block's DMA source, so the contiguous and
@@ -95,12 +104,18 @@ def _quantize_block(p_fused, fmt: str, qmax: float):
 def _block_pipeline(qc, qr, sq, c, r, sk, tok0, seq_len,
                     m_ref, l_ref, sp_ref, acc_ref, *,
                     softmax_scale: float, fmt: str, qmax: float,
-                    rescale: str = "fma"):
+                    rescale: str = "fma", row_guard: bool = False):
     """One KV block of the scale-fused FP8 pipeline (steps 1-5 of §3.2.3).
 
     Shared verbatim between the single-pass, split-KV, and paged kernels so
     their per-block arithmetic is bit-identical. ``tok0`` is the absolute
     token index of the block's first entry; state is carried in VMEM scratch.
+
+    ``seq_len`` is either a scalar (every query row sees the same KV prefix —
+    the decode case) or a ``[rows, 1]`` per-row limit (the ``q_len > 1``
+    verify case, where row ``t`` of the causally-masked query block attends
+    only tokens ``< seq_len - (q_len - 1) + t``); it broadcasts against the
+    ``[rows, block_n]`` token grid either way, so the masking site is shared.
 
     ``rescale`` selects the cross-block accumulator rescale:
 
@@ -111,6 +126,16 @@ def _block_pipeline(qc, qr, sq, c, r, sk, tok0, seq_len,
         so every rescale factor is an exact ``2^k`` applied via an integer
         add on the accumulator exponent bits (``amla.exp2_mul``) — no exp,
         no FMA on the [H, d_c] accumulator.
+
+    ``row_guard`` (the q_len > 1 paths only): a row that is fully masked in a
+    live block must leave its carried state EXACTLY unchanged. Without the
+    guard such a row would still rescale by ``sp_prev / sp_new`` with
+    ``sp_new`` floored at ``EPS / qmax`` — mathematically a no-op (it cancels
+    in o = acc / l) but numerically an overflow hazard and a bit-identity
+    breaker vs the q_len = 1 kernel. The guard pins ``sp_new`` (FMA) /
+    ``e_new`` (AMLA) to the carried value on dead rows, making the rescale
+    factor exactly 1 (FMA) / exactly ``2^0`` (AMLA) and every additive
+    contribution exactly 0.
     """
     # --- Key Step 1: uniform QK + single rescale -------------------------
     s = jax.lax.dot_general(qc, c, (((1,), (1,)), ((), ())),
@@ -122,6 +147,7 @@ def _block_pipeline(qc, qr, sq, c, r, sk, tok0, seq_len,
     tok = tok0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     valid = tok < seq_len
     s = jnp.where(valid, s, NEG_INF)
+    row_live = jnp.any(valid, axis=-1) if row_guard else None
 
     if rescale == "amla":
         i_prev, l_prev, e_prev = m_ref[...], l_ref[...], sp_ref[...]
@@ -132,6 +158,8 @@ def _block_pipeline(qc, qr, sq, c, r, sk, tok0, seq_len,
         e = jnp.where(valid, e, 0.0)
         p_fused = e * sk[None, :]
         p8, e_new = amla.quantize_block_pow2(p_fused, fmt, qmax)
+        if row_guard:
+            e_new = jnp.where(row_live, e_new, e_prev)
         # corr = 2^k with k = (i_prev - i_new) + (e_prev - e_new): a pure
         # integer exponent add on the accumulator (l_prev == 0 -> no state
         # yet, k pinned to 0 so the sentinel i_prev never reaches int32)
@@ -157,6 +185,8 @@ def _block_pipeline(qc, qr, sq, c, r, sk, tok0, seq_len,
     # --- Key Step 2: scale fusion + block-wise dynamic P quantization -----
     p_fused = e * sk[None, :]
     p8, sp_new = _quantize_block(p_fused, fmt, qmax)
+    if row_guard:
+        sp_new = jnp.where(row_live, sp_new, sp_prev)
 
     # --- implicit dequantization (Eqs. 12-13) ------------------------------
     corr = jnp.exp(m_prev - m_new) * (sp_prev / sp_new)            # [H]
@@ -303,19 +333,19 @@ def _mla_decode_splitkv_kernel(
     # scalar prefetch
     seq_lens_ref,           # [B] int32
     # inputs (VMEM blocks)
-    q_c_ref,                # [1, H, d_c]
-    q_r_ref,                # [1, H, d_r]
-    sigma_q_ref,            # [1, H]
+    q_c_ref,                # [1, R, d_c]   R = q_len * H query rows
+    q_r_ref,                # [1, R, d_r]
+    sigma_q_ref,            # [1, R]
     content_ref,            # [1, bn, d_c]
     rope_ref,               # [1, bn, d_r]
     sigma_k_ref,            # [1, bn]
     # outputs (per-split partials)
-    o_ref,                  # [1, 1, H, d_c] f32
-    lse_ref,                # [1, 1, H]      f32 (scale-carrying LSE)
-    sp_ref_out,             # [1, 1, H]      f32 (final per-split sigma_p)
+    o_ref,                  # [1, 1, R, d_c] f32
+    lse_ref,                # [1, 1, R]      f32 (scale-carrying LSE)
+    sp_ref_out,             # [1, 1, R]      f32 (final per-split sigma_p)
     # scratch
-    m_ref, l_ref, sp_ref,   # [H]
-    acc_ref,                # [H, d_c]
+    m_ref, l_ref, sp_ref,   # [R]
+    acc_ref,                # [R, d_c]
     *,
     softmax_scale: float,
     block_n: int,
@@ -323,6 +353,8 @@ def _mla_decode_splitkv_kernel(
     fmt: str,
     qmax: float,
     rescale: str = "fma",
+    q_len: int = 1,
+    heads: int | None = None,
 ):
     b = pl.program_id(0)
     s_id = pl.program_id(1)
@@ -346,10 +378,25 @@ def _mla_decode_splitkv_kernel(
         c = content_ref[0].astype(jnp.float32)
         r = rope_ref[0].astype(jnp.float32)
         sk = sigma_k_ref[0].astype(jnp.float32)
-        _block_pipeline(qc, qr, sq, c, r, sk, g * block_n, seq_lens_ref[b],
+        if q_len == 1:
+            # the decode fast path: a SCALAR limit, no row guard — the trace
+            # (and hence the emitted kernel) is literally the PR 8 kernel's,
+            # so q_len = 1 through this body is bit-identical to it.
+            limit = seq_lens_ref[b]
+        else:
+            # causal intra-block mask: the q_len query rows are the LAST
+            # q_len positions of the sequence, head-major within a position
+            # (row = t * heads + h), so row t's KV prefix ends at
+            # seq_len - (q_len - 1) + t. Rows whose limit is <= 0 (idle
+            # slots, over-drafted tails) stay on their neutral init state
+            # via the row guard and publish the empty-split partial.
+            t = jax.lax.broadcasted_iota(
+                jnp.int32, (q_len * heads, 1), 0) // heads
+            limit = seq_lens_ref[b] - (q_len - 1) + t
+        _block_pipeline(qc, qr, sq, c, r, sk, g * block_n, limit,
                         m_ref, l_ref, sp_ref, acc_ref,
                         softmax_scale=softmax_scale, fmt=fmt, qmax=qmax,
-                        rescale=rescale)
+                        rescale=rescale, row_guard=q_len > 1)
 
     @pl.when(j == blocks_per_split - 1)
     def _finalize():
@@ -435,10 +482,41 @@ def _splitkv_partials_call(
     )(*operands)
 
 
+def _flatten_q(q_c8, q_r, sigma_q):
+    """[B, q_len, H, ...] query block -> head-major rows [B, q_len*H, ...].
+
+    The kernel bodies treat the row axis exactly like the head axis (every
+    row has independent online-softmax state), so a q_len > 1 query block is
+    just "more heads" plus a per-row causal limit. Rank-3 queries pass
+    through untouched (q_len = None marks the rank-3 no-op so rank-4 inputs
+    — even with q_len == 1 — come back rank-4)."""
+    if q_c8.ndim == 3:
+        return q_c8, q_r, sigma_q, None, q_c8.shape[1]
+    B, q_len, H = q_c8.shape[:3]
+    return (q_c8.reshape(B, q_len * H, -1), q_r.reshape(B, q_len * H, -1),
+            sigma_q.reshape(B, q_len * H), q_len, H)
+
+
+def _unflatten_rows(q_len, H, o, lse, partials):
+    """Undo ``_flatten_q`` on the outputs: rows -> [q_len, H] axes."""
+    if q_len is None:
+        return o, lse, partials
+    B = o.shape[0]
+    o = o.reshape(B, q_len, H, -1)
+    lse = lse.reshape(B, q_len, H)
+    if partials is not None:
+        o_p, lse_p, sp_p = partials
+        S = o_p.shape[1]
+        partials = (o_p.reshape(B, S, q_len, H, -1),
+                    lse_p.reshape(B, S, q_len, H),
+                    sp_p.reshape(B, S, q_len, H))
+    return o, lse, partials
+
+
 def mla_decode_splitkv_pallas(
-    q_c8: jax.Array,        # [B, H, d_c] storage dtype
-    q_r: jax.Array,         # [B, H, d_r] f32 (pre-divided by sigma_q)
-    sigma_q: jax.Array,     # [B, H] f32
+    q_c8: jax.Array,        # [B, H, d_c] or [B, q_len, H, d_c] storage dtype
+    q_r: jax.Array,         # [..., d_r] f32 (pre-divided by sigma_q)
+    sigma_q: jax.Array,     # [B, H] or [B, q_len, H] f32
     content: jax.Array,     # [B, N, d_c]
     rope: jax.Array,        # [B, N, d_r]
     sigma_k: jax.Array,     # [B, N] f32
@@ -461,8 +539,15 @@ def mla_decode_splitkv_pallas(
     unnormalized partials) merges them. Returns (o [B,H,d_c] f32,
     lse [B,H]) — plus the raw partials when ``return_partials`` (for
     oracles/telemetry).
+
+    A rank-4 ``[B, q_len, H, ...]`` query block runs the q_len > 1 verify
+    path: rows are the LAST q_len positions of each sequence under a causal
+    intra-block mask (row t attends tokens < seq_lens - (q_len-1) + t), and
+    outputs/partials come back with the extra q_len axis
+    (o [B,q_len,H,d_c], lse [B,q_len,H], partials [B,S,q_len,H,...]).
     """
-    B, H, d_c = q_c8.shape
+    q_c8, q_r, sigma_q, q_len, H = _flatten_q(q_c8, q_r, sigma_q)
+    B, R, d_c = q_c8.shape
     d_r = q_r.shape[-1]
     N = content.shape[1]
     assert N % block_n == 0, (N, block_n)
@@ -474,7 +559,7 @@ def mla_decode_splitkv_pallas(
     kernel = functools.partial(
         _mla_decode_splitkv_kernel, softmax_scale=softmax_scale,
         block_n=block_n, blocks_per_split=blocks_per_split, fmt=fmt,
-        qmax=qmax, rescale=rescale)
+        qmax=qmax, rescale=rescale, q_len=q_len or 1, heads=H)
 
     def kv_idx(b, s, j, sl):
         return (b, _clamped_block_index(sl, b, s, j, blocks_per_split, block_n), 0)
@@ -486,15 +571,15 @@ def mla_decode_splitkv_pallas(
         kernel,
         grid=(B, num_splits, blocks_per_split),
         in_specs=[
-            pl.BlockSpec((1, H, d_c), lambda b, s, j, sl: (b, 0, 0)),
-            pl.BlockSpec((1, H, d_r), lambda b, s, j, sl: (b, 0, 0)),
-            pl.BlockSpec((1, H), lambda b, s, j, sl: (b, 0)),
+            pl.BlockSpec((1, R, d_c), lambda b, s, j, sl: (b, 0, 0)),
+            pl.BlockSpec((1, R, d_r), lambda b, s, j, sl: (b, 0, 0)),
+            pl.BlockSpec((1, R), lambda b, s, j, sl: (b, 0)),
             pl.BlockSpec((1, block_n, d_c), kv_idx),
             pl.BlockSpec((1, block_n, d_r), kv_idx),
             pl.BlockSpec((1, block_n), sk_idx),
         ],
         num_scalar_prefetch=1,
-        B=B, num_splits=num_splits, H=H, d_c=d_c, interpret=interpret,
+        B=B, num_splits=num_splits, H=R, d_c=d_c, interpret=interpret,
         operands=(seq_lens, q_c8, q_r, sigma_q, content, rope, sigma_k),
     )
 
@@ -502,8 +587,9 @@ def mla_decode_splitkv_pallas(
         o, lse = amla_combine_pallas(o_p, lse_p, sp_p, interpret=interpret)
     else:
         o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
+    o, lse, partials = _unflatten_rows(q_len, H, o, lse, (o_p, lse_p, sp_p))
     if return_partials:
-        return o, lse, (o_p, lse_p, sp_p)
+        return o, lse, partials
     return o, lse
 
 
@@ -706,9 +792,9 @@ def _clamped_page_id(seq_lens_ref, page_table_ref, b, s_id, j,
 
 
 def mla_decode_paged_splitkv_pallas(
-    q_c8: jax.Array,          # [B, H, d_c] storage dtype
-    q_r: jax.Array,           # [B, H, d_r] f32 (pre-divided by sigma_q)
-    sigma_q: jax.Array,       # [B, H] f32
+    q_c8: jax.Array,          # [B, H, d_c] or [B, q_len, H, d_c] storage dtype
+    q_r: jax.Array,           # [..., d_r] f32 (pre-divided by sigma_q)
+    sigma_q: jax.Array,       # [B, H] or [B, q_len, H] f32
     content_pool: jax.Array,  # [n_pages, page, d_c]
     rope_pool: jax.Array,     # [n_pages, page, d_r]
     scale_pool: jax.Array,    # [n_pages, page]
@@ -733,8 +819,13 @@ def mla_decode_paged_splitkv_pallas(
     ``lse_combine_pallas``. HBM traffic scales with ``seq_lens``, not with
     pool capacity. Returns (o [B,H,d_c] f32, lse [B,H]); plus raw partials
     when ``return_partials``.
+
+    Rank-4 ``[B, q_len, H, ...]`` queries run the q_len > 1 verify path with
+    the causal intra-block mask, exactly as in ``mla_decode_splitkv_pallas``
+    (the paged body IS the contiguous body), and return the extra q_len axis.
     """
-    B, H, d_c = q_c8.shape
+    q_c8, q_r, sigma_q, q_len, H = _flatten_q(q_c8, q_r, sigma_q)
+    B, R, d_c = q_c8.shape
     d_r = q_r.shape[-1]
     page = content_pool.shape[1]
     P = page_table.shape[1]
@@ -744,7 +835,8 @@ def mla_decode_paged_splitkv_pallas(
 
     kernel = functools.partial(
         _paged_splitkv_body, softmax_scale=softmax_scale, block_n=page,
-        blocks_per_split=pages_per_split, fmt=fmt, qmax=qmax, rescale=rescale)
+        blocks_per_split=pages_per_split, fmt=fmt, qmax=qmax, rescale=rescale,
+        q_len=q_len or 1, heads=H)
 
     def kv_idx(b, s, j, sl, pt):
         return (_clamped_page_id(sl, pt, b, s, j, pages_per_split, page), 0, 0)
@@ -756,15 +848,15 @@ def mla_decode_paged_splitkv_pallas(
         kernel,
         grid=(B, num_splits, pages_per_split),
         in_specs=[
-            pl.BlockSpec((1, H, d_c), lambda b, s, j, sl, pt: (b, 0, 0)),
-            pl.BlockSpec((1, H, d_r), lambda b, s, j, sl, pt: (b, 0, 0)),
-            pl.BlockSpec((1, H), lambda b, s, j, sl, pt: (b, 0)),
+            pl.BlockSpec((1, R, d_c), lambda b, s, j, sl, pt: (b, 0, 0)),
+            pl.BlockSpec((1, R, d_r), lambda b, s, j, sl, pt: (b, 0, 0)),
+            pl.BlockSpec((1, R), lambda b, s, j, sl, pt: (b, 0)),
             pl.BlockSpec((1, page, d_c), kv_idx),
             pl.BlockSpec((1, page, d_r), kv_idx),
             pl.BlockSpec((1, page), sk_idx),
         ],
         num_scalar_prefetch=2,      # seq_lens, page_table
-        B=B, num_splits=num_splits, H=H, d_c=d_c, interpret=interpret,
+        B=B, num_splits=num_splits, H=R, d_c=d_c, interpret=interpret,
         operands=(seq_lens, page_table, q_c8, q_r, sigma_q,
                   content_pool, rope_pool, scale_pool),
     )
@@ -773,6 +865,7 @@ def mla_decode_paged_splitkv_pallas(
         o, lse = amla_combine_pallas(o_p, lse_p, sp_p, interpret=interpret)
     else:
         o, lse = lse_combine_pallas(o_p, lse_p, interpret=interpret)
+    o, lse, partials = _unflatten_rows(q_len, H, o, lse, (o_p, lse_p, sp_p))
     if return_partials:
-        return o, lse, (o_p, lse_p, sp_p)
+        return o, lse, partials
     return o, lse

@@ -60,19 +60,23 @@ def default_num_splits(context_len: int, block_n: int = 128,
 
 def resolve_num_splits(requested: int | None, capacity: int,
                        block_n: int, batch: int | None = None,
-                       layout: str = "contiguous") -> int:
+                       layout: str = "contiguous",
+                       rescale: str = "fma") -> int:
     """Single resolution rule for every decode backend (kernel, pjit ref,
     shard_map ref, paged pool): None/0 = auto — a measured split-profile hit
-    for (capacity, block_n, batch) under the cache ``layout`` if the
-    autotuner cache has one (exact key, else nearest-batch interpolation),
-    else the context-length heuristic. Fixed counts are clamped to the block
-    count so a config tuned for long contexts still traces on a short
-    cache."""
+    for (capacity, block_n, batch) under the cache ``layout`` and the
+    kernel's ``rescale`` mode if the autotuner cache has one (exact key,
+    else nearest-batch interpolation), else the context-length heuristic.
+    AMLA plans come only from AMLA-timed sweeps; an un-swept rescale falls
+    back to the heuristic rather than borrowing FMA timings. Fixed counts
+    are clamped to the block count so a config tuned for long contexts still
+    traces on a short cache."""
     nblocks = max(1, capacity // block_n)
     if requested:
         splits = requested
     else:
-        splits = _autotune.tuned_num_splits(capacity, block_n, batch, layout)
+        splits = _autotune.tuned_num_splits(capacity, block_n, batch, layout,
+                                            rescale)
         if splits is None:
             splits = default_num_splits(capacity, block_n)
     return max(1, min(splits, nblocks))
@@ -81,7 +85,8 @@ def resolve_num_splits(requested: int | None, capacity: int,
 def resolve_split_config(num_splits: int | None, block_n: int | None,
                          capacity: int, *, batch: int | None = None,
                          layout: str = "contiguous",
-                         page_size: int | None = None) -> SplitConfig:
+                         page_size: int | None = None,
+                         rescale: str = "fma") -> SplitConfig:
     """Joint (num_splits, block_n) resolution — the 2D generalization of
     ``resolve_num_splits`` (which stays as the fixed-block_n rule every
     resolved plan funnels through).
@@ -106,12 +111,13 @@ def resolve_split_config(num_splits: int | None, block_n: int | None,
                 f"got block_n={block_n} — repage the pool instead")
         return SplitConfig(
             resolve_num_splits(num_splits, capacity, page_size, batch,
-                               layout), page_size)
+                               layout, rescale), page_size)
     if block_n:
         return SplitConfig(
-            resolve_num_splits(num_splits, capacity, block_n, batch, layout),
+            resolve_num_splits(num_splits, capacity, block_n, batch, layout,
+                               rescale),
             block_n)
-    tuned = _autotune.tuned_split_config(capacity, batch, layout)
+    tuned = _autotune.tuned_split_config(capacity, batch, layout, rescale)
     if tuned is not None and capacity % tuned.block_n == 0:
         nblocks = max(1, capacity // tuned.block_n)
         splits = num_splits if num_splits else tuned.num_splits
@@ -119,7 +125,8 @@ def resolve_split_config(num_splits: int | None, block_n: int | None,
     bn = DEFAULT_BLOCK_N if capacity % DEFAULT_BLOCK_N == 0 \
         else max(b for b in (64, 32, 16, 8, 4, 2, 1) if capacity % b == 0)
     return SplitConfig(
-        resolve_num_splits(num_splits, capacity, bn, batch, layout), bn)
+        resolve_num_splits(num_splits, capacity, bn, batch, layout, rescale),
+        bn)
 
 
 def _check_alignment(n: int, block_n: int) -> None:
@@ -154,7 +161,8 @@ def snapmla_decode(
     the plan at their trace time, as any static argument is.)"""
     N = cache.content.shape[1]
     _check_alignment(N, block_n)
-    splits = resolve_num_splits(num_splits, N, block_n, batch=q_c8.shape[0])
+    splits = resolve_num_splits(num_splits, N, block_n, batch=q_c8.shape[0],
+                                rescale=rescale)
     return _snapmla_decode_impl(
         q_c8, q_r, sigma_q, cache, softmax_scale=softmax_scale,
         block_n=block_n, fmt=fmt, num_splits=splits, use_kernel=use_kernel,
@@ -185,7 +193,9 @@ def _snapmla_decode_impl(
             sink_patched_content(cache),
             cache.rope.astype(jnp.float32), cache.scale, cache.seq_lens)
     if use_kernel:
-        if splits == 1:
+        # rank-4 (q_len > 1 verify) queries always take the split-KV kernel —
+        # it carries the per-row causal limit; num_splits = 1 is one split.
+        if splits == 1 and q_c8.ndim == 3:
             return _k.mla_decode_pallas(
                 *args, softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
                 interpret=interpret, rescale=rescale)
@@ -232,7 +242,8 @@ def snapmla_decode_paged(
     page = pool.content.shape[1]
     capacity = pool.page_table.shape[1] * page
     splits = resolve_num_splits(num_splits, capacity, page,
-                                batch=q_c8.shape[0], layout="paged")
+                                batch=q_c8.shape[0], layout="paged",
+                                rescale=rescale)
     return _snapmla_decode_paged_impl(
         q_c8, q_r, sigma_q, pool, softmax_scale=softmax_scale, fmt=fmt,
         num_splits=splits, use_kernel=use_kernel, interpret=interpret,
@@ -259,7 +270,8 @@ def _snapmla_decode_paged_impl(
             pool.content, pool.rope.astype(jnp.float32), pool.scale,
             pool.page_table, pool.seq_lens)
     if use_kernel:
-        if splits == 1:
+        # rank-4 (q_len > 1 verify) queries always take the split-KV kernel
+        if splits == 1 and q_c8.ndim == 3:
             return _k.mla_decode_paged_pallas(
                 *args, softmax_scale=softmax_scale, fmt=fmt,
                 interpret=interpret, rescale=rescale)

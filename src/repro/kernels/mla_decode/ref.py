@@ -27,6 +27,37 @@ from repro.kernels.mla_decode import amla
 NEG_INF = -1e30
 
 
+def _verify_rows(decode_row, q_c8, q_r, sigma_q, seq_lens, *,
+                 stack_axis: int = 1, partial_axis: int = 2):
+    """q_len > 1 oracle scaffolding: run a q_len = 1 oracle once per query
+    row under the causal verify contract — the q_len rows are the LAST q_len
+    positions of the sequence, so row ``t`` decodes at
+    ``seq_lens - (q_len - 1) + t`` — and stack the per-row results.
+
+    This is EXACT (not merely within tolerance): each row's online-softmax /
+    sigma_p history through the generalized kernel is independent of every
+    other row's, so the q_len > 1 kernel computes literally q_len interleaved
+    copies of the q_len = 1 pipeline. Rows whose limit is <= 0 come back NaN
+    from the oracles (all-masked softmax) where the kernel publishes the
+    neutral 0 — callers that can see such rows (idle slots, over-drafted
+    tails) discard them either way.
+
+    ``decode_row(q_c8_t, q_r_t, sigma_q_t, seq_lens_t) -> tuple of arrays``;
+    outputs are stacked at ``stack_axis`` except a trailing partials tuple
+    (detected as a tuple) whose members stack at ``partial_axis``."""
+    q_len = q_c8.shape[1]
+    per_row = [decode_row(q_c8[:, t], q_r[:, t], sigma_q[:, t],
+                          seq_lens - (q_len - 1 - t)) for t in range(q_len)]
+    out = []
+    for parts in zip(*per_row):
+        if isinstance(parts[0], tuple):
+            out.append(tuple(jnp.stack(ps, axis=partial_axis)
+                             for ps in zip(*parts)))
+        else:
+            out.append(jnp.stack(parts, axis=stack_axis))
+    return tuple(out)
+
+
 def snapmla_decode_pipeline_ref(
     q_c8: jax.Array,       # [B, H, d_c] quantized content query (storage dtype)
     q_r: jax.Array,        # [B, H, d_r] rope query, PRE-DIVIDED by sigma_q
@@ -59,7 +90,22 @@ def snapmla_decode_pipeline_ref(
     applied through ``amla.exp2_mul`` — the SAME helper the kernel uses, so
     kernel-vs-ref parity holds like in FMA mode. ``return_raw`` (AMLA only)
     returns the unnormalized (acc, l~, g = i + e) the combine-free split
-    emission publishes."""
+    emission publishes.
+
+    A rank-4 ``[B, q_len, H, ...]`` query block runs the verify contract (the
+    q_len rows are the last q_len positions; row t decodes at
+    ``seq_lens - (q_len-1) + t``) one row at a time — exact, because each
+    row's pipeline state is independent."""
+    if q_c8.ndim == 4:
+        assert not (return_sigma_p or return_raw), \
+            "q_len > 1 oracles return (o, lse) only"
+        return _verify_rows(
+            lambda qc, qr, sq, sl: snapmla_decode_pipeline_ref(
+                qc, qr, sq, content, rope, sigma_k, sl,
+                softmax_scale=softmax_scale, block_n=block_n, fmt=fmt,
+                p_quant=p_quant, skip_dead_blocks=skip_dead_blocks,
+                rescale=rescale),
+            q_c8, q_r, sigma_q, seq_lens)
     B, H, d_c = q_c8.shape
     N = content.shape[1]
     assert N % block_n == 0, (N, block_n)
@@ -251,7 +297,19 @@ def snapmla_decode_splitkv_ref(
     is exact for fmt == "none").
 
     ``rescale="amla"`` uses the combine-free merge: splits publish raw
-    (acc, l~, g) and ``amla_combine_ref`` aligns on the 2^k grid."""
+    (acc, l~, g) and ``amla_combine_ref`` aligns on the 2^k grid.
+
+    Rank-4 queries run per-row under the verify contract (see
+    ``_verify_rows``) — exact, with partials stacked to [B, S, q_len, H, ...]
+    matching the generalized kernel's layout."""
+    if q_c8.ndim == 4:
+        return _verify_rows(
+            lambda qc, qr, sq, sl: snapmla_decode_splitkv_ref(
+                qc, qr, sq, content, rope, sigma_k, sl,
+                softmax_scale=softmax_scale, num_splits=num_splits,
+                block_n=block_n, fmt=fmt, return_partials=return_partials,
+                rescale=rescale),
+            q_c8, q_r, sigma_q, seq_lens)
     if rescale == "amla":
         def one_split(c, r, sk, local_len):
             return snapmla_decode_pipeline_ref(
@@ -446,7 +504,17 @@ def snapmla_decode_parallel_any(
     The single entry point for the pjit-twin decode paths (the ``jnp_ref``
     backends and the shard_map local region): ``num_splits == 1`` is the plain
     two-pass flash form, ``> 1`` the split-KV form with the LSE combine —
-    callers no longer duplicate that branch."""
+    callers no longer duplicate that branch. Rank-4 queries run per-row under
+    the verify contract (row t of the last-q_len block decodes at
+    ``seq_lens - (q_len-1) + t``) — the jnp verify twin of the generalized
+    split-KV kernels."""
+    if q_c8.ndim == 4:
+        return _verify_rows(
+            lambda qc, qr, sq, sl: snapmla_decode_parallel_any(
+                qc, qr, sq, content, rope, sigma_k, sl,
+                softmax_scale=softmax_scale, num_splits=num_splits,
+                block_n=block_n, fmt=fmt),
+            q_c8, q_r, sigma_q, seq_lens)
     if num_splits > 1:
         return snapmla_decode_splitkv_parallel_ref(
             q_c8, q_r, sigma_q, content, rope, sigma_k, seq_lens,

@@ -247,6 +247,38 @@ def paged_chunked_prefill_attention(
     return o
 
 
+def paged_verify_attention(
+    q_lat: jax.Array,        # [B, K, H, d_c] absorbed queries for the drafts
+    q_rope: jax.Array,       # [B, K, H, d_r]
+    pool: PagedMLAPool,      # quantized prefix pages
+    draft_c_kv: jax.Array,   # [B, K, d_c] drafted-suffix latents (full prec.)
+    draft_k_r: jax.Array,    # [B, K, d_r] drafted-suffix rope keys (RoPE'd)
+    start: jax.Array,        # [B] absolute position of the first draft entry
+    *,
+    softmax_scale: float,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Speculative-verify attention: [FP8 prefix] + [drafted suffix], one
+    softmax.
+
+    The verify step IS the chunked-prefill shape with the drafted K-token
+    block in the chunk's seat: the committed prefix streams back through the
+    bounded ``paged_fetch_dequant_pallas`` path (fetch traffic ∝
+    ``ceil(start/page)`` pages, FP8-width), the drafts' own keys participate
+    at full precision, and the causal mask within the block is the verify
+    kernel's intra-block mask. Mixed-precision twin of running the drafts
+    through the q_len > 1 split-KV kernel after ``paged_mla_prefill_at`` —
+    they differ only by the suffix's P-quantization rounding, which is what
+    the within-tolerance verify parity gates pin. Returns o_latent
+    [B, K, H, d_c] (f32)."""
+    valid = jnp.ones(draft_c_kv.shape[:2], bool)
+    return paged_chunked_prefill_attention(
+        q_lat, q_rope, pool, draft_c_kv, draft_k_r, start, valid,
+        softmax_scale=softmax_scale, use_kernel=use_kernel,
+        interpret=interpret)
+
+
 def chunked_prefill_attention(
     q_lat: jax.Array,        # [B, C, H, d_c] absorbed queries for the chunk
     q_rope: jax.Array,       # [B, C, H, d_r]

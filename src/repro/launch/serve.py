@@ -256,7 +256,8 @@ def run_engine(cfg, params, args) -> None:
         max_queue=args.max_queue,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         eos_id=args.eos_id, seed=args.seed,
-        quant_health_every=args.quant_health_every)
+        quant_health_every=args.quant_health_every,
+        spec_draft_len=args.spec_draft)
     plan = FaultPlan.parse(args.inject) if args.inject else None
     reqs = [Request(rid=i, prompt=p, max_new=args.gen,
                     arrival=float(i * args.arrival_gap),
@@ -335,6 +336,16 @@ def run_engine(cfg, params, args) -> None:
             completed=n_done, total=len(results),
             **{k: v for k, v in f.items() if k != "injected"},
             injected=len(f["injected"]))
+    sp = m["speculative"]
+    if sp["enabled"]:
+        log("spec_decode",
+            f"[serve] speculative: draft_len={sp['draft_len']}, "
+            f"{sp['verify_steps']} verify steps, "
+            f"drafted {sp['drafted_tokens']} / accepted "
+            f"{sp['accepted_tokens']} "
+            f"(accept rate {sp['accept_rate']:.3f}), "
+            f"{sp['accepted_tokens_per_step']:.3f} tokens/slot-step",
+            **{k: v for k, v in sp.items()})
     pc = m["prefix_cache"]
     if pc["budget_pages"] or pc["host_tier_pages"]:
         log("prefix_cache",
@@ -528,6 +539,16 @@ def main():
                          "across every request (the shared-system-prompt "
                          "traffic the prefix cache serves; 0 = fully random "
                          "prompts)")
+    ap.add_argument("--spec-draft", type=int, default=0,
+                    help="engine-only: self-speculative decoding — host-side "
+                         "n-gram proposer drafts up to this many tokens per "
+                         "slot per step, verified in ONE q_len>1 split-KV "
+                         "dispatch; the longest accepted prefix commits and "
+                         "rejected tail positions are rolled back by rewind "
+                         "(seq_lens never advance past committed tokens — "
+                         "pages never move). Greedy output is token-identical "
+                         "to non-speculative decoding (the parity oracle "
+                         "still gates it). 0 = off")
     ap.add_argument("--max-queue", type=int, default=0,
                     help="engine admission-queue bound: a submit that finds "
                          "this many requests already queued is load-shed "

@@ -87,6 +87,25 @@ def make_ref_decode_step(cfg: ModelConfig):
     return ref_decode_step
 
 
+def make_verify_step(cfg: ModelConfig, ref: bool = False):
+    """Speculative-verify step: K candidate tokens through the stack in ONE
+    dispatch.
+
+    verify_step(params, tokens [B, K], state, start [B]) -> (logits
+    [B, K, V] for every position, state with the block's quantized entries
+    landed in the pool). ``start`` is traced, so ONE compiled program serves
+    every engine step at a given draft width K. ``ref=True`` pins the jnp
+    reference backend (the graceful-degradation twin, mirroring
+    ``make_ref_decode_step``)."""
+    vcfg = dataclasses.replace(cfg, decode_backend="ref",
+                               use_kernels=False) if ref else cfg
+
+    def verify_step(params, tokens, state, start):
+        return T.verify_step(params, vcfg, tokens, state, start)
+
+    return verify_step
+
+
 def make_chunked_prefill_step(cfg: ModelConfig):
     """Chunked-prefill step: one (bucketed) prompt chunk through the stack.
 

@@ -723,3 +723,106 @@ def chunked_prefill(params, cfg: ModelConfig, tokens: jax.Array, state,
     logits = jnp.einsum("bd,vd->bv", x_last.astype(jnp.float32),
                         table.astype(jnp.float32))
     return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify (K drafted tokens -> all-position logits, one dispatch)
+# ---------------------------------------------------------------------------
+
+def _verify_mla_layer(p, cfg: ModelConfig, x, pool, start):
+    """One MLA layer over a K-token verify block: land the block's quantized
+    KV entries in the pool at positions ``start + t`` (exactly the bytes a
+    sequential decode would have appended — ``mla_quantize_entry`` is
+    deterministic, so accepted entries never need rewriting), then attend all
+    K queries against [FP8 prefix pages + the block itself] through the
+    q_len>1 split-KV decode backend (causal across the block via the kernel's
+    per-row limits)."""
+    mcfg = _mla_cfg(cfg)
+    ccfg = _cache_cfg(cfg, "mla")
+    B, K = x.shape[:2]
+    positions = start[:, None] + jnp.arange(K)[None, :]
+    h = L.rms_norm(x, p["ln1"])
+    c_kv, k_r = mla_lib.project_kv(p["mixer"], mcfg, h, positions)
+    # valid=ones: pool seq_lens become start + K, so every verify row's
+    # kernel limit is >= 1 (idle slots attend their own first row — finite
+    # garbage, discarded by the engine's acceptance rule). Entries past the
+    # slot's allocated pages clip to the scratch page inside prefill_at.
+    valid = jnp.ones((B, K), bool)
+    pool = paged_mla_prefill_at(pool, ccfg, c_kv, k_r, start, valid)
+    q_c, q_r = mla_lib.project_q(p["mixer"], mcfg, h, positions)
+    q_lat = mla_lib.absorb_q(p["mixer"], q_c)           # [B, K, H, d_c]
+    fmt = ccfg.fmt if ccfg.quantized else "none"
+    H = q_lat.shape[2]
+    q8, qr_s, sq = mla_kref.prepare_q(
+        q_lat.reshape(B, K * H, -1), q_r.reshape(B, K * H, -1), fmt)
+    query = BK.DecodeQuery(q8.reshape(B, K, H, -1),
+                           qr_s.reshape(B, K, H, -1),
+                           sq.reshape(B, K, H))
+    backend = BK.resolve_backend(
+        cfg.decode_backend, paged=True, batch=B, n_heads=cfg.n_heads,
+        use_kernels=cfg.use_kernels, q_len=K)
+    bcfg = BK.BackendConfig(softmax_scale=mcfg.softmax_scale,
+                            block_n=cfg.kv_block_n or ccfg.page_size, fmt=fmt,
+                            num_splits=cfg.kv_splits, rescale=cfg.kv_rescale)
+    o_lat = backend.decode(query, pool, bcfg, None)     # [B, K, H, d_c]
+    x = x + mla_lib.output_proj(p["mixer"], o_lat.astype(x.dtype))
+    x, _ = _apply_mlp(p, cfg, x)
+    return x, pool
+
+
+def verify_step(params, cfg: ModelConfig, tokens: jax.Array, state,
+                start: jax.Array):
+    """Self-speculative verify: tokens [B, K] (row 0 = the slot's last
+    committed token, rows 1..K-1 = drafted continuation) at absolute
+    positions ``start + t`` -> (logits [B, K, V] for EVERY position, state
+    with the block's quantized entries landed in the pool).
+
+    One compiled program verifies all slots' drafts per engine step; the
+    engine's acceptance rule decides how many of the K candidate samples to
+    commit, and rejected tail entries are masked by the NEXT step's pushed
+    ``seq_lens`` (rollback-by-rewind — pages never move). With K=1 this is
+    semantically the ordinary decode step (append one entry, one query row).
+
+    Pure-MLA + paged caches only — the same constraint as chunked_prefill."""
+    bad = [k for k in cfg.layer_pattern if k != "mla"]
+    if bad or not cfg.kv_paged:
+        raise ValueError(
+            "verify_step drives the paged MLA pipeline; layer pattern "
+            f"{cfg.layer_pattern} (kv_paged={cfg.kv_paged}) is unsupported")
+    x = L.embed(params["embed"], tokens)
+    new_state = dict(state)
+
+    if cfg.n_superblocks > 0:
+        def step(x, inputs):
+            block_params, block_state = inputs
+            new_states = []
+            for i in range(cfg.pattern_len):
+                x, s = _verify_mla_layer(block_params[i], cfg, x,
+                                         block_state[i], start)
+                new_states.append(s)
+            return x, new_states
+
+        if cfg.cost_exact:
+            outs = []
+            for i in range(cfg.n_superblocks):
+                bp = jax.tree.map(lambda a: a[i], params["scanned"])
+                bs = jax.tree.map(lambda a: a[i], state["scanned"])
+                x, ns = step(x, (bp, bs))
+                outs.append(ns)
+            new_state["scanned"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, scanned_states = jax.lax.scan(
+                step, x, (params["scanned"], state["scanned"]))
+            new_state["scanned"] = scanned_states
+    tail_states = []
+    for p, s in zip(params["tail"], state["tail"]):
+        x, s = _verify_mla_layer(p, cfg, x, s, start)
+        tail_states.append(s)
+    new_state["tail"] = tail_states
+
+    x = L.rms_norm(x, params["ln_f"])
+    table = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bkd,vd->bkv", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    return logits, new_state

@@ -96,6 +96,7 @@ from repro.obs.quant_health import QuantHealthProbe
 from repro.serving.allocator import PageAllocator
 from repro.serving.faults import EnginePreempted, FaultPlan
 from repro.serving.scheduler import Request, Scheduler, Status
+from repro.serving.speculative import NgramProposer
 from repro.serving.tiering import HostTier
 
 # the typed fault/degradation events the engine counts
@@ -193,6 +194,11 @@ class EngineConfig:
     # scale/clip/sink stats every N engine steps. 0 = off (the default —
     # each sample is a host read of the resident pages).
     quant_health_every: int = 0
+    # self-speculative decoding: draft up to this many tokens per slot per
+    # step by n-gram lookup in the slot's own history and verify them all in
+    # ONE q_len>1 kernel dispatch (serving/speculative.py). 0 = off (plain
+    # one-token decode). Per-slot draft lengths adapt to acceptance.
+    spec_draft_len: int = 0
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 0.0
@@ -282,6 +288,17 @@ class ServingEngine:
         # fault-free path never pays its compile. NOT donated: the retry
         # discards the returned state, and the fallback adopts it whole.
         self._ref_fn = None
+
+        # self-speculative decoding: the q_len>1 verify step replaces the
+        # one-token decode step when spec_draft_len > 0 (ONE jitted dispatch
+        # verifies every slot's draft; drafting itself is host-side n-gram
+        # lookup). The ref twin compiles lazily, like _ref_fn.
+        self.proposer = (NgramProposer(max_draft_len=ecfg.spec_draft_len)
+                         if ecfg.spec_draft_len > 0 else None)
+        self._verify_fn = (jax.jit(ST.make_verify_step(self.cfg),
+                                   donate_argnums=(2,))
+                           if self.proposer else None)
+        self._ref_verify_fn = None
 
         self.tier = (HostTier(ecfg.host_tier_pages)
                      if ecfg.host_tier_pages > 0 else None)
@@ -390,6 +407,24 @@ class ServingEngine:
         self._g_roof_frac = r.gauge(
             "snapmla_roofline_achieved_fraction",
             "bytes_min / modeled bytes for the last decode dispatch")
+        # speculative decoding: drafted-vs-accepted accounting (satellite of
+        # the q_len>1 verify path; serving_sim's speculative twin and
+        # bench_gate read these through the registry snapshot)
+        self._c_spec_steps = r.counter(
+            "snapmla_spec_verify_steps_total",
+            "speculative verify dispatches")
+        self._c_spec_slot_steps = r.counter(
+            "snapmla_spec_slot_steps_total",
+            "per-slot verify rows dispatched (decoding slots x steps)")
+        self._c_spec_drafted = r.counter(
+            "snapmla_spec_drafted_tokens_total",
+            "draft tokens proposed for verification")
+        self._c_spec_accepted = r.counter(
+            "snapmla_spec_accepted_tokens_total",
+            "draft tokens accepted by the longest-prefix rule")
+        self._g_spec_accept_rate = r.gauge(
+            "snapmla_spec_accept_rate",
+            "cumulative accepted/drafted draft-token ratio")
         self._c_faults = r.counter(
             "snapmla_engine_faults_total",
             "fault-tolerance events by kind", labels=("kind",))
@@ -504,6 +539,14 @@ class ServingEngine:
     @property
     def decode_blocks_full(self) -> int:
         return self._c_blocks_full.value
+
+    @property
+    def spec_drafted_tokens(self) -> int:
+        return self._c_spec_drafted.value
+
+    @property
+    def spec_accepted_tokens(self) -> int:
+        return self._c_spec_accepted.value
 
     @property
     def decode_seconds(self) -> float:
@@ -667,12 +710,19 @@ class ServingEngine:
 
         return post
 
-    def _postprocess(self, rows: jax.Array, reqs: list[Request]):
-        """``rows`` [len(reqs), V] aligned with ``reqs`` -> (tokens [n] np,
-        finite [n] np) — one dispatch + ONE host transfer for the whole
-        batch (tokens and NaN flags ride together)."""
+    def _postprocess(self, rows: jax.Array, reqs: list[Request],
+                     counts: np.ndarray | None = None):
+        """``rows`` [n, V] aligned with ``reqs`` -> (tokens [n] np, finite
+        [n] np) — one dispatch + ONE host transfer for the whole batch
+        (tokens and NaN flags ride together). ``counts`` overrides the
+        per-row sampling-key token index (the speculative verify passes one
+        row PER CANDIDATE POSITION, so ``reqs`` may repeat a request with
+        advancing counts — key usage stays identical to sequential
+        decode)."""
         rids = jnp.asarray([r.rid for r in reqs], jnp.int32)
-        counts = jnp.asarray([len(r.out_tokens) for r in reqs], jnp.int32)
+        if counts is None:
+            counts = [len(r.out_tokens) for r in reqs]
+        counts = jnp.asarray(counts, jnp.int32)
         toks, finite = jax.device_get(self._post_fn(rows, rids, counts))
         return toks, finite
 
@@ -692,8 +742,20 @@ class ServingEngine:
         if len(req.out_tokens) >= req.max_new or eos_hit:
             self._retire(req)
 
+    def _drop_spec_state(self, req: Request) -> None:
+        """Drop a request's speculative bookkeeping BEFORE its pages are
+        freed/retained: uncommitted draft rows exist only as pool bytes past
+        ``seq_len`` (rewound by the next step's pushed lengths) and as
+        proposer state — neither may outlive the request's slot, and the
+        prefix tree must never see rejected-draft bytes (it registers full
+        PROMPT pages only; draft writes land at positions >= the effective
+        prompt, i.e. private tail/grown pages)."""
+        if self.proposer is not None:
+            self.proposer.drop(str(req.rid))
+
     def _retire(self, req: Request) -> None:
         slot = req.slot
+        self._drop_spec_state(req)
         self.scheduler.retire(req, self.step_idx, self.allocator)
         self._wall[req.rid]["finish"] = time.time()
         if self.tracer:
@@ -709,6 +771,7 @@ class ServingEngine:
         """Evict-to-requeue: pages freed, generated tokens kept; the request
         replays prompt + generated tokens at its next admission."""
         slot = req.slot
+        self._drop_spec_state(req)
         self.scheduler.requeue(req, self.allocator)
         if self.tracer:
             ts = self.tracer.ts(self.step_idx, TRC.OFF_EVICT)
@@ -727,6 +790,7 @@ class ServingEngine:
         reason; pages freed, slot parked on scratch, partial tokens kept.
         Every other request is untouched."""
         slot = req.slot
+        self._drop_spec_state(req)
         self.scheduler.fail(req, self.step_idx, self.allocator, reason)
         self._wall.setdefault(req.rid, {"arrival": time.time()})
         self._wall[req.rid]["finish"] = time.time()
@@ -1025,6 +1089,21 @@ class ServingEngine:
                     # the injected exhaustion freed real pages; stop forcing
                     # so the freed pages are actually usable this step
                     forced = False
+            if self.proposer is None or req.status is not Status.DECODE:
+                continue
+            # opportunistic draft coverage: grow toward room for the slot's
+            # adaptive draft (entries at seq_len .. seq_len + draft), but
+            # NEVER evict for it — speculation degrades to shorter drafts
+            # under pool pressure instead of displacing other requests
+            want = min(self.proposer.draft_len(str(req.rid)),
+                       req.max_new - len(req.out_tokens) - 1)
+            while (want > 0 and len(req.pages) < self.span_pages
+                   and req.seq_len + want + 1 > len(req.pages) * self.page):
+                grown = None if forced else self.allocator.grow(1)
+                if grown is None:
+                    break
+                req.pages.extend(grown)
+                self.table[req.slot, len(req.pages) - 1] = grown[0]
 
     # ------------------------------------------------------------------
     # the step loop
@@ -1051,6 +1130,173 @@ class ServingEngine:
                     self.step_idx, TRC.PHASE_WINDOWS["decode"][0] + 10,
                     "backend_fault", args={"fallback": "jnp_ref"})
             return self._ref_decode_fn()(self.params, tok, state, lens)
+
+    def _ref_verify_decode_fn(self):
+        """The jnp_ref-backend verify twin (lazy, undonated — mirrors
+        ``_ref_decode_fn``)."""
+        if self._ref_verify_fn is None:
+            self._ref_verify_fn = jax.jit(
+                ST.make_verify_step(self.cfg, ref=True))
+        return self._ref_verify_fn
+
+    def _dispatch_verify(self, state, tokens, starts):
+        """The jitted speculative-verify dispatch, degraded to the jnp_ref
+        verify twin when it raises before consuming the donated buffers
+        (same contract as ``_dispatch_decode``)."""
+        try:
+            if self.fault_plan and self.fault_plan.backend_raise(
+                    self.step_idx):
+                raise RuntimeError(
+                    f"injected backend failure at step {self.step_idx}")
+            return self._verify_fn(self.params, tokens, state, starts)
+        except Exception:
+            self._fault("backend_faults")
+            self._fault("ref_fallback_steps")
+            if self.tracer:
+                self.tracer.engine_instant(
+                    self.step_idx, TRC.PHASE_WINDOWS["decode"][0] + 10,
+                    "backend_fault", args={"fallback": "jnp_ref"})
+            return self._ref_verify_decode_fn()(self.params, tokens, state,
+                                                starts)
+
+    def _spec_decode(self, active: list[Request]) -> None:
+        """Self-speculative step for every decoding slot: draft (host-side
+        n-gram lookup), verify all drafts in ONE q_len>1 dispatch, commit
+        the longest accepted prefix, roll back the rest by NOT advancing the
+        host's token bookkeeping (the rejected entries' pool bytes are
+        masked by the next step's pushed ``seq_lens`` — pages never move).
+
+        Verify row t of a slot carries [last_tok, d_1..d_v, pad...][t] at
+        absolute position ``seq_len + t`` with kernel limit
+        ``seq_len + t + 1``; its sampled token uses the SAME fold_in key a
+        sequential decode would (count = len(out_tokens) + t), so greedy
+        AND sampled engine output is token-identical to non-speculative —
+        the drafter only ever changes HOW MANY of those exact sequential
+        samples land per step."""
+        e = self.ecfg
+        K = e.spec_draft_len + 1
+        tokens = np.zeros((e.max_batch, K), np.int32)
+        starts = np.zeros((e.max_batch,), np.int32)
+        table_view = np.zeros_like(self.table)
+        drafts: dict[int, list[int]] = {}
+        for r in active:
+            # trim the draft to what the slot can actually use: committed
+            # entries land at seq_len..seq_len+v (v+1 of them), the run is
+            # bounded by allocated pages, and drafting past max_new-1 new
+            # tokens is wasted work
+            budget = min(e.spec_draft_len,
+                         r.max_new - len(r.out_tokens) - 1,
+                         len(r.pages) * self.page - r.seq_len - 1)
+            d: list[int] = []
+            if budget > 0:
+                ctx = [int(t) for t in r.prompt] + list(r.out_tokens)
+                d = self.proposer.propose(str(r.rid), ctx, budget)
+            drafts[r.rid] = d
+            row = [int(self.last_tok[r.slot])] + d
+            tokens[r.slot, :len(row)] = row
+            starts[r.slot] = r.seq_len
+            table_view[r.slot] = self.table[r.slot]
+        state = self._state_with_tables(table_view, starts)
+        t0 = time.time()
+        logits, self.state = self._dispatch_verify(
+            state, jnp.asarray(tokens), jnp.asarray(starts))
+        if self.fault_plan:
+            live = {r.slot for r in active}
+            for ev in self.fault_plan.nan_slots(self.step_idx):
+                if ev.slot in live:
+                    self.fault_plan._log(self.step_idx, "nan_logits",
+                                         ev.slot)
+                    logits = logits.at[ev.slot, 0, 0].set(jnp.nan)
+        # flatten to one postprocess row per CANDIDATE (slot, position):
+        # counts advance by position so the sampling keys are exactly the
+        # sequential ones
+        flat_reqs: list[Request] = []
+        flat_counts: list[int] = []
+        sel_slots: list[int] = []
+        sel_pos: list[int] = []
+        for r in active:
+            for t in range(len(drafts[r.rid]) + 1):
+                flat_reqs.append(r)
+                flat_counts.append(len(r.out_tokens) + t)
+                sel_slots.append(r.slot)
+                sel_pos.append(t)
+        rows = logits[np.asarray(sel_slots), np.asarray(sel_pos)]
+        toks, finite = self._postprocess(rows, flat_reqs, counts=flat_counts)
+        self._w_decode_s.inc(time.time() - t0)
+
+        # deterministic work/traffic accounting: every verify row visits
+        # blocks up to its own per-row limit (seq_len + t + 1)
+        self._c_blocks_visited.inc(int(sum(
+            -(-(r.seq_len + t + 1) // self.page)
+            for r in active for t in range(K))))
+        self._c_blocks_full.inc(len(active) * K * self.span_pages)
+        cost = BK.dispatch_cost(
+            self._backend,
+            tokens_visited=sum(r.seq_len + t + 1
+                               for r in active for t in range(K)),
+            tokens_full=len(active) * K * self.span_pages * self.page,
+            heads=self.cfg.n_heads, d_c=self.cfg.mla.d_c,
+            d_r=self.cfg.mla.d_rope, fmt=self.cfg.kv_fmt)
+        self._c_roof_bytes.inc(cost["bytes"])
+        self._c_roof_bytes_min.inc(cost["bytes_min"])
+        self._c_roof_flops.inc(cost["flops"])
+        self._g_roof_frac.set(cost["achieved_fraction"])
+
+        # longest-accepted-prefix commit: emit the exact sequential samples
+        # while each drafted token matches; stop at the first mismatch (its
+        # corrective sample still lands — the guaranteed one-token floor),
+        # at retirement (EOS/max_new), or at a non-finite row (sequential
+        # quarantine semantics at the already-advanced position)
+        idx = 0
+        n_drafted = n_accepted = n_emitted = 0
+        for r in active:
+            d = drafts[r.rid]
+            v = len(d)
+            committed = 0
+            bad = False
+            for j in range(v + 1):
+                fi = idx + j
+                if not finite[fi]:
+                    bad = True
+                    break
+                tok = int(toks[fi])
+                self._emit(r, tok)
+                n_emitted += 1
+                committed += 1
+                if r.status is not Status.DECODE:
+                    break
+                if j < v and tok == d[j]:
+                    continue
+                break
+            idx += v + 1
+            accepted = max(committed - 1, 0)
+            n_drafted += v
+            n_accepted += accepted
+            if bad:
+                self._quarantine(r)
+            elif r.status is Status.DECODE:
+                self.proposer.observe(str(r.rid), v, accepted)
+
+        self._c_decode_tokens.inc(n_emitted)
+        self._c_work.inc(n_emitted)
+        self._c_spec_steps.inc()
+        self._c_spec_slot_steps.inc(len(active))
+        self._c_spec_drafted.inc(n_drafted)
+        self._c_spec_accepted.inc(n_accepted)
+        drafted_total = self._c_spec_drafted.value
+        self._g_spec_accept_rate.set(
+            self._c_spec_accepted.value / drafted_total
+            if drafted_total else 0.0)
+        if self.tracer:
+            # verify spans ride the decode phase window (args mark them)
+            self.tracer.step_phase(
+                self.step_idx, "decode",
+                args={"verify": True, "rows": len(active), "q_len": K,
+                      "drafted": n_drafted, "accepted": n_accepted,
+                      "model_bytes": cost["bytes"],
+                      "achieved_fraction": cost["achieved_fraction"]})
+            self.tracer.step_phase(self.step_idx, "postprocess",
+                                   args={"rows": len(flat_reqs)})
 
     def step(self) -> None:
         """One engine iteration: sweep deadlines, admit, run (budgeted)
@@ -1089,7 +1335,9 @@ class ServingEngine:
         self._drain_tier_ops()
         active = [r for r in self.scheduler.active
                   if r.status is Status.DECODE]
-        if active:
+        if active and self.proposer is not None:
+            self._spec_decode(active)
+        elif active:
             seq_lens = np.zeros((self.ecfg.max_batch,), np.int32)
             table_view = np.zeros_like(self.table)
             for r in active:
@@ -1189,6 +1437,8 @@ class ServingEngine:
             "allocator": self.allocator.export_state(),
             "host_tier": (self.tier.export_state()
                           if self.tier is not None else None),
+            "spec": (self.proposer.export_state()
+                     if self.proposer is not None else None),
             "table": self.table.tolist(),
             "last_tok": self.last_tok.tolist(),
             "seen_rids": sorted(self._seen_rids),
@@ -1249,6 +1499,8 @@ class ServingEngine:
                     "host_tier_pages == 0")
             self.tier.restore_state(tier_state)
         self.allocator.restore_state(host["allocator"])
+        if self.proposer is not None:
+            self.proposer.restore_state(host.get("spec") or {})
         self.table = np.asarray(host["table"], np.int32)
         self.last_tok = np.asarray(host["last_tok"], np.int32)
         self._seen_rids = set(host["seen_rids"])
@@ -1409,6 +1661,21 @@ class ServingEngine:
                 "prefill_skipped_tokens": self.prefill_skipped_tokens,
                 "nodes": (len(self.allocator.tree)
                           if self.allocator.tree is not None else 0),
+            },
+            "speculative": {
+                "enabled": self.proposer is not None,
+                "draft_len": self.ecfg.spec_draft_len,
+                "verify_steps": self._c_spec_steps.value,
+                "drafted_tokens": self.spec_drafted_tokens,
+                "accepted_tokens": self.spec_accepted_tokens,
+                "accept_rate": (
+                    self.spec_accepted_tokens / self.spec_drafted_tokens
+                    if self.spec_drafted_tokens else 0.0),
+                # committed tokens per decoding SLOT per step: the headline
+                # (non-speculative decode is exactly 1.0 by construction)
+                "accepted_tokens_per_step": (
+                    self.decode_tokens / self._c_spec_slot_steps.value
+                    if self._c_spec_slot_steps.value else 0.0),
             },
             "utilization_series": self.util_series,
             "faults": {

@@ -131,6 +131,66 @@ def test_profile_layouts_are_separate():
         default_num_splits(32768, 128)
 
 
+def test_profile_rescale_axis_is_separate():
+    """AMLA-timed sweeps live under their own "/amla" keys: an FMA best never
+    drives an AMLA plan (or vice versa), nearest-batch interpolation never
+    crosses the rescale axis, and an un-swept rescale falls back to the
+    heuristic."""
+    profile = autotune.SplitProfile()
+    profile.record(32768, 128, 4, {1: 900.0, 4: 400.0})
+    profile.record(32768, 128, 4, {1: 900.0, 2: 300.0, 4: 400.0},
+                   rescale="amla")
+    autotune.reset(profile)
+    assert resolve_num_splits(None, 32768, 128, batch=4) == 4
+    assert resolve_num_splits(None, 32768, 128, batch=4, rescale="amla") == 2
+    # nearest-batch interpolation stays within the rescale
+    assert profile.lookup_nearest(32768, 128, 8, rescale="amla") == 2
+    assert profile.lookup_nearest(32768, 128, 8) == 4
+    # the joint 2D plan also keys on rescale
+    assert profile.lookup_config(32768, 4) == autotune.SplitConfig(4, 128)
+    assert profile.lookup_config(32768, 4, rescale="amla") == \
+        autotune.SplitConfig(2, 128)
+    # AMLA-only entry -> FMA still falls back to the heuristic
+    profile2 = autotune.SplitProfile()
+    profile2.record(32768, 128, 2, {4: 100.0}, rescale="amla")
+    autotune.reset(profile2)
+    assert resolve_num_splits(None, 32768, 128, batch=2) == \
+        default_num_splits(32768, 128)
+    # paged + amla compose: the suffixes stack (".../paged/amla")
+    profile2.record(32768, 128, 2, {2: 100.0}, layout="paged", rescale="amla")
+    assert "32768/128/2/paged/amla" in profile2.entries
+    assert profile2.lookup(32768, 128, 2, layout="paged", rescale="amla") == 2
+    assert profile2.lookup(32768, 128, 2, layout="paged") is None
+
+
+def test_rescale_keys_round_trip_through_save_load(tmp_path):
+    """The FMA key shape is unchanged (existing artifacts stay exact hits)
+    and AMLA entries survive persistence."""
+    p = tmp_path / "prof.json"
+    profile = autotune.SplitProfile()
+    profile.record(4096, 128, 2, {1: 900.0, 2: 500.0})
+    profile.record(4096, 128, 2, {1: 900.0, 4: 300.0}, rescale="amla")
+    profile.save(p)
+    payload = json.loads(p.read_text())
+    assert set(payload["entries"]) == {"4096/128/2", "4096/128/2/amla"}
+    loaded = autotune.SplitProfile.load(p)
+    assert loaded.lookup(4096, 128, 2) == 2
+    assert loaded.lookup(4096, 128, 2, rescale="amla") == 4
+
+
+def test_measure_split_sweep_rescale_records_amla_key():
+    """A sweep run under rescale="amla" records only the AMLA key — the
+    timings come from the AMLA kernel path, so they must never drive the
+    default FMA plan."""
+    profile = autotune.SplitProfile()
+    measured = autotune.measure_split_sweep(
+        128, 32, 1, d_c=16, d_r=8, heads=2, profile=profile, rescale="amla",
+        timer=autotune.synthetic_timer({1: 300.0, 2: 200.0, 4: 100.0}))
+    assert set(measured) == {1, 2, 4}
+    assert profile.lookup(128, 32, 1, rescale="amla") == 4
+    assert profile.lookup(128, 32, 1) is None          # FMA untouched
+
+
 def test_record_prefers_fewer_splits_within_noise_margin():
     """Ties within WIN_MARGIN go to the smaller split count, so measurement
     jitter can't flip a plan away from the bit-exact single-pass path."""
@@ -456,15 +516,19 @@ def test_measure_config_sweep_measured_smoke():
 
 def test_emit_split_profile_artifact(tmp_path):
     """The benchmark entry point writes the JSON artifact resolve reads,
-    covering both layouts."""
+    covering both layouts and the AMLA-rescale key space."""
     from benchmarks.kernel_perf import emit_split_profile
 
     path = tmp_path / "prof.json"
     out = emit_split_profile(path=str(path), shapes=((128, 32, 1),),
-                             paged_shapes=((128, 32, 1),), iters=1)
+                             paged_shapes=((128, 32, 1),),
+                             config_shapes=((128, 1),),
+                             amla_config_shapes=((128, 1),), iters=1)
     assert out == path
     loaded = autotune.SplitProfile.load(path)
     assert loaded.lookup(128, 32, 1) is not None
     assert loaded.lookup(128, 32, 1, layout="paged") is not None
+    # the AMLA config sweep recorded its own "/amla" entries
+    assert loaded.lookup_config(128, 1, rescale="amla") is not None
     # emit installs the fresh profile as the in-process singleton
     assert autotune.get_profile().lookup(128, 32, 1) is not None

@@ -74,6 +74,76 @@ def test_parity_model_kernel_backend_logits(paged):
     np.testing.assert_array_equal(ker.argmax(-1), ref.argmax(-1))
 
 
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "none"])
+def test_parity_qlen_verify_kernel_vs_ref(fmt):
+    """Rank-4 (q_len > 1 verify) split-KV kernel == its jnp verify oracle —
+    the same gate test_qlen_verify runs on the full grid, kept here under
+    the parity marker so `pytest -m parity` covers the speculative-verify
+    path too."""
+    from repro.core.kvcache import CacheConfig, init_mla_cache, mla_prefill
+    from repro.kernels.mla_decode.kernel import mla_decode_splitkv_pallas
+
+    B, H, N, bn, Q = 2, 4, 256, 64, 3
+    cfg = CacheConfig(fmt=fmt, page_size=bn)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    cache = mla_prefill(init_mla_cache(cfg, B, N, 32, 16), cfg,
+                        jax.random.normal(ks[0], (B, N, 32)) * 2,
+                        jax.random.normal(ks[1], (B, N, 16)) * 25)
+    cache = cache._replace(seq_lens=jnp.asarray([200, 64], jnp.int32))
+    q8, qr, sq = R.prepare_q(jax.random.normal(ks[2], (B, Q * H, 32)),
+                             jax.random.normal(ks[3], (B, Q * H, 16)) * 5,
+                             fmt)
+    q4 = (q8.reshape(B, Q, H, 32), qr.reshape(B, Q, H, 16),
+          sq.reshape(B, Q, H))
+    cargs = (cache.content, cache.rope.astype(jnp.float32), cache.scale,
+             cache.seq_lens)
+    o_k, lse_k = mla_decode_splitkv_pallas(
+        *q4, *cargs, softmax_scale=0.1, num_splits=2, block_n=bn, fmt=fmt)
+    o_r, lse_r = R.snapmla_decode_splitkv_ref(
+        *q4, *cargs, softmax_scale=0.1, num_splits=2, block_n=bn, fmt=fmt)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse_k), np.asarray(lse_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_parity_verify_step_matches_sequential_decode():
+    """Model-level speculative-verify gate: ONE verify_step dispatch over a
+    [B, K] candidate block returns, at every row, logits matching K
+    teacher-forced sequential decode_step calls — same positions, same
+    quantized cache bytes. The argmax token stream must match exactly;
+    this is the property the engine's longest-accepted-prefix rule (and its
+    rollback-by-rewind) relies on."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(get_smoke_config("mla-7b"), kv_paged=True)
+    key = jax.random.PRNGKey(0)
+    params = T.init_model(key, cfg)
+    B, S, K = 2, 16, 3
+    tokens = jax.random.randint(key, (B, S + K), 0, cfg.vocab_size,
+                                jnp.int32)
+
+    state = T.init_decode_state(cfg, B, 32)
+    _, state = T.prefill(params, cfg, tokens[:, :S], state)
+    seq = []
+    for t in range(S, S + K):
+        lg, state = T.decode_step(params, cfg, tokens[:, t], state,
+                                  jnp.full((B,), t, jnp.int32))
+        seq.append(np.asarray(lg))
+    seq = np.stack(seq, axis=1)                       # [B, K, V]
+
+    state2 = T.init_decode_state(cfg, B, 32)
+    _, state2 = T.prefill(params, cfg, tokens[:, :S], state2)
+    ver, _ = T.verify_step(params, cfg, tokens[:, S:S + K], state2,
+                           jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(ver), seq, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ver).argmax(-1),
+                                  seq.argmax(-1))
+
+
 @pytest.mark.parametrize("num_splits", [1, 2, 4])
 def test_parity_amla_kernel_vs_ref(num_splits):
     """Kernel-AMLA == ref-AMLA: the exponent-add rescale and the combine-free

@@ -1,0 +1,167 @@
+"""q_len > 1 (speculative-verify) split-KV decode: the rank-4 query path.
+
+The verify contract: a [B, q_len, H, ...] query block holds the LAST q_len
+positions of each sequence — row t attends a causal prefix of
+``seq_lens - (q_len - 1) + t`` entries. The grid here pins
+
+  * kernel == jnp oracle over fmt x num_splits on ragged seq_lens (rows
+    shorter than q_len included — their dead rows agree too),
+  * q_len = 1 through the rank-4 path is BIT-identical to the rank-3 path
+    (the PR-8 contract: generalizing the kernel changed nothing at Q=1),
+  * row t of one rank-4 call is bit-identical to a sequential q_len = 1
+    call at the row's own seq_lens — the property the engine's rollback-by-
+    rewind correctness argument rests on,
+  * the paged rank-4 kernel agrees with the contiguous one on the same data,
+  * the AMLA rescale stays within quantization-rounding distance of FMA.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kvcache import (CacheConfig, init_mla_cache, mla_prefill)
+from repro.kernels.mla_decode import ref as R
+from repro.kernels.mla_decode.kernel import (mla_decode_paged_splitkv_pallas,
+                                             mla_decode_splitkv_pallas)
+
+SCALE = 0.1
+Q = 4
+# ragged batch: shorter than q_len (dead rows), == q_len, mid-block, full
+RAGGED_LENS = [2, Q, 77, 130, 256]
+
+
+def _setup(key, B, N, d_c, d_r, fmt, page, seq_lens, H=4, q_len=Q):
+    cfg = CacheConfig(fmt=fmt, page_size=page)
+    ks = jax.random.split(key, 4)
+    cache = mla_prefill(init_mla_cache(cfg, B, N, d_c, d_r), cfg,
+                        jax.random.normal(ks[0], (B, N, d_c)) * 2,
+                        jax.random.normal(ks[1], (B, N, d_r)) * 25)
+    cache = cache._replace(seq_lens=jnp.asarray(seq_lens, jnp.int32))
+    q = jax.random.normal(ks[2], (B, q_len, H, d_c))
+    qr = jax.random.normal(ks[3], (B, q_len, H, d_r)) * 5
+    q8, qrf, sq = R.prepare_q(q.reshape(B, q_len * H, d_c),
+                              qr.reshape(B, q_len * H, d_r), fmt)
+    q4 = (q8.reshape(B, q_len, H, d_c), qrf.reshape(B, q_len, H, d_r),
+          sq.reshape(B, q_len, H))
+    cargs = (cache.content, cache.rope.astype(jnp.float32), cache.scale,
+             cache.seq_lens)
+    return cache, q4, cargs
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "int8", "none"])
+@pytest.mark.parametrize("num_splits", [1, 2, 4])
+def test_qlen_kernel_matches_ref_ragged(fmt, num_splits):
+    """Rank-4 kernel == jnp verify oracle over the fmt x splits grid on
+    ragged seq_lens, including rows shorter than q_len."""
+    B, N, bn = len(RAGGED_LENS), 256, 32
+    _, q4, cargs = _setup(jax.random.PRNGKey(0), B, N, 32, 16, fmt, bn,
+                          RAGGED_LENS)
+    o_k, lse_k = mla_decode_splitkv_pallas(
+        *q4, *cargs, softmax_scale=SCALE, num_splits=num_splits, block_n=bn,
+        fmt=fmt)
+    o_r, lse_r = R.snapmla_decode_splitkv_ref(
+        *q4, *cargs, softmax_scale=SCALE, num_splits=num_splits, block_n=bn,
+        fmt=fmt)
+    assert o_k.shape == (B, Q, 4, 32) and lse_k.shape == (B, Q, 4)
+    np.testing.assert_array_equal(np.isnan(np.asarray(o_k)),
+                                  np.isnan(np.asarray(o_r)))
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse_k), np.asarray(lse_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qlen1_rank4_bit_identical_to_rank3():
+    """The rank contract: a [B, 1, H, ...] query through the generalized
+    kernel returns exactly the rank-3 decode's bits (plus the q_len axis)."""
+    B, N, bn = 3, 256, 64
+    _, q4, cargs = _setup(jax.random.PRNGKey(1), B, N, 32, 16, "fp8_e4m3",
+                          bn, [200, 64, 77])
+    q3 = tuple(a[:, 0] for a in q4)
+    q41 = tuple(a[:, :1] for a in q4)
+    for splits in (1, 2, 4):
+        o3, l3 = mla_decode_splitkv_pallas(
+            *q3, *cargs, softmax_scale=SCALE, num_splits=splits, block_n=bn,
+            fmt="fp8_e4m3")
+        o4, l4 = mla_decode_splitkv_pallas(
+            *q41, *cargs, softmax_scale=SCALE, num_splits=splits, block_n=bn,
+            fmt="fp8_e4m3")
+        assert o4.shape == (B, 1) + o3.shape[1:]
+        assert jnp.array_equal(o3, o4[:, 0]) and jnp.array_equal(l3, l4[:, 0])
+
+
+def test_qlen_rows_bit_identical_to_sequential_qlen1():
+    """Causal masking semantics: row t of one rank-4 call == a rank-3 call
+    at ``seq_lens - (q_len-1) + t``, bit for bit. This is the property the
+    engine's verify step (and its rollback-by-rewind argument) rests on —
+    every candidate position sees exactly the cache a sequential decode
+    would have seen."""
+    B, N, bn = 3, 256, 64
+    cache, q4, cargs = _setup(jax.random.PRNGKey(2), B, N, 32, 16,
+                              "fp8_e4m3", bn, [200, Q, 77])
+    o_k, lse_k = mla_decode_splitkv_pallas(
+        *q4, *cargs, softmax_scale=SCALE, num_splits=2, block_n=bn,
+        fmt="fp8_e4m3")
+    for t in range(Q):
+        sl_t = cache.seq_lens - (Q - 1 - t)
+        o_t, lse_t = mla_decode_splitkv_pallas(
+            *(a[:, t] for a in q4), *cargs[:3], sl_t,
+            softmax_scale=SCALE, num_splits=2, block_n=bn, fmt="fp8_e4m3")
+        assert jnp.array_equal(o_t, o_k[:, t]), t
+        assert jnp.array_equal(lse_t, lse_k[:, t]), t
+
+
+def test_qlen_paged_matches_contiguous():
+    """The paged rank-4 kernel on a shuffled page pool agrees with the
+    contiguous rank-4 kernel on the same entries."""
+    B, N, page = 3, 256, 32
+    cache, q4, cargs = _setup(jax.random.PRNGKey(3), B, N, 32, 16,
+                              "fp8_e4m3", page, [200, 64, 130])
+    P = N // page
+    rng = np.random.RandomState(0)
+    n_pool = B * P + 3
+    perm = rng.permutation(n_pool)[: B * P].reshape(B, P)
+    pool_c = np.zeros((n_pool, page, 32), np.asarray(cache.content).dtype)
+    pool_r = np.zeros((n_pool, page, 16), np.float32)
+    pool_s = np.ones((n_pool, page), np.float32)
+    for b in range(B):
+        for j in range(P):
+            sl = slice(j * page, (j + 1) * page)
+            pool_c[perm[b, j]] = np.asarray(cache.content[b, sl])
+            pool_r[perm[b, j]] = np.asarray(cache.rope[b, sl], np.float32)
+            pool_s[perm[b, j]] = np.asarray(cache.scale[b, sl])
+    o_p, lse_p = mla_decode_paged_splitkv_pallas(
+        *q4, jnp.asarray(pool_c), jnp.asarray(pool_r), jnp.asarray(pool_s),
+        jnp.asarray(perm, jnp.int32), cache.seq_lens, softmax_scale=SCALE,
+        num_splits=2, fmt="fp8_e4m3")
+    o_c, lse_c = mla_decode_splitkv_pallas(
+        *q4, *cargs, softmax_scale=SCALE, num_splits=2, block_n=page,
+        fmt="fp8_e4m3")
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_c),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse_p), np.asarray(lse_c),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qlen_amla_within_tolerance_of_fma():
+    """The AMLA exponent-add rescale on rank-4 queries differs from exact
+    FMA only at quantization-rounding level (its sigma_p grid is powers of
+    two) — and each rescale matches its own oracle."""
+    B, N, bn = 3, 256, 64
+    _, q4, cargs = _setup(jax.random.PRNGKey(4), B, N, 32, 16, "fp8_e4m3",
+                          bn, [200, 64, 130])
+    outs = {}
+    for rescale in ("fma", "amla"):
+        o_k, _ = mla_decode_splitkv_pallas(
+            *q4, *cargs, softmax_scale=SCALE, num_splits=2, block_n=bn,
+            fmt="fp8_e4m3", rescale=rescale)
+        o_r, _ = R.snapmla_decode_splitkv_ref(
+            *q4, *cargs, softmax_scale=SCALE, num_splits=2, block_n=bn,
+            fmt="fp8_e4m3", rescale=rescale)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   rtol=1e-5, atol=1e-5)
+        outs[rescale] = np.asarray(o_k)
+    # same global-relative metric test_parity pins for the rank-3 kernels
+    rel = float(np.max(np.abs(outs["amla"] - outs["fma"]))
+                / (np.max(np.abs(outs["fma"])) + 1e-12))
+    assert rel < 0.05, rel

@@ -536,3 +536,154 @@ def test_scheduler_fcfs_no_head_of_line_skip():
     a.free(held)
     admitted = sched.admit(a, step=1)
     assert [r.rid for r in admitted] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: token identity, acceptance, eviction storm
+# ---------------------------------------------------------------------------
+
+def _spec_prompts(cfg, key, n_random, S):
+    """n_random random prompts + one highly repetitive prompt (the traffic
+    n-gram drafting wins on)."""
+    rand = _mk_prompts(cfg, key, n_random, S)
+    pat = np.asarray(([5, 9, 2, 7] * S)[:S], np.int32)
+    return np.concatenate([rand, pat[None]], 0)
+
+
+def test_engine_spec_greedy_token_identity(model):
+    """spec_draft_len > 0 must be a pure throughput optimization: greedy
+    output is token-identical to the non-speculative engine on a mixed
+    random + repetitive workload, drafts actually get accepted, and the
+    drain is clean."""
+    cfg, params = model
+    S, gen = 24, 12
+    prompts = _spec_prompts(cfg, jax.random.PRNGKey(11), 3, S)
+    span = _span_pages(cfg, S, gen)
+
+    def run(spec):
+        engine = ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, max_pages_per_seq=span, spec_draft_len=spec))
+        res = engine.run([Request(rid=i, prompt=prompts[i], max_new=gen,
+                                  arrival=0.0) for i in range(len(prompts))])
+        assert _drained_clean(engine)
+        return {r.rid: (r.status, r.tokens) for r in res}, engine.metrics()
+
+    base, m0 = run(0)
+    spec, m = run(3)
+    assert base == spec
+    assert not m0["speculative"]["enabled"]
+    sp = m["speculative"]
+    assert sp["enabled"] and sp["verify_steps"] > 0
+    assert sp["accepted_tokens"] > 0, "repetitive prompt must accept drafts"
+    assert 0.0 < sp["accept_rate"] <= 1.0
+    # per-slot-step: non-speculative decode is exactly 1.0 by construction,
+    # so > 1.0 certifies real multi-token commits
+    assert sp["accepted_tokens_per_step"] > 1.0
+
+
+def test_engine_spec_sampled_token_identity(model):
+    """Seeded sampling through the verify path: row t's sampling key is the
+    same fold_in(count) key sequential decode would use, so sampled output
+    is token-identical too (not just greedy)."""
+    cfg, params = model
+    S, gen = 24, 10
+    prompts = _spec_prompts(cfg, jax.random.PRNGKey(12), 2, S)
+    span = _span_pages(cfg, S, gen)
+
+    def run(spec):
+        engine = ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, max_pages_per_seq=span, spec_draft_len=spec,
+            temperature=0.8, top_k=8, seed=7))
+        res = engine.run([Request(rid=i, prompt=prompts[i], max_new=gen,
+                                  arrival=0.0) for i in range(len(prompts))])
+        assert _drained_clean(engine)
+        return {r.rid: (r.status, r.tokens) for r in res}
+
+    assert run(0) == run(3)
+
+
+def test_engine_spec_eviction_storm_never_registers_draft_bytes(model):
+    """Seeded eviction/requeue storm with speculation live: a pool too small
+    for every request forces evictions MID-speculation. Pins
+
+      * every (re)admission registers only prompt + COMMITTED tokens in the
+        prefix tree — rejected draft bytes (written into tail pages by the
+        verify block, then rolled back by rewind) never enter alloc_prompt,
+      * requeue rewinds happen BEFORE pages are freed (the run would corrupt
+        or crash otherwise), and proposer state is dropped with them,
+      * everyone completes with full token counts, token-identical to the
+        non-speculative engine under the same pressure, and the drain is
+        clean."""
+    cfg, params = model
+    S, gen = 20, 14                        # grows past 2 pages into a 3rd
+    prompts = _spec_prompts(cfg, jax.random.PRNGKey(13), 2, S)
+
+    def run(spec):
+        engine = ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, max_pages_per_seq=3, n_pages=6,   # capacity 5 < 2x3
+            prefix_sharing=True, spec_draft_len=spec))
+        seen: list[np.ndarray] = []
+        orig = engine.allocator.alloc_prompt
+
+        def spy(prompt):
+            seen.append(np.asarray(prompt).copy())
+            return orig(prompt)
+
+        engine.allocator.alloc_prompt = spy
+        res = engine.run([Request(rid=i, prompt=prompts[i], max_new=gen,
+                                  arrival=0.0) for i in range(len(prompts))])
+        assert engine.evictions > 0, "workload must actually evict"
+        assert [r.status for r in res] == ["done"] * len(prompts)
+        assert all(len(r.tokens) == gen for r in res)
+        assert _drained_clean(engine)
+        # every registered byte stream is a prefix of prompt + the FINAL
+        # committed tokens: a rejected draft byte would diverge from the
+        # committed stream at its position
+        final = {r.rid: np.concatenate([prompts[r.rid],
+                                        np.asarray(r.tokens, np.int32)])
+                 for r in res}
+        for reg in seen:
+            assert any(len(reg) <= len(f)
+                       and np.array_equal(reg, f[:len(reg)])
+                       for f in final.values()), \
+                "alloc_prompt saw bytes outside any committed stream"
+        if engine.proposer is not None:
+            # _drop_spec_state ran for every retire/requeue: nothing lingers
+            assert engine.proposer.export_state() == {}
+        return {r.rid: r.tokens for r in res}
+
+    assert run(3) == run(0)
+
+
+def test_engine_spec_checkpoint_roundtrip_carries_proposer_state(model):
+    """Snapshot/restore mid-run: the proposer's per-slot adaptive state
+    rides the checkpoint, and the restored engine finishes token-identical
+    to an uninterrupted speculative run."""
+    import tempfile
+
+    cfg, params = model
+    S, gen = 24, 12
+    prompts = _spec_prompts(cfg, jax.random.PRNGKey(14), 1, S)
+    span = _span_pages(cfg, S, gen)
+    ecfg = EngineConfig(max_batch=2, max_pages_per_seq=span, spec_draft_len=3)
+    reqs = lambda: [Request(rid=i, prompt=prompts[i], max_new=gen,
+                            arrival=0.0) for i in range(len(prompts))]
+
+    straight = ServingEngine(cfg, params, ecfg)
+    want = {r.rid: r.tokens for r in straight.run(reqs())}
+
+    with tempfile.TemporaryDirectory() as d:
+        eng1 = ServingEngine(cfg, params, ecfg)
+        for req in reqs():
+            eng1.submit(req)
+        for _ in range(6):
+            eng1.step()
+        path = eng1.snapshot(d)
+        assert eng1.proposer.export_state(), "mid-run slots must exist"
+
+        eng2 = ServingEngine(cfg, params, ecfg)
+        eng2.restore(path)
+        assert eng2.proposer.export_state() == eng1.proposer.export_state()
+        results = eng2.run([])
+        assert {r.rid: r.tokens for r in results} == want
+        assert _drained_clean(eng2)
